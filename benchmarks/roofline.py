@@ -1,0 +1,135 @@
+"""§Roofline: three-term roofline report per (arch × shape × mesh) from
+the dry-run artifacts in results/dryrun/.
+
+Terms (seconds, TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI):
+
+    compute    = HLO_FLOPs_per_device / (peak_FLOP/s)
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+``compiled.cost_analysis()`` on an SPMD-partitioned program reports
+*per-device* FLOPs/bytes, so dividing by per-chip peak gives the same
+number as total/(chips × peak).  Collective bytes are summed from the
+compiled HLO (per-device shard shapes through the device's ICI links).
+
+Also reports MODEL_FLOPS/HLO_FLOPs: MODEL_FLOPS = 6·N_active·D for train
+(fwd+bwd) and 2·N_active·D for prefill/decode, D = tokens scored this
+step.  Ratios < 1 indicate remat/attention/redundancy overhead in the
+compiled program (expected: attention FLOPs and remat recompute are real
+work that 6ND ignores).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, for_shape, get_config
+from repro.core.sdmodel import TPU_V5E
+
+from benchmarks.common import save_result, table
+
+CHIPS = {"pod1": 256, "pod2": 512}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = for_shape(get_config(arch), INPUT_SHAPES[shape_name])
+    shape = INPUT_SHAPES[shape_name]
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * cfg.active_params() * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * cfg.active_params() * tokens
+    # decode: one new token per sequence
+    return 2.0 * cfg.active_params() * shape.global_batch
+
+
+def load_records(dryrun_dir="results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def analyse(rec: dict) -> dict:
+    arch, shape = rec["arch"], rec["shape"]
+    pod = "pod2" if rec.get("multi_pod") else "pod1"
+    if rec.get("status") != "ok" or "cost" not in rec:
+        return {"arch": arch, "shape": shape, "mesh": pod,
+                "status": rec.get("status", "missing"),
+                "error": rec.get("error")}
+    chips = CHIPS[pod]
+    flops = rec["cost"]["flops"] or 0.0
+    bytes_acc = rec["cost"]["bytes_accessed"] or 0.0
+    coll = rec["collectives"]["total_bytes"]
+    t_c = flops / TPU_V5E.peak_flops
+    t_m = bytes_acc / TPU_V5E.hbm_bw
+    t_x = coll / TPU_V5E.link_bw
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(arch, shape)
+    useful = mf / (flops * chips) if flops else 0.0
+    return {
+        "arch": arch, "shape": shape, "mesh": pod, "status": "ok",
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf, "hlo_flops_total": flops * chips,
+        "useful_ratio": useful,
+        "peak_GiB": (rec["memory"]["peak_bytes"] or 0) / 2**30,
+        "compile_s": rec.get("compile_seconds"),
+    }
+
+
+def run(dryrun_dir="results/dryrun", opt_dir="results/dryrun_perf"):
+    recs = [analyse(r) for r in load_records(dryrun_dir)]
+    ok = [r for r in recs if r["status"] == "ok"]
+    rows = [{
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute(s)": r["compute_s"], "memory(s)": r["memory_s"],
+        "collective(s)": r["collective_s"], "dominant": r["dominant"],
+        "useful": r["useful_ratio"], "peakGiB": r["peak_GiB"],
+    } for r in ok]
+    txt = table(rows, ["arch", "shape", "mesh", "compute(s)", "memory(s)",
+                       "collective(s)", "dominant", "useful", "peakGiB"],
+                "§Roofline — per (arch × shape × mesh)")
+    failed = [r for r in recs if r["status"] != "ok"]
+    n_pod1 = sum(1 for r in ok if r["mesh"] == "pod1")
+    n_pod2 = sum(1 for r in ok if r["mesh"] == "pod2")
+    summary = {"ok_pod1": n_pod1, "ok_pod2": n_pod2,
+               "failed": [(f["arch"], f["shape"], f["mesh"]) for f in failed]}
+    print(f"coverage: {n_pod1}/40 single-pod, {n_pod2}/40 multi-pod, "
+          f"{len(failed)} failed/missing")
+
+    # baseline vs §Perf-optimized sweep (results/dryrun_perf/*__opt.json)
+    comparison = []
+    opt_recs = []
+    for path in sorted(glob.glob(os.path.join(opt_dir, "*__opt.json"))):
+        with open(path) as f:
+            opt_recs.append(json.load(f))
+    opt = {(r["arch"], r["shape"]): r for r in map(analyse, opt_recs)
+           if r["status"] == "ok" and r["mesh"] == "pod1"}
+    base = {(r["arch"], r["shape"]): r for r in ok if r["mesh"] == "pod1"}
+    crows = []
+    for key in sorted(set(base) & set(opt)):
+        b, o = base[key], opt[key]
+        bd = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        od = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        comparison.append({"arch": key[0], "shape": key[1],
+                           "base_dom_s": bd, "opt_dom_s": od,
+                           "speedup": bd / max(od, 1e-12)})
+        crows.append({"arch": key[0], "shape": key[1],
+                      "dominant(base)": bd, "dominant(opt)": od,
+                      "speedup": bd / max(od, 1e-12)})
+    if crows:
+        table(crows, ["arch", "shape", "dominant(base)", "dominant(opt)",
+                      "speedup"],
+              "§Perf — dominant roofline term, baseline vs optimized")
+    save_result("roofline", {"rows": recs, "summary": summary,
+                             "comparison": comparison, "table": txt})
+    return {"records": recs, "summary": summary, "comparison": comparison}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Run every benchmark (one per paper table/figure) and print a roll-up.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Writes per-benchmark JSON to results/bench/ (consumed by EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("workload_stats", "Fig. 2/4  workload length statistics"),
+    ("phase_split", "Table 1   RL phase time split"),
+    ("cst_acceptance", "Table 2   CST acceptance vs grouped refs"),
+    ("e2e_throughput", "Fig.7/T4  rollout throughput + ablation"),
+    ("group_size", "Fig. 7    group-size ablation (G=8 vs 16)"),
+    ("tail_time", "Fig. 8/9  tail time veRL vs Seer"),
+    ("context_vs_oracle", "Fig. 10   length context vs oracle LFS"),
+    ("sd_strategies", "Fig. 11   SD strategies"),
+    ("partial_rollout", "Fig. 12   Seer vs Partial Rollout"),
+    ("roofline", "§Roofline dry-run roofline report"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="run a single benchmark by name")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI smoke)")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        import benchmarks.common as common
+        common.SCALE = 32
+
+    failures = []
+    for name, desc in BENCHES:
+        if args.only and name != args.only:
+            continue
+        print(f"\n=== {name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001 - report-and-continue CLI
+            failures.append(name)
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    print("\n=== benchmark roll-up ===")
+    for name, desc in BENCHES:
+        if args.only and name != args.only:
+            continue
+        status = "FAIL" if name in failures else "ok"
+        print(f"  {status:4s}  {name:20s} {desc}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

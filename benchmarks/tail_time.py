@@ -1,0 +1,53 @@
+"""Fig. 8/9 (+ Fig. 3 diagnostics): tail time vs total rollout time.
+
+Tail requests = last 10% to complete; tail time = wall time spent solely
+on them (t_end - t_90%).  Paper: the last 10% consume up to ~50% of total
+time on veRL; Seer cuts tail latency by 72-94%.  Also reports the Fig. 3
+imbalance diagnostics for the baseline: preemption count, inter-instance
+finish spread, and mean instance idle fraction.
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_sim, save_result, table, workload
+
+SYSTEMS = [
+    ("veRL", dict(mode="group", policy="fifo")),
+    ("Seer", dict(mode="divided", policy="seer", sd="grouped")),
+]
+
+
+def run(workloads=("moonlight", "qwen2-vl-72b", "kimi-k2"), seed=0):
+    rows, record = [], {}
+    for w in workloads:
+        wl = workload(w, seed=seed)
+        res = {}
+        for label, kw in SYSTEMS:
+            res[label] = run_sim(w, wl, **kw)
+            r = res[label]
+            rows.append({
+                "workload": w, "system": label,
+                "total(s)": r.total_time, "tail(s)": r.tail_time,
+                "tail%": 100 * r.tail_frac, "preempt": r.preemptions,
+                "spread%": 100 * r.instance_finish_spread,
+                "idle%": 100 * r.idle_frac,
+            })
+        red = 1 - res["Seer"].tail_time / max(res["veRL"].tail_time, 1e-9)
+        record[w] = {
+            "verl_tail_frac": res["veRL"].tail_frac,
+            "seer_tail_frac": res["Seer"].tail_frac,
+            "tail_reduction_pct": 100 * red,
+            "paper_range_pct": [72, 94],
+            "verl_preemptions": res["veRL"].preemptions,
+            "seer_preemptions": res["Seer"].preemptions,
+        }
+        rows.append({"workload": w, "system": "reduction",
+                     "tail%": 100 * red})
+    txt = table(rows, ["workload", "system", "total(s)", "tail(s)",
+                       "tail%", "preempt", "spread%", "idle%"],
+                "Fig. 8/9 — tail time (veRL vs Seer)")
+    save_result("tail_time", {"rows": rows, "record": record, "table": txt})
+    return record
+
+
+if __name__ == "__main__":
+    run()

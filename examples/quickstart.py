@@ -1,0 +1,68 @@
+"""Quickstart: one synchronous Seer rollout iteration on a tiny model.
+
+Shows the public API end to end: build a config, init params, create the
+SeerRollout subsystem (divided rollout + context-aware scheduling +
+grouped speculative decoding), roll out a few GRPO groups, and inspect
+the stats the paper reports (tokens, mean acceptance length, migrations,
+pool hits).
+
+    PYTHONPATH=src python examples/quickstart.py [--arch granite-3-8b]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_tiny_config
+from repro.core.request import make_groups
+from repro.core.rollout import SeerRollout
+from repro.models import init_params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = get_tiny_config(args.arch)
+    print(f"arch={cfg.name} ({cfg.arch_type}), tiny variant: "
+          f"{cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size}, "
+          f"{cfg.num_params()/1e6:.1f}M params")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+
+    # the Seer rollout subsystem: 2 instances, global KV pool, DGDS
+    rollout = SeerRollout(cfg, params, n_instances=2, max_slots=4,
+                          cache_len=256, chunk_size=16,
+                          policy="seer", spec_decode=True)
+
+    # GRPO groups: G responses per prompt, one speculative probe each
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(3, 19, size=6).tolist()
+               for _ in range(args.groups)]
+    # greedy sampling: even an untrained model emits repetitive patterns,
+    # so the grouped CST has something to learn (RL models are far more
+    # predictable; see benchmarks/cst_acceptance.py for calibrated rates)
+    groups = make_groups(prompts, args.group_size,
+                         max_new_tokens=args.max_new_tokens,
+                         temperature=0.0, stop_token=None, seed=0)
+
+    res = rollout.run(groups)
+    s = res.stats
+    print(f"\nrollout done: {s.tokens} tokens in {s.steps} engine steps "
+          f"({s.wall_seconds:.1f}s wall)")
+    print(f"speculative decoding: drafted={s.drafted} accepted={s.accepted} "
+          f"(mean acceptance {s.mean_acceptance:.2f})")
+    print(f"divided rollout: chunks={s.chunks} migrations={s.migrations} "
+          f"pool_hits={s.pool_hits} pool_misses={s.pool_misses}")
+    print(f"context manager: {res.ctx_stats}")
+    resp = res.responses()
+    some = list(resp)[:2]
+    for rid in some:
+        print(f"  {rid}: {resp[rid][:16]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Serve a small model with batched grouped requests, with and without
+adaptive grouped speculative decoding — and verify losslessness.
+
+This is the end-to-end driver for the paper's kind (a rollout/serving
+system): a batch of GRPO-style request groups is served through the real
+JAX engine twice, once with plain autoregressive decoding and once with
+Seer's DGDS/CST grouped speculation + MBA draft budgets.  Outputs must be
+token-identical (speculative decoding is lossless); the speculative run
+should take fewer engine steps.
+
+    PYTHONPATH=src python examples/serve_spec_decode.py \
+        [--arch yi-6b] [--groups 4] [--group-size 4] [--tokens 48]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_tiny_config
+from repro.core.request import make_groups
+from repro.core.rollout import SeerRollout
+from repro.models import init_params
+
+
+def serve(cfg, params, groups_fn, *, spec: bool, top_k: int = 1):
+    rollout = SeerRollout(cfg, params, n_instances=2, max_slots=4,
+                          cache_len=512, chunk_size=24, policy="seer",
+                          spec_decode=spec, multipath_top_k=top_k)
+    t0 = time.monotonic()
+    res = rollout.run(groups_fn())
+    wall = time.monotonic() - t0
+    return res, wall
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=48)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_tiny_config(args.arch)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(3, 15, size=8).tolist()
+               for _ in range(args.groups)]
+
+    def groups_fn():
+        return make_groups(prompts, args.group_size,
+                           max_new_tokens=args.tokens,
+                           temperature=args.temperature,
+                           stop_token=None, seed=42)
+
+    plain, t_plain = serve(cfg, params, groups_fn, spec=False)
+    spec, t_spec = serve(cfg, params, groups_fn, spec=True)
+
+    # losslessness: identical sampling seeds => identical outputs, even at
+    # temperature (rejection-sampling verify preserves the distribution)
+    a, b = plain.responses(), spec.responses()
+    mismatches = [rid for rid in a if a[rid] != b[rid]]
+    assert not mismatches, f"speculative decoding changed outputs: " \
+        f"{mismatches[:3]}"
+    print(f"losslessness: OK ({len(a)} responses token-identical at "
+          f"temperature {args.temperature})")
+
+    sp, ss = plain.stats, spec.stats
+    print(f"\nplain decode : {sp.tokens} tokens in {sp.steps} steps "
+          f"({t_plain:.1f}s)")
+    print(f"grouped SD   : {ss.tokens} tokens in {ss.steps} steps "
+          f"({t_spec:.1f}s), mean acceptance "
+          f"{ss.accepted / max(ss.drafted, 1):.2f}")
+    print(f"step reduction: {1 - ss.steps / sp.steps:.1%} "
+          f"(the verify step scores γ+1 tokens per forward)")
+    print(f"DGDS: {spec.dgds_stats}")
+
+    # an untrained model at temperature 1.0 is unpredictable, so the demo
+    # above mostly shows losslessness; greedy decoding shows the speedup
+    # (RL policies are far more predictable — see benchmarks/)
+    def greedy_groups():
+        return make_groups(prompts, args.group_size,
+                           max_new_tokens=args.tokens, temperature=0.0,
+                           stop_token=None, seed=42)
+
+    gp, _ = serve(cfg, params, greedy_groups, spec=False)
+    gs, _ = serve(cfg, params, greedy_groups, spec=True, top_k=2)
+    assert gp.responses() == gs.responses()
+    print(f"\ngreedy demo  : steps {gp.stats.steps} -> {gs.stats.steps} "
+          f"({1 - gs.stats.steps / gp.stats.steps:.0%} fewer), acceptance "
+          f"{gs.stats.accepted / max(gs.stats.drafted, 1):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Production-scale cluster simulation study (mini Fig. 7 / Fig. 10).
+
+Replays a Table-3-style workload through the discrete-event simulator
+under the paper's scheduling regimes and prints the ablation: veRL group
+scheduling -> divided rollout -> +context-aware scheduling -> +grouped
+speculative decoding, plus the oracle-LFS upper bound.
+
+    PYTHONPATH=src python examples/simulate_cluster.py \
+        [--workload moonlight] [--scale 16]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import run_sim, scaled_spec
+from repro.data.workload import make_workload
+
+SYSTEMS = [
+    ("veRL (group-level)", dict(mode="group", policy="fifo")),
+    ("+ divided rollout", dict(mode="divided", policy="nocontext")),
+    ("+ context sched", dict(mode="divided", policy="seer")),
+    ("+ grouped SD (Seer)", dict(mode="divided", policy="seer",
+                                 sd="grouped")),
+    ("oracle LFS", dict(mode="divided", policy="lfs")),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="moonlight",
+                    choices=["moonlight", "qwen2-vl-72b", "kimi-k2"])
+    ap.add_argument("--scale", type=int, default=16,
+                    help="1/scale of the production request count")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    spec = scaled_spec(args.workload, args.scale)
+    wl = make_workload(spec, seed=args.seed)
+    print(f"workload {args.workload} @1/{args.scale}: "
+          f"{spec.n_requests} requests x {spec.group_size}/group over "
+          f"{spec.n_instances} instances "
+          f"(mean len {spec.mean_gen_length}, max {spec.max_gen_length})")
+
+    base = None
+    print(f"\n{'system':22s} {'tok/s':>8s} {'speedup':>8s} {'tail%':>6s} "
+          f"{'preempt':>8s} {'idle%':>6s}")
+    for label, kw in SYSTEMS:
+        r = run_sim(args.workload, wl, **kw)
+        base = base or r.tokens_per_sec
+        print(f"{label:22s} {r.tokens_per_sec:8.0f} "
+              f"{r.tokens_per_sec / base:7.2f}x {100 * r.tail_frac:5.1f}% "
+              f"{r.preemptions:8d} {100 * r.idle_frac:5.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end synchronous GRPO training with Seer rollout.
+
+Trains a small model on the ``copy`` task (learnable by induction heads)
+for a number of iterations, printing reward, loss and the phase-time
+split (rollout / train / weight-update) each iteration — the full
+pipeline of paper §2 with Seer's rollout substituted in, strictly
+on-policy.
+
+By default a tiny (~1M) model so it runs in seconds on CPU; ``--hundredm``
+builds a ~100M-param dense model (several minutes per iteration on CPU —
+sized for a real accelerator).
+
+    PYTHONPATH=src python examples/train_grpo_seer.py --iterations 12
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_tiny_config
+from repro.configs.base import ModelConfig
+from repro.data.tasks import make_task
+from repro.training import OptConfig, RLConfig, RLTrainer
+
+
+def hundredm_config() -> ModelConfig:
+    """~100M-param dense LLaMA-style model (the paper's smallest regime)."""
+    return ModelConfig(
+        name="dense-100m", arch_type="dense", source="examples",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+        d_ff=2048, vocab_size=4096, max_gen_length=1024)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--hundredm", action="store_true")
+    ap.add_argument("--iterations", type=int, default=16)
+    ap.add_argument("--groups", type=int, default=8)
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--task", default="copy",
+                    choices=["copy", "sort", "succ"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.hundredm:
+        cfg = hundredm_config()
+    else:
+        cfg = dataclasses.replace(get_tiny_config(args.arch), vocab_size=32)
+    print(f"model: {cfg.name} {cfg.num_params()/1e6:.1f}M params")
+
+    task = make_task(args.task, cfg.vocab_size, prompt_len=4,
+                     response_len=args.max_new_tokens,
+                     content_vocab=min(8, cfg.vocab_size - 3))
+    rl = RLConfig(
+        n_groups=args.groups, group_size=args.group_size,
+        max_new_tokens=args.max_new_tokens, iterations=args.iterations,
+        train_steps_per_iter=4, n_instances=2,
+        max_slots=2 * args.group_size, cache_len=128,
+        chunk_size=max(args.max_new_tokens // 2, 8),
+        policy="seer", spec_decode=True, seed=args.seed)
+    trainer = RLTrainer(cfg, task, rl,
+                        ocfg=OptConfig(lr=5e-3, total_steps=
+                                       4 * args.iterations))
+    hist = trainer.run()
+
+    k = max(1, min(3, len(hist) // 4))
+    first = sum(h.mean_reward for h in hist[:k]) / k
+    last = sum(h.mean_reward for h in hist[-k:]) / k
+    print(f"\nreward (smoothed): {first:.3f} -> {last:.3f} "
+          f"over {len(hist)} iterations")
+    roll = sum(h.rollout_seconds for h in hist)
+    train = sum(h.train_seconds for h in hist)
+    upd = sum(h.weight_update_seconds for h in hist)
+    tot = roll + train + upd
+    print(f"phase split (Table 1 analogue): rollout {roll/tot:.0%} "
+          f"train {train/tot:.0%} update {upd/tot:.0%}")
+    if args.iterations >= 12:
+        assert last > first, "GRPO should improve reward on the copy task"
+
+
+if __name__ == "__main__":
+    main()

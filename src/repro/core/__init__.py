@@ -1,0 +1,21 @@
+"""Seer core: divided rollout, context-aware scheduling, grouped SD."""
+from repro.core.context import ContextManager, GroupContext
+from repro.core.cst import DraftPath, GroupCST, SuffixTree
+from repro.core.dgds import DraftClient, DraftServer, SpeculationArgs
+from repro.core.kvpool import GlobalKVPool, PoolCosts
+from repro.core.mba import MBAConfig, mba_speculation
+from repro.core.request import (Group, ReqState, RolloutRequest,
+                                make_groups)
+from repro.core.rollout import RolloutResult, RolloutStats, SeerRollout
+from repro.core.scheduler import InstanceView, Scheduler
+from repro.core.sdmodel import (H800, TPU_V5E, ForwardCostModel,
+                                HardwareSpec, SDThroughputModel)
+
+__all__ = [
+    "ContextManager", "GroupContext", "DraftPath", "GroupCST", "SuffixTree",
+    "DraftClient", "DraftServer", "SpeculationArgs", "GlobalKVPool",
+    "PoolCosts", "MBAConfig", "mba_speculation", "Group", "ReqState",
+    "RolloutRequest", "make_groups", "RolloutResult", "RolloutStats",
+    "SeerRollout", "InstanceView", "Scheduler", "H800", "TPU_V5E",
+    "ForwardCostModel", "HardwareSpec", "SDThroughputModel",
+]

@@ -1,0 +1,118 @@
+"""Global KV cache pool — the Mooncake-style substrate for divided rollout.
+
+The paper stores the KV cache of *every* active request in a global,
+hierarchical pool (DRAM + SSD, RDMA transfers) so a chunk can resume on any
+instance without re-prefill (§3.2).  On a TPU pod the analogue is
+host-DRAM offload + ICI/PCIe block transfer (DESIGN.md §2); in the
+real-engine tier all instances live in one process so "transfer" is a
+device_put — but the pool still enforces capacity, tracks tier placement,
+and accounts transfer time with the modeled bandwidths so the simulator and
+the engine share one cost model.
+
+Eviction is LRU to SSD; SSD is assumed large enough for the iteration
+(paper: 4 TB NVMe per node).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.engine.engine import KVBlob
+
+
+@dataclass(frozen=True)
+class PoolCosts:
+    """Transfer bandwidths (bytes/s) for the modeled hierarchy."""
+    dram_bw: float = 25e9        # device<->host (PCIe-ish / DMA)
+    ssd_bw: float = 5e9          # host<->NVMe
+    net_bw: float = 40e9         # cross-node (RDMA / ICI)
+
+    def fetch_seconds(self, nbytes: int, tier: str, cross_node: bool) -> float:
+        t = nbytes / self.dram_bw
+        if tier == "ssd":
+            t += nbytes / self.ssd_bw
+        if cross_node:
+            t += nbytes / self.net_bw
+        return t
+
+
+@dataclass
+class PoolEntry:
+    blob: KVBlob
+    tier: str                    # "dram" | "ssd"
+    home_node: str               # node that wrote it
+    nbytes: int
+
+
+class GlobalKVPool:
+    """Capacity-tracked two-tier blob store keyed by req_id."""
+
+    def __init__(self, dram_capacity: int = 64 << 30,
+                 costs: PoolCosts = PoolCosts()):
+        self.dram_capacity = dram_capacity
+        self.costs = costs
+        self._entries: "collections.OrderedDict[str, PoolEntry]" = \
+            collections.OrderedDict()
+        self.dram_used = 0
+        # stats
+        self.puts = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_moved = 0
+        self.transfer_seconds = 0.0
+
+    def put(self, blob: KVBlob, node: str = "n0") -> None:
+        old = self._entries.pop(blob.req_id, None)
+        if old and old.tier == "dram":
+            self.dram_used -= old.nbytes
+        entry = PoolEntry(blob, "dram", node, blob.nbytes)
+        self._entries[blob.req_id] = entry
+        self.dram_used += blob.nbytes
+        self.puts += 1
+        self._evict_to_ssd()
+
+    def _evict_to_ssd(self) -> None:
+        while self.dram_used > self.dram_capacity:
+            # LRU: oldest entry still in DRAM
+            victim = next((e for e in self._entries.values()
+                           if e.tier == "dram"), None)
+            if victim is None:
+                break
+            victim.tier = "ssd"
+            self.dram_used -= victim.nbytes
+            self.evictions += 1
+
+    def get(self, req_id: str, node: str = "n0") -> Optional[KVBlob]:
+        entry = self._entries.get(req_id)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        cross = entry.home_node != node
+        self.transfer_seconds += self.costs.fetch_seconds(
+            entry.nbytes, entry.tier, cross)
+        self.bytes_moved += entry.nbytes
+        # promote back to DRAM on the fetching node
+        if entry.tier == "ssd":
+            entry.tier = "dram"
+            self.dram_used += entry.nbytes
+            self._evict_to_ssd()
+        entry.home_node = node
+        self._entries.move_to_end(req_id)
+        return entry.blob
+
+    def drop(self, req_id: str) -> None:
+        entry = self._entries.pop(req_id, None)
+        if entry and entry.tier == "dram":
+            self.dram_used -= entry.nbytes
+
+    def stats(self) -> dict:
+        return {
+            "puts": self.puts, "hits": self.hits, "misses": self.misses,
+            "evictions": self.evictions,
+            "dram_used_gb": self.dram_used / (1 << 30),
+            "bytes_moved_gb": self.bytes_moved / (1 << 30),
+            "transfer_seconds": self.transfer_seconds,
+        }

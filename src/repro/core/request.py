@@ -1,0 +1,116 @@
+"""Request / group / chunk abstractions for divided rollout.
+
+The paper's schedulable unit is a *generation chunk*: a bounded number of
+decode tokens of one request (§3.2).  A :class:`RolloutRequest` is the
+persistent object that survives across chunks (and across instances, since
+divided rollout may migrate it); it carries everything the engine needs to
+resume — prompt, generated tokens, sampling seed — so resumption is
+deterministic no matter where the next chunk runs.
+
+Groups mirror GRPO: ``G`` requests share one prompt (one ``group_id``).
+Exactly one request per group is flagged ``speculative`` — the paper's
+online length probe (§3.3).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class ReqState(enum.Enum):
+    PENDING = "pending"        # never scheduled
+    READY = "ready"            # in the request buffer, waiting for a chunk
+    RUNNING = "running"        # a chunk is executing on an instance
+    FINISHED = "finished"
+
+
+@dataclass
+class RolloutRequest:
+    req_id: str
+    group_id: str
+    prompt: List[int]
+    seed: int
+    max_new_tokens: int
+    temperature: float = 1.0
+    stop_token: Optional[int] = None
+    speculative: bool = False       # the group's high-priority probe
+
+    # mutable rollout state
+    state: ReqState = ReqState.PENDING
+    # the simulator tracks lengths only; when set, gen_count overrides
+    # len(generated) so production-scale sims never materialise tokens
+    gen_count: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    logprobs: List[float] = field(default_factory=list)
+    next_pos: int = 0               # engine resume position
+    last_token: int = -1
+    instance_id: Optional[str] = None   # where the current chunk runs
+    chunks_run: int = 0
+    migrations: int = 0
+    preemptions: int = 0
+    # timestamps (wall or simulated)
+    t_submitted: float = 0.0
+    t_first_scheduled: Optional[float] = None
+    t_finished: Optional[float] = None
+
+    @property
+    def gen_len(self) -> int:
+        return self.gen_count if self.gen_count is not None \
+            else len(self.generated)
+
+    @property
+    def remaining_tokens(self) -> int:
+        return max(0, self.max_new_tokens - self.gen_len)
+
+    @property
+    def finished(self) -> bool:
+        return self.state == ReqState.FINISHED
+
+    def finish(self, now: float) -> None:
+        self.state = ReqState.FINISHED
+        self.t_finished = now
+
+
+@dataclass
+class Group:
+    group_id: str
+    requests: List[RolloutRequest]
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def speculative_request(self) -> Optional[RolloutRequest]:
+        for r in self.requests:
+            if r.speculative:
+                return r
+        return None
+
+    def finished_lengths(self) -> List[int]:
+        return [r.gen_len for r in self.requests if r.finished]
+
+    @property
+    def all_finished(self) -> bool:
+        return all(r.finished for r in self.requests)
+
+
+def make_groups(prompts: List[List[int]], group_size: int, *,
+                max_new_tokens: int, temperature: float = 1.0,
+                stop_token: Optional[int] = None, seed: int = 0,
+                prefix: str = "g") -> List[Group]:
+    """Expand prompts into GRPO groups; request 0 of each is speculative."""
+    groups = []
+    for gi, prompt in enumerate(prompts):
+        gid = f"{prefix}{gi}"
+        reqs = [
+            RolloutRequest(
+                req_id=f"{gid}.r{ri}", group_id=gid, prompt=list(prompt),
+                seed=seed * 1_000_003 + gi * 1009 + ri,
+                max_new_tokens=max_new_tokens, temperature=temperature,
+                stop_token=stop_token, speculative=(ri == 0))
+            for ri in range(group_size)
+        ]
+        groups.append(Group(gid, reqs))
+    return groups

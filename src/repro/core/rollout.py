@@ -1,0 +1,296 @@
+"""Divided rollout runtime — the real-engine tier of Seer.
+
+Drives a pool of :class:`~repro.engine.engine.Instance`s through one
+synchronous rollout iteration:
+
+1. whenever an instance has a free slot, ask the :class:`Scheduler`
+   (Alg. 2) for the next request + placement; admit it with a KV blob
+   fetched from the :class:`GlobalKVPool` (divided rollout's stateless
+   migration — a pool hit skips re-prefill);
+2. every engine tick, compute MBA draft budgets (γ_h, γ_l) from current
+   high/low-priority batch sizes and online β estimates, pull drafts for
+   each active request from the instance's DGDS client, and run the
+   fused decode/verify step;
+3. stream new tokens to the DGDS master (``update_cst``), update
+   acceptance statistics, and when a request's *chunk* budget is exhausted
+   release its slot, export the KV blob to the pool and requeue it.
+
+The loop is synchronous and deterministic (Python-level), which is what
+lets the losslessness tests assert token-exact equality with plain
+autoregressive decoding.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.context import ContextManager
+from repro.core.dgds import DraftClient, DraftServer, SpeculationArgs
+from repro.core.kvpool import GlobalKVPool
+from repro.core.mba import MBAConfig, mba_speculation
+from repro.core.request import Group, ReqState, RolloutRequest
+from repro.core.scheduler import InstanceView, Scheduler
+from repro.core.sdmodel import ForwardCostModel, SDThroughputModel, TPU_V5E
+from repro.engine.engine import EngineSeq, Instance, StepFunctions
+
+
+@dataclass
+class RolloutStats:
+    steps: int = 0
+    tokens: int = 0
+    drafted: int = 0
+    accepted: int = 0
+    chunks: int = 0
+    migrations: int = 0
+    pool_hits: int = 0
+    pool_misses: int = 0
+    wall_seconds: float = 0.0
+
+    @property
+    def mean_acceptance(self) -> float:
+        return self.accepted / max(self.drafted, 1)
+
+
+@dataclass
+class RolloutResult:
+    groups: List[Group]
+    stats: RolloutStats
+    ctx_stats: dict
+    pool_stats: dict
+    dgds_stats: dict
+
+    def responses(self) -> Dict[str, List[int]]:
+        return {r.req_id: list(r.generated)
+                for g in self.groups for r in g.requests}
+
+
+class SeerRollout:
+    """One model's rollout subsystem: instances + pool + DGDS + scheduler."""
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 n_instances: int = 2, max_slots: int = 4,
+                 cache_len: int = 1024, chunk_size: int = 128,
+                 prefill_chunk: int = 64,
+                 policy: str = "seer", spec_decode: bool = True,
+                 multipath_top_k: int = 1,
+                 gamma_max: int = 8, lam: float = 2.0,
+                 fetch_interval: int = 1, cst_depth: int = 12,
+                 pool_dram_gb: float = 4.0, base_seed: int = 0,
+                 oracle_lengths: Optional[Dict[str, int]] = None):
+        self.cfg = cfg
+        self.chunk_size = chunk_size
+        self.policy = policy
+        self.spec_decode = spec_decode
+        self.multipath_top_k = multipath_top_k
+        self.mba_cfg = MBAConfig(gamma_max=min(gamma_max, 8), lam=lam)
+        self.oracle_lengths = oracle_lengths
+        steps = StepFunctions(cfg)
+        self.instances = [
+            Instance(cfg, params, steps, max_slots=max_slots,
+                     cache_len=cache_len, prefill_chunk=prefill_chunk,
+                     gamma_max=gamma_max, instance_id=f"inst{i}",
+                     base_seed=base_seed)
+            for i in range(n_instances)
+        ]
+        self.pool = GlobalKVPool(dram_capacity=int(pool_dram_gb * (1 << 30)))
+        self.server = DraftServer(max_depth=cst_depth)
+        self.clients = {
+            inst.instance_id: DraftClient(self.server,
+                                          fetch_interval=fetch_interval)
+            for inst in self.instances
+        }
+        self.ctx = ContextManager(max_gen_length=cache_len)
+        fwd = ForwardCostModel(cfg, TPU_V5E)
+        self.sd_model = SDThroughputModel(fwd)
+        # req_id -> (instance, slot, chunk_tokens_left)
+        self._placements: Dict[str, tuple] = {}
+        self._reqs: Dict[str, RolloutRequest] = {}
+
+    # -- scheduling glue ---------------------------------------------------------
+
+    def _views(self) -> List[InstanceView]:
+        return [
+            InstanceView(
+                instance_id=inst.instance_id,
+                free_slots=inst.free_slots(),
+                kv_free_tokens=inst.kv_capacity_tokens()
+                - inst.kv_used_tokens(),
+                active_requests=len(inst.active_slots()))
+            for inst in self.instances
+        ]
+
+    def _inst(self, instance_id: str) -> Instance:
+        return next(i for i in self.instances
+                    if i.instance_id == instance_id)
+
+    def _admit(self, sched: Scheduler, r: RolloutRequest,
+               instance_id: str, stats: RolloutStats) -> None:
+        inst = self._inst(instance_id)
+        seq = EngineSeq(
+            req_id=r.req_id, group_id=r.group_id, prompt=list(r.prompt),
+            seed=r.seed, temperature=r.temperature,
+            max_new_tokens=r.max_new_tokens, stop_token=r.stop_token)
+        seq.generated = list(r.generated)
+        seq.logprobs = list(r.logprobs)
+        seq.last_token = r.last_token
+        seq.next_pos = r.next_pos
+        blob = None
+        if r.next_pos > 0:
+            blob = self.pool.get(r.req_id, node=instance_id)
+            if blob is not None:
+                stats.pool_hits += 1
+            else:
+                stats.pool_misses += 1
+        slot = inst.admit(seq, blob)
+        if r.instance_id is not None and r.instance_id != instance_id:
+            r.migrations += 1
+            stats.migrations += 1
+        r.instance_id = instance_id
+        r.state = ReqState.RUNNING
+        if r.t_first_scheduled is None:
+            r.t_first_scheduled = time.monotonic()
+        chunk = sched.chunk_tokens(r)
+        self._placements[r.req_id] = (inst, slot, seq, chunk)
+        self.clients[instance_id].register_group(r.group_id)
+
+    def _release(self, r: RolloutRequest, stats: RolloutStats,
+                 export: bool) -> None:
+        inst, slot, seq, _ = self._placements.pop(r.req_id)
+        # sync engine state back to the rollout request
+        r.generated = list(seq.generated)
+        r.logprobs = list(seq.logprobs)
+        r.last_token = seq.last_token
+        r.next_pos = seq.next_pos
+        blob = inst.release(slot, export=export)
+        if export and blob is not None:
+            self.pool.put(blob, node=inst.instance_id)
+        stats.chunks += 1
+        r.chunks_run += 1
+
+    # -- drafts --------------------------------------------------------------------
+
+    def _collect_drafts(self, inst: Instance) -> Dict[int, List[int]]:
+        if not self.spec_decode:
+            return {}
+        active = inst.active_slots()
+        if not active:
+            return {}
+        b_h = sum(1 for i in active
+                  if self._reqs[inst.slots[i].req_id].speculative)
+        b_l = len(active) - b_h
+        mean_ctx = inst.kv_used_tokens() / max(len(active), 1)
+        gamma_h, gamma_l = mba_speculation(
+            b_h, b_l, self.ctx.beta_padded(self.mba_cfg.gamma_max + 1),
+            self.sd_model, self.ctx.alpha, mean_ctx, self.mba_cfg)
+        if gamma_h == 0 and gamma_l == 0:
+            return {}
+        gids, pats, args, order = [], [], [], []
+        for i in active:
+            seq = inst.slots[i]
+            r = self._reqs[seq.req_id]
+            g = gamma_h if r.speculative else gamma_l
+            if g <= 0:
+                continue
+            gids.append(r.group_id)
+            # context = everything up to and including the pending token
+            pats.append((seq.prompt + seq.generated)[-16:])
+            args.append(SpeculationArgs(max_spec_tokens=g,
+                                        top_k=self.multipath_top_k))
+            order.append(i)
+        if not gids:
+            return {}
+        paths = self.clients[inst.instance_id].batch_speculate(
+            gids, pats, args)
+        drafts = {}
+        for i, ps in zip(order, paths):
+            best = max(ps, key=lambda p: p.score)
+            if best.tokens:
+                drafts[i] = best.tokens
+        return drafts
+
+    # -- the main loop ---------------------------------------------------------------
+
+    def run(self, groups: Sequence[Group],
+            progress_every: int = 0) -> RolloutResult:
+        t0 = time.monotonic()
+        stats = RolloutStats()
+        sched = Scheduler(list(groups), self.ctx, policy=self.policy,
+                          chunk_size=self.chunk_size,
+                          oracle_lengths=self.oracle_lengths)
+        self._reqs = {r.req_id: r for g in groups for r in g.requests}
+        for r in self._reqs.values():
+            r.t_submitted = t0
+
+        while not sched.all_finished:
+            # 1) fill free capacity
+            placed = True
+            while placed:
+                placed = False
+                views = [v for v in self._views() if v.free_slots > 0]
+                if not views:
+                    break
+                r = sched.pick_request()
+                if r is None:
+                    break
+                iid = sched.select_instance(views, r)
+                if iid is None:
+                    sched.requeue(r)   # no instance can host it this cycle
+                    break
+                self._admit(sched, r, iid, stats)
+                placed = True
+
+            # 2) step every instance
+            any_active = False
+            for inst in self.instances:
+                active = inst.active_slots()
+                if not active:
+                    continue
+                any_active = True
+                drafts = self._collect_drafts(inst)
+                out = inst.run_step(drafts)
+                stats.steps += 1
+                for slot, (new_toks, _lps, n_acc) in out.items():
+                    seq = inst.slots[slot]
+                    r = self._reqs[seq.req_id]
+                    n_draft = len(drafts.get(slot, []))
+                    stats.tokens += len(new_toks)
+                    stats.drafted += n_draft
+                    stats.accepted += n_acc
+                    if n_draft:
+                        self.ctx.record_verification(n_draft, n_acc)
+                    if new_toks:
+                        self.server.update_cst(
+                            r.group_id, hash(r.req_id) & 0x7FFFFFFF,
+                            len(seq.generated) - len(new_toks), new_toks)
+                # 3) chunk / finish bookkeeping
+                for slot in list(inst.active_slots()):
+                    seq = inst.slots[slot]
+                    r = self._reqs[seq.req_id]
+                    _, _, _, chunk = self._placements[r.req_id]
+                    consumed = len(seq.generated) - len(r.generated)
+                    if seq.finished:
+                        self._release(r, stats, export=False)
+                        self.pool.drop(r.req_id)
+                        r.finish(time.monotonic())
+                        sched.on_finished(r)
+                    elif consumed >= chunk:
+                        self._release(r, stats, export=True)
+                        sched.requeue(r)
+
+            if not any_active and not sched.all_finished:
+                # nothing running and nothing placeable -> capacity deadlock
+                raise RuntimeError(
+                    "rollout stalled: no instance can hold the next chunk")
+            if progress_every and stats.steps % progress_every == 0:
+                done = len(self._reqs) - sched.pending_count()
+                print(f"[rollout] steps={stats.steps} done={done}/"
+                      f"{len(self._reqs)} tokens={stats.tokens} "
+                      f"acc={stats.mean_acceptance:.2f}")
+
+        stats.wall_seconds = time.monotonic() - t0
+        return RolloutResult(
+            groups=list(groups), stats=stats,
+            ctx_stats=self.ctx.stats(), pool_stats=self.pool.stats(),
+            dgds_stats=self.server.stats())

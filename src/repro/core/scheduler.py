@@ -1,0 +1,228 @@
+"""Context-aware scheduling on top of divided rollout (paper Alg. 2).
+
+The scheduler is invoked whenever an instance has head-room; it returns a
+``(request, instance)`` decision.  Policies:
+
+* ``seer``      — Alg. 2: speculative requests first (SFS by generated
+                  length), then approximate LFS on L̂_g, with a starvation
+                  safeguard that occasionally serves the most underserved
+                  group (§3.3).
+* ``fifo``      — submission order (veRL-style round-robin baseline).
+* ``sfs``/``lfs`` — shortest/longest-first on *true* lengths (oracle
+                  variants; ``lfs`` is the paper's Oracle in Fig. 10).
+* ``nocontext`` — divided rollout without length context (Fig. 10's
+                  No-Context): FIFO pick, load-balanced placement.
+
+Instance choice (SELECTINSTANCE) is KV-usage aware: the least-loaded
+instance that can hold the chunk's worst-case footprint.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.context import ContextManager
+from repro.core.request import Group, ReqState, RolloutRequest
+
+
+@dataclass
+class InstanceView:
+    """What the global scheduler sees of one inference instance."""
+    instance_id: str
+    free_slots: int
+    kv_free_tokens: int            # KV head-room in tokens
+    active_requests: int = 0
+
+
+class Scheduler:
+    """Ready requests are tracked incrementally (token-validated lazy
+    heaps / per-group buckets) so each pick is O(log N) for the static-key
+    policies and O(#groups) for seer's dynamic-L̂ scan — the naive rebuild
+    + full scan per pick was the simulator's bottleneck at production
+    request counts.  Callers must hand a request back via :meth:`requeue`
+    when its chunk ends (rather than flipping ``state`` directly)."""
+
+    def __init__(self, groups: Sequence[Group], ctx: ContextManager, *,
+                 policy: str = "seer", chunk_size: int = 512,
+                 starvation_every: int = 16,
+                 oracle_lengths: Optional[Dict[str, int]] = None):
+        self.policy = policy
+        self.chunk_size = chunk_size
+        self.ctx = ctx
+        self.groups = {g.group_id: g for g in groups}
+        self._starvation_every = starvation_every
+        self._decisions = 0
+        self._oracle = oracle_lengths or {}
+        self._submit_order: Dict[str, int] = {}
+        # incremental ready-tracking (token-validated entries)
+        self._token: Dict[str, int] = {}
+        self._heap: List[tuple] = []                # fifo / sfs / lfs
+        self._spec_ready: Dict[str, RolloutRequest] = {}   # seer probes
+        self._buckets: Dict[str, List[tuple]] = {}  # gid -> (submit, tok, r)
+        n = 0
+        for g in groups:
+            ctx.register_group(g)
+            for r in g.requests:
+                self._submit_order[r.req_id] = n
+                n += 1
+                self._insert(r)
+
+    # -- candidate pools -------------------------------------------------------
+
+    def _ready(self) -> List[RolloutRequest]:
+        out = []
+        for g in self.groups.values():
+            for r in g.requests:
+                if r.state in (ReqState.PENDING, ReqState.READY):
+                    out.append(r)
+        return out
+
+    def _insert(self, r: RolloutRequest) -> None:
+        tok = self._token.get(r.req_id, 0) + 1
+        self._token[r.req_id] = tok
+        p = self.policy
+        so = self._submit_order[r.req_id]
+        if p == "seer":
+            if r.speculative:
+                self._spec_ready[r.req_id] = r
+            else:
+                heapq.heappush(
+                    self._buckets.setdefault(r.group_id, []), (so, tok, r))
+        elif p in ("fifo", "nocontext"):
+            heapq.heappush(self._heap, (so, tok, r))
+        elif p == "sfs":
+            heapq.heappush(self._heap, (self._true_len(r), so, tok, r))
+        elif p == "lfs":
+            heapq.heappush(self._heap, (-self._true_len(r), so, tok, r))
+        else:
+            raise ValueError(p)
+
+    def requeue(self, r: RolloutRequest) -> None:
+        """Hand a request back to the buffer (chunk ended / not placed)."""
+        r.state = ReqState.READY
+        self._insert(r)
+
+    def _valid(self, r: RolloutRequest, tok: int) -> bool:
+        return self._token.get(r.req_id) == tok and not r.finished \
+            and r.state in (ReqState.PENDING, ReqState.READY)
+
+    def _take(self, r: RolloutRequest) -> RolloutRequest:
+        # invalidate any other live entries for this request
+        self._token[r.req_id] = self._token.get(r.req_id, 0) + 1
+        self._spec_ready.pop(r.req_id, None)
+        return r
+
+    def _clean_bucket(self, gid: str) -> Optional[tuple]:
+        """Drop stale head entries; return the valid head or None."""
+        b = self._buckets.get(gid)
+        while b:
+            so, tok, r = b[0]
+            if self._valid(r, tok):
+                return b[0]
+            heapq.heappop(b)
+        if b is not None and not b:
+            self._buckets.pop(gid, None)
+        return None
+
+    # -- Alg. 2 ------------------------------------------------------------------
+
+    def pick_request(self) -> Optional[RolloutRequest]:
+        # count only decisions that yield a request (starvation cadence)
+        self._decisions += 1
+        r = self._pick()
+        if r is None:
+            self._decisions -= 1
+        return r
+
+    def _pick(self) -> Optional[RolloutRequest]:
+        if self.policy == "seer":
+            return self._pick_seer()
+        while self._heap:
+            entry = heapq.heappop(self._heap)
+            r, tok = entry[-1], entry[-2]
+            if self._valid(r, tok):
+                return self._take(r)
+        return None
+
+    def _true_len(self, r: RolloutRequest) -> int:
+        return self._oracle.get(r.req_id, r.max_new_tokens)
+
+    def _spec_candidates(self) -> List[RolloutRequest]:
+        stale = [rid for rid, r in self._spec_ready.items()
+                 if r.finished or r.state not in (ReqState.PENDING,
+                                                  ReqState.READY)]
+        for rid in stale:
+            del self._spec_ready[rid]
+        return list(self._spec_ready.values())
+
+    def _pick_seer(self) -> Optional[RolloutRequest]:
+        spec = self._spec_candidates()
+        # starvation safeguard: periodically serve the least-served group
+        if self._starvation_every and \
+                self._decisions % self._starvation_every == 0:
+            cands: List[RolloutRequest] = list(spec)
+            for gid in list(self._buckets):
+                head = self._clean_bucket(gid)
+                if head is not None:
+                    cands.append(head[-1])
+            if cands:
+                starved = min(
+                    cands,
+                    key=lambda r: (self.ctx.group_progress(r.group_id),
+                                   self._submit_order[r.req_id]))
+                return self._take(starved)
+            return None
+        # 1) high-priority queue: speculative requests, shortest-first on
+        #    the length generated so far (PICKSFS)
+        if spec:
+            best = min(spec, key=lambda r: (r.gen_len,
+                                            self._submit_order[r.req_id]))
+            return self._take(best)
+        # 2) the rest: approximate longest-first on L̂_g (PICKLFS).
+        #    Unknown groups have L̂_g = max_gen_length => scheduled first.
+        #    O(#groups): within a group every request shares L̂_g, so only
+        #    bucket heads compete (tie-break: smallest submit order).
+        best_key, best_head = None, None
+        for gid in list(self._buckets):
+            head = self._clean_bucket(gid)
+            if head is None:
+                continue
+            key = (self.ctx.estimate(gid), -head[0])
+            if best_key is None or key > best_key:
+                best_key, best_head = key, head
+        if best_head is not None:
+            return self._take(best_head[-1])
+        return None
+
+    # -- chunk sizing + instance choice (Alg. 2 lines 16-17) --------------------
+
+    def chunk_tokens(self, r: RolloutRequest) -> int:
+        return min(self.chunk_size, r.remaining_tokens)
+
+    def select_instance(self, instances: Sequence[InstanceView],
+                        r: RolloutRequest) -> Optional[str]:
+        """Least-loaded instance with room for the chunk's footprint."""
+        need = len(r.prompt) + r.gen_len + self.chunk_tokens(r)
+        best, best_free = None, -1
+        for iv in instances:
+            if iv.free_slots <= 0:
+                continue
+            if iv.kv_free_tokens < need:
+                continue
+            if iv.kv_free_tokens > best_free:
+                best, best_free = iv.instance_id, iv.kv_free_tokens
+        return best
+
+    # -- lifecycle callbacks -----------------------------------------------------
+
+    def on_finished(self, r: RolloutRequest) -> None:
+        self.ctx.update_estimate(r.group_id, r.gen_len)
+
+    @property
+    def all_finished(self) -> bool:
+        return all(g.all_finished for g in self.groups.values())
+
+    def pending_count(self) -> int:
+        return sum(1 for g in self.groups.values()
+                   for r in g.requests if not r.finished)

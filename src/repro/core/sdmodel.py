@@ -1,0 +1,131 @@
+"""Speculative-decoding throughput model (paper §3.4.1).
+
+    T_SD(B, γ) = (1 - α) · (D(B, γ) + T(B, γ)) / (1 - α^{γ+1})
+
+is the expected time to generate one token per request, where D is the
+draft cost, T the target-model forward over γ+1 tokens/request at batch B,
+and α the mean acceptance rate.  SD wins when T_SD < T(B, 1).
+
+``ForwardCostModel`` is the "offline-profiled" T(B, γ) of the paper: a
+roofline-style analytic model with a compute term (FLOPs/peak, grows with
+B·(γ+1)) and a memory term (weight+KV bytes/bw, nearly flat in γ) — the
+max of the two plus a fixed launch overhead.  The same model (with H800 or
+TPU v5e constants) drives both the MBA policy and the cluster simulator,
+so scheduling decisions and simulated timings are consistent.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float            # per chip, bf16
+    hbm_bw: float                # bytes/s per chip
+    link_bw: float               # bytes/s per ICI/NVLink link
+    launch_overhead: float = 3e-4  # fixed per-forward overhead (s)
+
+
+H800 = HardwareSpec("h800", peak_flops=989e12 / 2, hbm_bw=3.35e12,
+                    link_bw=200e9)
+TPU_V5E = HardwareSpec("tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                       link_bw=50e9)
+
+
+@dataclass(frozen=True)
+class ForwardCostModel:
+    """Analytic T(B, T_tokens) for one decode/verify forward of a model
+    sharded over ``chips`` chips (TP/EP within an instance)."""
+    cfg: ModelConfig
+    hw: HardwareSpec
+    chips: int = 1
+    mfu: float = 0.5             # achievable fraction of peak compute
+    mbu: float = 0.7             # achievable fraction of HBM bandwidth
+
+    # -- component byte/flop counts ---------------------------------------------
+
+    def param_bytes(self) -> int:
+        return self.cfg.num_params() * 2      # bf16 weights
+
+    def active_param_bytes(self) -> int:
+        return self.cfg.active_params() * 2
+
+    def kv_bytes_per_token(self) -> int:
+        cfg = self.cfg
+        if cfg.arch_type == "ssm":
+            return 0
+        n_attn = cfg.num_layers
+        if cfg.arch_type == "hybrid":
+            n_attn = cfg.num_layers // max(cfg.hybrid_attn_every, 1)
+        return 2 * n_attn * cfg.num_kv_heads * cfg.head_dim * 2  # k+v, bf16
+
+    def flops_per_token(self) -> float:
+        return 2.0 * self.cfg.active_params()
+
+    # -- forward time --------------------------------------------------------------
+
+    def forward_time(self, batch: int, tokens_per_req: int,
+                     mean_ctx: float) -> float:
+        """One forward scoring ``batch * tokens_per_req`` tokens with mean
+        KV context length ``mean_ctx``."""
+        n_tok = batch * tokens_per_req
+        # compute term: linear in scored tokens + attention term
+        flops = n_tok * self.flops_per_token()
+        flops += 2.0 * n_tok * mean_ctx * (
+            self.cfg.num_heads * self.cfg.head_dim * 2 if
+            self.cfg.arch_type != "ssm" else self.cfg.d_inner)
+        t_compute = flops / (self.chips * self.hw.peak_flops * self.mfu)
+        # memory term: weights stream once per forward; KV streams per req
+        mem = self.active_param_bytes()
+        mem += batch * mean_ctx * self.kv_bytes_per_token()
+        t_mem = mem / (self.chips * self.hw.hbm_bw * self.mbu)
+        return max(t_compute, t_mem) + self.hw.launch_overhead
+
+    def decode_time(self, batch: int, mean_ctx: float) -> float:
+        return self.forward_time(batch, 1, mean_ctx)
+
+    def verify_time(self, batch: int, gamma: int, mean_ctx: float) -> float:
+        return self.forward_time(batch, gamma + 1, mean_ctx)
+
+    def prefill_time(self, n_tokens: int, mean_ctx: float = 0.0) -> float:
+        return self.forward_time(1, n_tokens, mean_ctx or n_tokens / 2)
+
+
+@dataclass(frozen=True)
+class SDThroughputModel:
+    """T_SD and the optimal draft length γ*(B) (paper §3.4.1)."""
+    fwd: ForwardCostModel
+    draft_cost_per_token: float = 2e-5   # CST lookup is host-side & cheap
+    draft_cost_fixed: float = 1e-4
+
+    def draft_time(self, batch: int, gamma: int) -> float:
+        return self.draft_cost_fixed + \
+            batch * gamma * self.draft_cost_per_token
+
+    def expected_tokens(self, alpha: float, gamma: int) -> float:
+        """E[accepted+bonus] per request per forward = (1-α^{γ+1})/(1-α)."""
+        if gamma == 0:
+            return 1.0
+        a = min(max(alpha, 0.0), 0.999)
+        return (1.0 - a ** (gamma + 1)) / (1.0 - a)
+
+    def t_sd(self, batch: int, gamma: int, alpha: float,
+             mean_ctx: float) -> float:
+        """Expected seconds per generated token per request."""
+        step = self.draft_time(batch, gamma) + \
+            self.fwd.verify_time(batch, gamma, mean_ctx)
+        return step / self.expected_tokens(alpha, gamma)
+
+    def optimal_gamma(self, batch: int, alpha: float, mean_ctx: float,
+                      gamma_max: int = 16) -> int:
+        best_g, best_t = 0, self.t_sd(batch, 0, alpha, mean_ctx)
+        for g in range(1, gamma_max + 1):
+            t = self.t_sd(batch, g, alpha, mean_ctx)
+            if t < best_t:
+                best_g, best_t = g, t
+        return best_g

@@ -1,0 +1,613 @@
+"""Discrete-event cluster simulator for production-scale rollout.
+
+Replays a Table-3-style workload (thousands of requests, 32-96k max
+generation lengths) over N inference instances with an analytic roofline
+cost model (:mod:`repro.core.sdmodel`), reproducing the paper's
+experiments that cannot run on one CPU: end-to-end throughput (Fig. 7),
+tail time (Fig. 8/9), the ablation (Table 4), context-vs-oracle (Fig. 10),
+SD strategies (Fig. 11) and Partial Rollout (Fig. 12).
+
+Simulation granularity is a *segment*: a run of decode steps on one
+instance during which batch composition is constant.  Segment duration
+integrates the cost model at the KV-midpoint; events (request finished /
+chunk exhausted / KV exhausted / refill) bound each segment.  All
+scheduling code is shared with the real-engine tier where possible — the
+Scheduler and ContextManager drive both.
+
+Scheduling modes
+----------------
+* ``group``     — veRL baseline: a group is atomic; groups round-robin over
+                  instances at submit; no migration; KV exhaustion preempts
+                  the youngest requests (re-prefill on resume).
+* ``request``   — Roll-Flash prompt replication: requests round-robin over
+                  instances; still no migration.
+* ``divided``   — chunk-level global scheduling via the shared Scheduler
+                  (policies: fifo/nocontext, seer, lfs=oracle, sfs) with the
+                  global KV pool making migration stateless.
+* ``streamrl``  — StreamRL-Oracle skewness-aware bucketing: requests
+                  bucketed by true length; long buckets get dedicated
+                  instances with reduced concurrency.
+* ``partial``   — Partial Rollout (APRIL-style): over-issue ``over_issue``x
+                  requests, stop at the target count, defer the rest.
+
+Speculative decoding modes: ``none``, ``suffix`` (per-request CST),
+``grouped`` (Seer DGDS CST), ``grouped+multipath``, ``draft_model``,
+``mtp`` — each an (acceptance-profile, draft-cost) pair; grouped modes'
+acceptance grows with the number of completed group references (Table 2).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.context import ContextManager
+from repro.core.mba import MBAConfig, mba_speculation
+from repro.core.request import Group, ReqState, RolloutRequest
+from repro.core.scheduler import InstanceView, Scheduler
+from repro.core.sdmodel import (H800, ForwardCostModel, HardwareSpec,
+                                SDThroughputModel)
+from repro.data.workload import Workload, WorkloadSpec
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding strategy models
+# ---------------------------------------------------------------------------
+
+# Table 2 (linear drafting): mean acceptance length incl. bonus vs number of
+# completed grouped references.  Multi-path factors from the same table.
+_TABLE2_REFS = np.array([0, 1, 5, 15], dtype=float)
+_TABLE2_ACCLEN = np.array([1.70, 2.04, 2.32, 2.53])
+_MULTIPATH_FACTOR = {1: 1.0, 2: 1.063, 4: 1.126}   # 2.69/2.53, 2.85/2.53
+
+
+def _acclen_to_alpha(acc_len: float, gamma: int) -> float:
+    """Invert E[tokens] = (1-a^{γ+1})/(1-a) for a (bisection)."""
+    acc_len = min(acc_len, gamma + 0.999)
+    lo, hi = 1e-6, 0.999
+    for _ in range(50):
+        mid = (lo + hi) / 2
+        e = (1 - mid ** (gamma + 1)) / (1 - mid)
+        if e < acc_len:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2
+
+
+@dataclass(frozen=True)
+class SDStrategy:
+    name: str                       # none|suffix|grouped|draft_model|mtp
+    gamma_max: int = 8
+    top_k: int = 1                  # multi-path width (grouped only)
+    adaptive: bool = True           # adapt gamma to batch (Seer MBA)
+    draft_flops_per_token: float = 0.0   # separate-draft-model cost
+    draft_param_bytes: float = 0.0  # draft model weights (memory-bound
+    #                                 at rollout-tail batch sizes — the
+    #                                 paper's "excessive draft overhead")
+    alpha_fixed: Optional[float] = None  # fixed acceptance (draft/mtp)
+
+    def alpha(self, n_refs: int, gamma: int) -> float:
+        if self.name == "none":
+            return 0.0
+        if self.alpha_fixed is not None:
+            return self.alpha_fixed
+        if self.name == "suffix":
+            acc = _TABLE2_ACCLEN[0]          # self-reference only
+        else:                                 # grouped
+            acc = float(np.interp(n_refs, _TABLE2_REFS, _TABLE2_ACCLEN))
+            acc *= _MULTIPATH_FACTOR.get(self.top_k, 1.0)
+        return _acclen_to_alpha(acc, gamma)
+
+
+def sd_strategy(name: str, cfg: ModelConfig) -> SDStrategy:
+    if name == "none":
+        return SDStrategy("none", gamma_max=0)
+    if name == "suffix":
+        # SuffixDecoding baseline: γ_max=16, per-request history only
+        return SDStrategy("suffix", gamma_max=16)
+    if name == "grouped":
+        return SDStrategy("grouped", gamma_max=8)
+    if name == "grouped+multipath":
+        return SDStrategy("grouped", gamma_max=8, top_k=4)
+    if name == "draft_model":
+        # dedicated ~7B draft: high acceptance, heavy draft cost — each of
+        # the γ sequential draft steps streams the full 14 GB of bf16
+        # draft weights (memory-bound at tail batch sizes)
+        return SDStrategy("draft_model", gamma_max=3,
+                          draft_flops_per_token=2 * 7e9,
+                          draft_param_bytes=2 * 7e9,
+                          alpha_fixed=0.75)
+    if name == "mtp":
+        # MTP head ≈ one extra layer of the target (~1B slice), γ=1
+        return SDStrategy("mtp", gamma_max=1, draft_flops_per_token=2 * 1e9,
+                          draft_param_bytes=2 * 1e9,
+                          alpha_fixed=0.80)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# simulated instance
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SimSeq:
+    req: RolloutRequest
+    true_len: int                  # total tokens this request will emit
+    ctx: float                     # current KV length (prompt + generated)
+    chunk_left: int                # tokens left in the scheduled chunk
+    frac: float = 0.0              # fractional token carry (SD)
+
+    @property
+    def total_left(self) -> int:
+        return self.true_len - self.req.gen_len
+
+
+class SimInstance:
+    def __init__(self, iid: str, kv_capacity: int, max_slots: int):
+        self.iid = iid
+        self.kv_capacity = kv_capacity
+        self.max_slots = max_slots
+        self.running: Dict[str, SimSeq] = {}
+        self.queue: List[RolloutRequest] = []   # local queue (group modes)
+        self.preempted: List[SimSeq] = []
+        self.busy_time = 0.0
+        self.overhead = 0.0          # prefill/pool time owed to next segment
+        self.tokens_out = 0.0
+        self.preemptions = 0
+
+    def kv_used(self) -> float:
+        return sum(s.ctx for s in self.running.values())
+
+    def kv_free(self) -> float:
+        return self.kv_capacity - self.kv_used()
+
+    def free_slots(self) -> int:
+        return self.max_slots - len(self.running)
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SimConfig:
+    mode: str = "divided"           # group|request|divided|streamrl|partial
+    policy: str = "seer"            # divided-mode scheduler policy
+    sd: str = "none"
+    chunk_size: int = 2048          # divided-rollout chunk (tokens)
+    max_slots: int = 256
+    kv_capacity_tokens: Optional[int] = None   # default: from HBM budget
+    hw: HardwareSpec = H800
+    chips_per_instance: int = 8
+    hbm_per_chip: float = 80e9
+    mba_lam: float = 2.0
+    segment_cap: int = 1024         # max tokens per segment (model refresh)
+    over_issue: float = 2.0         # partial-rollout over-issue factor
+    partial_defer_frac: float = 0.0  # set >0 in partial mode automatically
+    pool_net_bw: float = 25e9       # KV pool fetch bandwidth (bytes/s)
+    streamrl_buckets: int = 4
+    seed: int = 0
+
+
+@dataclass
+class SimResult:
+    total_time: float
+    tokens: float
+    n_requests: int
+    completion_times: np.ndarray       # per request
+    output_lengths: np.ndarray
+    preemptions: int
+    migrations: int
+    idle_frac: float
+    tokens_per_sec: float
+    tail_time: float                   # t_end - t(90% completed)
+    tail_frac: float
+    drafted: float = 0.0
+    accepted: float = 0.0
+    instance_finish_spread: float = 0.0
+    extras: dict = field(default_factory=dict)
+
+    @property
+    def mean_acceptance_len(self) -> float:
+        """Mean accepted+bonus per verify step."""
+        return self.extras.get("mean_acc_len", 0.0)
+
+
+class ClusterSimulator:
+    def __init__(self, cfg: ModelConfig, spec: WorkloadSpec,
+                 sim: SimConfig):
+        self.cfg = cfg
+        self.spec = spec
+        self.sim = sim
+        self.fwd = ForwardCostModel(cfg, sim.hw,
+                                    chips=sim.chips_per_instance)
+        self.sd_model = SDThroughputModel(self.fwd)
+        self.strategy = sd_strategy(sim.sd, cfg)
+        kvb = self.fwd.kv_bytes_per_token()
+        if sim.kv_capacity_tokens is not None:
+            self.kv_capacity = sim.kv_capacity_tokens
+        else:
+            budget = sim.chips_per_instance * sim.hbm_per_chip * 0.9 \
+                - self.fwd.param_bytes()
+            self.kv_capacity = int(max(budget, 1e9) / max(kvb, 1))
+        self.kv_bytes_per_token = kvb
+        worst = spec.prompt_len + spec.max_gen_length
+        if self.kv_capacity < worst:
+            raise ValueError(
+                f"instance KV capacity ({self.kv_capacity} tokens) cannot "
+                f"hold one max-length request ({worst} tokens); increase "
+                f"chips_per_instance or set kv_capacity_tokens")
+
+    # -- setup ------------------------------------------------------------------
+
+    def _build_requests(self, wl: Workload
+                        ) -> Tuple[List[Group], Dict[str, int]]:
+        groups: List[Group] = []
+        true_len: Dict[str, int] = {}
+        for gi in range(wl.n_groups):
+            gid = f"g{gi}"
+            reqs = []
+            for ri in range(self.spec.group_size):
+                r = RolloutRequest(
+                    req_id=f"{gid}.r{ri}", group_id=gid,
+                    prompt=[0] * self.spec.prompt_len, seed=0,
+                    max_new_tokens=self.spec.max_gen_length,
+                    speculative=(ri == 0), gen_count=0)
+                true_len[r.req_id] = int(wl.lengths[gi, ri])
+                reqs.append(r)
+            groups.append(Group(gid, reqs))
+        return groups, true_len
+
+    # -- segment execution --------------------------------------------------------
+
+    def _gamma_for(self, inst: SimInstance, ctxmgr: ContextManager,
+                   n_refs: float) -> Tuple[int, int]:
+        """Draft lengths (γ_h, γ_l) for the instance's current batch."""
+        st = self.strategy
+        if st.name == "none" or not inst.running:
+            return 0, 0
+        B = len(inst.running)
+        b_h = sum(1 for s in inst.running.values() if s.req.speculative)
+        b_l = B - b_h
+        mean_ctx = inst.kv_used() / B
+        alpha = st.alpha(int(n_refs), st.gamma_max)
+        if not st.adaptive:
+            return st.gamma_max, st.gamma_max
+        if st.name in ("draft_model", "mtp"):
+            g = self.sd_model.optimal_gamma(B, alpha, mean_ctx, st.gamma_max)
+            return g, g
+        # Seer MBA (Alg. 1) with β from the acceptance profile
+        beta = [alpha ** (i + 1) for i in range(st.gamma_max + 1)]
+        g_h, g_l = mba_speculation(
+            b_h, b_l, beta, self.sd_model, alpha, mean_ctx,
+            MBAConfig(gamma_max=st.gamma_max, lam=self.sim.mba_lam))
+        return g_h, g_l
+
+    def _segment(self, inst: SimInstance, ctxmgr: ContextManager,
+                 group_refs: Dict[str, int]) -> Tuple[float, int]:
+        """Compute (duration_seconds, tokens_per_request) for the next
+        segment on this instance.  Returns (0, 0) if idle."""
+        B = len(inst.running)
+        if B == 0:
+            return 0.0, 0
+        seqs = list(inst.running.values())
+        n_event = min(min(s.chunk_left, s.total_left) for s in seqs)
+        n_event = max(1, min(n_event, self.sim.segment_cap))
+        # KV exhaustion bound
+        kv_free = inst.kv_free()
+        n_kv = int(kv_free // B) if B else n_event
+        preempt = False
+        if n_kv < n_event:
+            n_event = max(1, n_kv)
+            preempt = n_kv <= 1
+        st = self.strategy
+        mean_refs = np.mean([group_refs.get(s.req.group_id, 0)
+                             for s in seqs]) if seqs else 0
+        g_h, g_l = self._gamma_for(inst, ctxmgr, mean_refs)
+        mean_ctx = inst.kv_used() / B + n_event / 2
+        if st.name == "none" or (g_h == 0 and g_l == 0):
+            t_step = self.fwd.decode_time(B, mean_ctx)
+            tok_per_step = 1.0
+            gamma_mean = 0.0
+        else:
+            b_h = sum(1 for s in seqs if s.req.speculative)
+            b_l = B - b_h
+            gamma_mean = (b_h * g_h + b_l * g_l) / B
+            alpha = st.alpha(int(mean_refs), int(max(g_h, g_l, 1)))
+            tok_per_step = self.sd_model.expected_tokens(
+                alpha, int(round(gamma_mean)))
+            t_step = self.fwd.verify_time(B, int(round(gamma_mean)),
+                                          mean_ctx)
+            t_step += self.sd_model.draft_time(B, int(round(gamma_mean)))
+            if st.draft_flops_per_token or st.draft_param_bytes:
+                # γ sequential draft forwards: roofline of compute (all B
+                # requests) vs streaming the draft weights once per step
+                t_comp = (B * st.draft_flops_per_token) / \
+                    (self.sim.chips_per_instance * self.sim.hw.peak_flops
+                     * 0.4)
+                t_mem = st.draft_param_bytes / \
+                    (self.sim.chips_per_instance * self.sim.hw.hbm_bw * 0.7)
+                t_step += gamma_mean * max(t_comp, t_mem)
+        steps = max(1, math.ceil(n_event / tok_per_step))
+        dur = steps * t_step
+        self._seg_stats["steps"] += steps * B
+        self._seg_stats["drafted"] += steps * B * gamma_mean
+        self._seg_stats["accepted"] += steps * B * (tok_per_step - 1.0)
+        return dur, n_event
+
+    # -- main loop ------------------------------------------------------------------
+
+    def run(self, wl: Workload, *, n_target: Optional[int] = None
+            ) -> SimResult:
+        sim = self.sim
+        groups, true_len = self._build_requests(wl)
+        all_reqs = [r for g in groups for r in g.requests]
+        n_requests = len(all_reqs)
+        n_target = n_target or n_requests
+        if sim.mode == "partial":
+            n_target = int(n_requests / sim.over_issue)
+
+        ctxmgr = ContextManager(self.spec.max_gen_length)
+        policy = sim.policy if sim.mode == "divided" else "fifo"
+        chunk = sim.chunk_size if sim.mode == "divided" \
+            else self.spec.max_gen_length
+        sched = Scheduler(groups, ctxmgr, policy=policy, chunk_size=chunk,
+                          oracle_lengths=(true_len if policy in
+                                          ("lfs", "sfs") else None))
+        instances = [SimInstance(f"i{k}", self.kv_capacity, sim.max_slots)
+                     for k in range(self.spec.n_instances)]
+        self._assign_static(groups, instances, true_len)
+
+        group_refs: Dict[str, int] = {}     # completed requests per group
+        self._seg_stats = {"steps": 0.0, "drafted": 0.0, "accepted": 0.0}
+        completion: Dict[str, float] = {}
+        inst_of: Dict[str, int] = {}
+        migrations = 0
+        pool_time = 0.0
+        now = 0.0
+        finished = 0
+        # event heap: (time, seq#, instance index)
+        heap: List[Tuple[float, int, int]] = []
+        ctr = 0
+        for k, inst in enumerate(instances):
+            self._fill(inst, sched, instances, now, true_len)
+            dur, n = self._segment(inst, ctxmgr, group_refs)
+            dur += inst.overhead
+            inst.overhead = 0.0
+            inst._seg = (now, dur, n)
+            heapq.heappush(heap, (now + (dur if n else 1e-3), ctr, k))
+            ctr += 1
+
+        idle_wakes = 0
+        while finished < n_target and heap:
+            now, _, k = heapq.heappop(heap)
+            if idle_wakes > 200 * n_requests:
+                raise RuntimeError("simulation livelock (nothing placeable)")
+            inst = instances[k]
+            t0, dur, n_tok = inst._seg
+            if n_tok:
+                inst.busy_time += dur
+                for rid in list(inst.running):
+                    s = inst.running[rid]
+                    take = min(n_tok, s.total_left, s.chunk_left)
+                    s.req.gen_count += take      # lengths only, no tokens
+                    s.ctx += take
+                    s.chunk_left -= take
+                    inst.tokens_out += take
+                    if s.total_left <= 0:
+                        del inst.running[rid]
+                        s.req.finish(now)
+                        sched.on_finished(s.req)
+                        completion[rid] = now
+                        inst_of[rid] = k
+                        group_refs[s.req.group_id] = \
+                            group_refs.get(s.req.group_id, 0) + 1
+                        finished += 1
+                    elif s.chunk_left <= 0:
+                        # chunk exhausted -> back to the global buffer
+                        del inst.running[rid]
+                        sched.requeue(s.req)
+                        s.req.instance_id = inst.iid
+                # KV-pressure preemption (non-divided modes only)
+                if sim.mode in ("group", "request", "streamrl", "partial") \
+                        and inst.kv_free() < len(inst.running):
+                    self._preempt(inst)
+            mig, pt = self._fill(inst, sched, instances, now, true_len)
+            migrations += mig
+            pool_time += pt
+            dur, n = self._segment(inst, ctxmgr, group_refs)
+            dur += inst.overhead
+            inst.overhead = 0.0
+            inst._seg = (now, dur, n)
+            if n:
+                heapq.heappush(heap, (now + dur, ctr, k))
+                idle_wakes = 0
+            else:
+                # idle: wake up shortly to re-check the buffer
+                if sched.pending_count() > (0 if sim.mode != "partial"
+                                            else n_requests - n_target):
+                    heapq.heappush(heap, (now + 0.05, ctr, k))
+                    idle_wakes += 1
+            ctr += 1
+            if not heap and finished < n_target:
+                raise RuntimeError("simulation stalled")
+
+        t_end = now
+        comp = np.array([completion[r] for r in sorted(completion)])
+        out_lens = np.array([r.gen_len for r in all_reqs
+                             if r.req_id in completion])
+        done_lens = np.array(sorted(completion.values()))
+        t90 = done_lens[int(0.9 * (len(done_lens) - 1))] \
+            if len(done_lens) else 0.0
+        busy = sum(i.busy_time for i in instances)
+        idle = 1.0 - busy / max(t_end * len(instances), 1e-9)
+        tokens = sum(i.tokens_out for i in instances)
+        # inter-instance imbalance: spread of last-completion times
+        last_by_inst = {}
+        for rid, t in completion.items():
+            ki = inst_of[rid]
+            last_by_inst[ki] = max(last_by_inst.get(ki, 0.0), t)
+        spread = (max(last_by_inst.values()) - min(last_by_inst.values())) \
+            / max(t_end, 1e-9) if len(last_by_inst) > 1 else 0.0
+        steps = max(self._seg_stats["steps"], 1.0)
+        return SimResult(
+            total_time=t_end, tokens=tokens, n_requests=len(completion),
+            completion_times=comp, output_lengths=out_lens,
+            preemptions=sum(i.preemptions for i in instances),
+            migrations=migrations, idle_frac=idle,
+            tokens_per_sec=tokens / max(t_end, 1e-9),
+            tail_time=t_end - t90,
+            tail_frac=(t_end - t90) / max(t_end, 1e-9),
+            drafted=self._seg_stats["drafted"],
+            accepted=self._seg_stats["accepted"],
+            instance_finish_spread=spread,
+            extras={
+                "mean_acc_len": 1.0 + self._seg_stats["accepted"] / steps,
+                "pool_transfer_time": pool_time,
+                "busy_frac": busy / max(t_end * len(instances), 1e-9),
+            })
+
+    # -- placement -----------------------------------------------------------------
+
+    def _assign_static(self, groups: List[Group],
+                       instances: List[SimInstance],
+                       true_len: Dict[str, int]) -> None:
+        """Static placement for the non-divided modes."""
+        sim = self.sim
+        if sim.mode == "group":
+            for gi, g in enumerate(groups):
+                inst = instances[gi % len(instances)]
+                inst.queue.extend(g.requests)
+        elif sim.mode in ("request", "partial"):
+            i = 0
+            for g in groups:
+                for r in g.requests:
+                    instances[i % len(instances)].queue.append(r)
+                    i += 1
+        elif sim.mode == "streamrl":
+            # oracle skewness-aware bucketing: requests sorted by true
+            # length, split into equal-*work* buckets; each bucket gets an
+            # instance share proportional to its work; the longest bucket
+            # runs with reduced concurrency (less preemption)
+            reqs = sorted((r for g in groups for r in g.requests),
+                          key=lambda r: -true_len[r.req_id])
+            nb = max(1, min(self.sim.streamrl_buckets, len(instances)))
+            total_work = sum(true_len[r.req_id] for r in reqs)
+            buckets_reqs: List[List[RolloutRequest]] = [[] for _ in range(nb)]
+            acc, bi = 0.0, 0
+            for r in reqs:
+                buckets_reqs[bi].append(r)
+                acc += true_len[r.req_id]
+                if acc >= total_work * (bi + 1) / nb and bi < nb - 1:
+                    bi += 1
+            # instance shares proportional to bucket work
+            shares = [max(1, round(len(instances) *
+                                   sum(true_len[r.req_id] for r in b)
+                                   / total_work)) for b in buckets_reqs]
+            while sum(shares) > len(instances):
+                shares[shares.index(max(shares))] -= 1
+            while sum(shares) < len(instances):
+                shares[shares.index(min(shares))] += 1
+            off = 0
+            for bi, (breqs, sh) in enumerate(zip(buckets_reqs, shares)):
+                binst = instances[off:off + sh]
+                off += sh
+                for j, r in enumerate(breqs):
+                    binst[j % len(binst)].queue.append(r)
+                if bi == 0:   # longest bucket: reduce concurrency
+                    for inst in binst:
+                        inst.max_slots = max(8, inst.max_slots // 2)
+
+    def _fill(self, inst: SimInstance, sched: Scheduler,
+              instances: List[SimInstance], now: float,
+              true_len: Dict[str, int]) -> Tuple[int, float]:
+        """Admit work onto ``inst``.  Returns (migrations, pool_seconds)."""
+        sim = self.sim
+        migrations = 0
+        pool_time = 0.0
+        if sim.mode == "divided":
+            while inst.free_slots() > 0:
+                r = sched.pick_request()
+                if r is None:
+                    break
+                views = [InstanceView(i.iid, i.free_slots(),
+                                      int(i.kv_free()))
+                         for i in instances]
+                target = sched.select_instance(views, r)
+                if target != inst.iid:
+                    # not for us this cycle; put it back
+                    sched.requeue(r)
+                    if target is None:
+                        break
+                    ti = next(i for i in instances if i.iid == target)
+                    migrations += self._admit(ti, r, sched, true_len,
+                                              now)[0]
+                    continue
+                m, pt = self._admit(inst, r, sched, true_len, now)
+                migrations += m
+                pool_time += pt
+        else:
+            # instance-local queue (resume preempted first)
+            while inst.free_slots() > 0 and \
+                    (inst.preempted or inst.queue):
+                if inst.preempted:
+                    s = inst.preempted.pop(0)
+                    if inst.kv_free() < s.ctx + 64:
+                        inst.preempted.insert(0, s)
+                        break
+                    # re-prefill its whole context
+                    inst.overhead += self.fwd.prefill_time(int(s.ctx))
+                    inst.running[s.req.req_id] = s
+                    continue
+                r = inst.queue[0]
+                need = len(r.prompt) + 64
+                if inst.kv_free() < need:
+                    break
+                inst.queue.pop(0)
+                if r.finished:
+                    continue
+                self._admit(inst, r, sched, true_len, now, local=True)
+        return migrations, pool_time
+
+    def _admit(self, inst: SimInstance, r: RolloutRequest,
+               sched: Scheduler, true_len: Dict[str, int], now: float,
+               local: bool = False) -> Tuple[int, float]:
+        ctx0 = len(r.prompt) + r.gen_len
+        chunk = sched.chunk_tokens(r) if not local \
+            else r.max_new_tokens
+        migrated = 0
+        pool_time = 0.0
+        if r.gen_len > 0 and r.instance_id and r.instance_id != inst.iid:
+            migrated = 1
+            r.migrations += 1
+            # KV pool fetch (divided rollout): bytes/bw, no re-prefill
+            pool_time = ctx0 * self.kv_bytes_per_token / self.sim.pool_net_bw
+            inst.overhead += pool_time
+        if r.gen_len == 0:
+            inst.overhead += self.fwd.prefill_time(len(r.prompt))
+        if r.t_first_scheduled is None:
+            r.t_first_scheduled = now
+        r.state = ReqState.RUNNING
+        r.instance_id = inst.iid
+        inst.running[r.req_id] = SimSeq(
+            req=r, true_len=min(true_len[r.req_id], r.max_new_tokens),
+            ctx=float(ctx0), chunk_left=chunk)
+        return migrated, pool_time
+
+    def _preempt(self, inst: SimInstance) -> None:
+        """Evict youngest requests until ~12% KV head-room is restored."""
+        victims = sorted(inst.running.values(), key=lambda s: s.ctx)
+        for s in victims:
+            if inst.kv_free() >= 0.12 * inst.kv_capacity:
+                break
+            del inst.running[s.req.req_id]
+            s.chunk_left = max(s.total_left, 1)
+            inst.preempted.append(s)
+            inst.preemptions += 1

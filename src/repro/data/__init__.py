@@ -1,0 +1,13 @@
+from repro.data.workload import (KIMI_K2, MOONLIGHT, QWEN2_VL_72B,
+                                 WORKLOADS, Workload, WorkloadSpec,
+                                 group_token_streams, length_stats,
+                                 make_workload, sample_lengths)
+
+__all__ = [
+    "KIMI_K2", "MOONLIGHT", "QWEN2_VL_72B", "WORKLOADS", "Workload",
+    "WorkloadSpec", "group_token_streams", "length_stats", "make_workload",
+    "sample_lengths",
+]
+from repro.data.tasks import RewardWorker, Task, Tokenizer, make_task  # noqa: E402
+
+__all__ += ["RewardWorker", "Task", "Tokenizer", "make_task"]

@@ -1,0 +1,6 @@
+from repro.engine.engine import EngineSeq, Instance, KVBlob, StepFunctions
+from repro.engine.sampling import (position_keys, sample_tokens,
+                                   token_logprobs_at)
+
+__all__ = ["EngineSeq", "Instance", "KVBlob", "StepFunctions",
+           "position_keys", "sample_tokens", "token_logprobs_at"]

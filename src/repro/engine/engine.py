@@ -1,0 +1,373 @@
+"""Inference engine: one Seer "inference instance".
+
+Slot-based continuous batching with static JAX shapes:
+
+* a cache buffer of ``max_slots`` rows x ``cache_len`` positions
+* chunked prefill (fixed chunk size, python loop)
+* one jitted ``step`` covering decode (T=1) and speculative verify
+  (T = gamma_max+1); rows carry a token mask so each request may submit a
+  different number of draft tokens
+* KV export/import per slot — the handle the global KV pool moves between
+  instances (divided rollout's stateless chunk migration)
+
+Step functions are compiled once per (config, T) and shared by every
+instance of that model (the paper colocates many instances per model).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.engine.sampling import (position_keys, sample_tokens,
+                                   token_logprobs_at)
+from repro.models import build_cross_cache, forward, init_cache
+
+
+# ---------------------------------------------------------------------------
+# jitted step functions (shared per config)
+# ---------------------------------------------------------------------------
+
+
+class StepFunctions:
+    """Compile-once holder for a given model config."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._step_cache: dict = {}
+
+    def step(self, T: int):
+        """(params, cache, tokens(B,T), positions, mask, keys, temps)
+        -> (sampled(B,T), logprobs(B,T), new_cache)."""
+        if T in self._step_cache:
+            return self._step_cache[T]
+        cfg = self.cfg
+
+        @jax.jit
+        def fn(params, cache, tokens, positions, mask, keys, temps):
+            logits, new_cache, _ = forward(
+                cfg, params, tokens, positions, cache, token_mask=mask)
+            logits = logits.astype(jnp.float32)
+            sampled = sample_tokens(logits, keys, temps)
+            lp = token_logprobs_at(logits, sampled)
+            return sampled, lp, new_cache
+
+        self._step_cache[T] = fn
+        return fn
+
+    def prefill(self, T: int):
+        key = ("prefill", T)
+        if key in self._step_cache:
+            return self._step_cache[key]
+        cfg = self.cfg
+
+        @jax.jit
+        def fn(params, cache, tokens, positions, mask):
+            _, new_cache, _ = forward(
+                cfg, params, tokens, positions, cache, token_mask=mask)
+            return new_cache
+
+        self._step_cache[key] = fn
+        return fn
+
+    @property
+    def rollback(self):
+        key = "rollback"
+        if key in self._step_cache:
+            return self._step_cache[key]
+
+        @jax.jit
+        def fn(slot_pos, from_pos):
+            # invalidate every cache slot holding a position >= from_pos
+            return jnp.where(slot_pos >= from_pos[:, None], -1, slot_pos)
+
+        self._step_cache[key] = fn
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# per-request engine state
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EngineSeq:
+    req_id: str
+    group_id: str
+    prompt: List[int]
+    seed: int
+    temperature: float = 1.0
+    max_new_tokens: int = 256
+    stop_token: Optional[int] = None
+    # mutable generation state
+    generated: List[int] = field(default_factory=list)
+    logprobs: List[float] = field(default_factory=list)
+    last_token: int = -1          # pending token (fed on next step)
+    next_pos: int = 0             # position of the pending token
+    finished: bool = False
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    def finish_reason(self) -> str:
+        if self.stop_token is not None and self.generated and \
+                self.generated[-1] == self.stop_token:
+            return "stop"
+        return "length"
+
+
+@dataclass
+class KVBlob:
+    """Exported per-request cache state (what the global pool stores)."""
+    req_id: str
+    arrays: dict                  # cache leaves sliced at the slot
+    next_pos: int
+    nbytes: int
+
+
+# ---------------------------------------------------------------------------
+# instance
+# ---------------------------------------------------------------------------
+
+
+def _slot_slice(key: str):
+    """Cache leaves carry the slot (batch) dim at 0 or 1."""
+    return 0 if key == "slot_pos" else 1
+
+
+class Instance:
+    """One inference instance (a model replica with its own KV buffer)."""
+
+    def __init__(self, cfg: ModelConfig, params, steps: StepFunctions, *,
+                 max_slots: int = 8, cache_len: int = 4096,
+                 prefill_chunk: int = 64, gamma_max: int = 8,
+                 instance_id: str = "inst0", base_seed: int = 0,
+                 modality_embeds=None):
+        self.cfg = cfg
+        self.params = params
+        self.steps = steps
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.prefill_chunk = prefill_chunk
+        self.gamma_max = gamma_max
+        self.instance_id = instance_id
+        self.base_key = jax.random.PRNGKey(base_seed)
+        self.cache = init_cache(cfg, max_slots, cache_len)
+        if cfg.arch_type in ("vlm", "audio"):
+            if modality_embeds is None:
+                from repro.models import modality_inputs
+                modality_embeds = next(iter(
+                    modality_inputs(cfg, max_slots).values()))
+            ck, cv = build_cross_cache(cfg, params, modality_embeds)
+            self.cache["cross_k"], self.cache["cross_v"] = ck, cv
+        self.slots: List[Optional[EngineSeq]] = [None] * max_slots
+        # stats
+        self.tokens_generated = 0
+        self.steps_run = 0
+        self.prefill_tokens = 0
+
+    # -- capacity ------------------------------------------------------------
+
+    def free_slots(self) -> int:
+        return sum(s is None for s in self.slots)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def kv_used_tokens(self) -> int:
+        return sum(min(s.next_pos, self.cache_len)
+                   for s in self.slots if s is not None)
+
+    def kv_capacity_tokens(self) -> int:
+        return self.max_slots * self.cache_len
+
+    def kv_headroom(self) -> float:
+        return 1.0 - self.kv_used_tokens() / max(self.kv_capacity_tokens(), 1)
+
+    # -- admission / release ---------------------------------------------------
+
+    def admit(self, seq: EngineSeq, blob: Optional[KVBlob] = None) -> int:
+        slot = self.slots.index(None)
+        self.slots[slot] = seq
+        self._clear_slot_cache(slot)
+        if blob is not None and blob.next_pos == seq.next_pos:
+            self._import_kv(slot, blob)
+        elif seq.next_pos > 0:
+            # no blob (pool miss): re-prefill everything up to next_pos
+            tokens = (seq.prompt + seq.generated)[:seq.next_pos]
+            self._prefill_slot(slot, tokens, start_pos=0)
+        else:
+            tokens = seq.prompt[:-1]
+            self._prefill_slot(slot, tokens, start_pos=0)
+            seq.last_token = seq.prompt[-1]
+            seq.next_pos = len(seq.prompt) - 1
+        return slot
+
+    def release(self, slot: int, export: bool = True) -> Optional[KVBlob]:
+        seq = self.slots[slot]
+        blob = self._export_kv(slot, seq) if export and seq else None
+        self.slots[slot] = None
+        return blob
+
+    # -- KV migration -----------------------------------------------------------
+
+    def _export_kv(self, slot: int, seq: EngineSeq) -> KVBlob:
+        arrays = {}
+        nbytes = 0
+        for k, v in self.cache.items():
+            sl = jnp.take(v, slot, axis=_slot_slice(k))
+            arrays[k] = sl
+            nbytes += sl.size * sl.dtype.itemsize
+        return KVBlob(seq.req_id, arrays, seq.next_pos, nbytes)
+
+    def _import_kv(self, slot: int, blob: KVBlob) -> None:
+        for k in self.cache:
+            ax = _slot_slice(k)
+            src = blob.arrays[k]
+            idx = [slice(None)] * self.cache[k].ndim
+            idx[ax] = slot
+            self.cache[k] = self.cache[k].at[tuple(idx)].set(src)
+
+    def _clear_slot_cache(self, slot: int) -> None:
+        if "slot_pos" in self.cache:
+            self.cache["slot_pos"] = \
+                self.cache["slot_pos"].at[slot].set(-1)
+        if "ssm" in self.cache:
+            self.cache["ssm"] = self.cache["ssm"].at[:, slot].set(0.0)
+            self.cache["conv"] = self.cache["conv"].at[:, slot].set(0.0)
+
+    # -- prefill -----------------------------------------------------------------
+
+    def _prefill_slot(self, slot: int, tokens: List[int], start_pos: int):
+        if not tokens:
+            return
+        B = self.max_slots
+        c = self.prefill_chunk
+        fn = self.steps.prefill(c)
+        for off in range(0, len(tokens), c):
+            chunk = tokens[off:off + c]
+            buf = np.zeros((B, c), np.int32)
+            pos = np.zeros((B, c), np.int32)
+            mask = np.zeros((B, c), bool)
+            buf[slot, :len(chunk)] = chunk
+            pos[slot, :len(chunk)] = start_pos + off + np.arange(len(chunk))
+            mask[slot, :len(chunk)] = True
+            self.cache = fn(self.params, self.cache, jnp.asarray(buf),
+                            jnp.asarray(pos), jnp.asarray(mask))
+            self.prefill_tokens += len(chunk)
+
+    # -- the decode / verify step -------------------------------------------------
+
+    def run_step(self, drafts: Optional[Dict[int, List[int]]] = None
+                 ) -> Dict[int, Tuple[List[int], List[float], int]]:
+        """One engine iteration over all active slots.
+
+        drafts: slot -> draft token list (may be empty).  Returns
+        slot -> (new_tokens, logprobs, n_draft_accepted).
+        """
+        drafts = drafts or {}
+        active = self.active_slots()
+        if not active:
+            return {}
+        gamma = max((len(drafts.get(i, [])) for i in active), default=0)
+        gamma = min(gamma, self.gamma_max)
+        # bucket gamma to bound the number of compiled step shapes
+        for b in (0, 1, 2, 4, 8, 16, 32):
+            if gamma <= b:
+                gamma = b
+                break
+        T = gamma + 1
+        B = self.max_slots
+
+        tokens = np.zeros((B, T), np.int32)
+        positions = np.zeros((B, T), np.int32)
+        mask = np.zeros((B, T), bool)
+        temps = np.zeros((B,), np.float32)
+        seeds = np.zeros((B,), np.int32)
+        ndraft = {}
+        for i in active:
+            seq = self.slots[i]
+            d = list(drafts.get(i, []))[:gamma]
+            ndraft[i] = len(d)
+            row = [seq.last_token] + d
+            tokens[i, :len(row)] = row
+            positions[i, :len(row)] = seq.next_pos + np.arange(len(row))
+            mask[i, :len(row)] = True
+            temps[i] = seq.temperature
+            seeds[i] = seq.seed
+
+        keys = position_keys(self.base_key, jnp.asarray(seeds),
+                             jnp.asarray(positions))
+        fn = self.steps.step(T)
+        has_ssm = "ssm" in self.cache
+        pre_ssm = (self.cache["ssm"], self.cache["conv"]) \
+            if (has_ssm and gamma > 0) else None
+        sampled, lps, self.cache = fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(mask), keys,
+            jnp.asarray(temps))
+        sampled = np.asarray(sampled)
+        lps = np.asarray(lps)
+
+        out = {}
+        rollback_from = np.full((B,), np.iinfo(np.int32).max, np.int32)
+        for i in active:
+            seq = self.slots[i]
+            d = list(drafts.get(i, []))[:ndraft[i]]
+            # acceptance: longest prefix of drafts matching sampled chain
+            a = 0
+            while a < len(d) and d[a] == int(sampled[i, a]):
+                a += 1
+            new_toks = [int(sampled[i, j]) for j in range(a + 1)]
+            new_lps = [float(lps[i, j]) for j in range(a + 1)]
+            # truncate to request budget / stop token
+            room = seq.max_new_tokens - len(seq.generated)
+            cut = new_toks[:room]
+            if seq.stop_token is not None and seq.stop_token in cut:
+                cut = cut[:cut.index(seq.stop_token) + 1]
+            new_toks, new_lps = cut, new_lps[:len(cut)]
+            seq.generated.extend(new_toks)
+            seq.logprobs.extend(new_lps)
+            self.tokens_generated += len(new_toks)
+            # cache holds positions next_pos .. next_pos+gamma for this row;
+            # committed prefix is next_pos .. next_pos+a (len(new_toks) may
+            # be shorter due to budget/stop, but those are finished anyway)
+            committed_hi = seq.next_pos + a          # highest valid position
+            rollback_from[i] = committed_hi + 1
+            seq.last_token = new_toks[-1] if new_toks else seq.last_token
+            seq.next_pos = committed_hi + 1
+            if seq.stop_token is not None and new_toks and \
+                    new_toks[-1] == seq.stop_token:
+                seq.finished = True
+            if len(seq.generated) >= seq.max_new_tokens:
+                seq.finished = True
+            if seq.next_pos >= self.cache_len - 1 and not self.cfg.sliding_window \
+                    and self.cfg.arch_type not in ("ssm",):
+                seq.finished = True   # cache exhausted (engine-tier guard)
+            out[i] = (new_toks, new_lps, a)
+        if "slot_pos" in self.cache and gamma > 0:
+            self.cache["slot_pos"] = self.steps.rollback(
+                self.cache["slot_pos"], jnp.asarray(rollback_from))
+        if pre_ssm is not None:
+            # SSM states advanced through *rejected* draft tokens cannot be
+            # invalidated by slot masking — restore the pre-step recurrent
+            # state and replay only the accepted prefix (beyond-paper:
+            # spec-decode on SSM/hybrid archs; see DESIGN.md).
+            accepted_mask = np.zeros((B, T), bool)
+            for i in active:
+                n_ok = rollback_from[i] - positions[i, 0]
+                accepted_mask[i, :n_ok] = True
+            if not np.array_equal(accepted_mask, mask):
+                self.cache["ssm"], self.cache["conv"] = pre_ssm
+                _, _, self.cache = fn(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(positions), jnp.asarray(accepted_mask), keys,
+                    jnp.asarray(temps))
+        self.steps_run += 1
+        return out

@@ -1,0 +1,50 @@
+"""Position-keyed sampling.
+
+The RNG for the token at absolute position p of request r depends only on
+(base_key, r_seed, p).  Consequently a speculative-verify forward and a
+plain sequential decode sample *identical* tokens given identical prefixes —
+speculative decoding is bitwise lossless even at temperature > 0, which is
+the on-policy guarantee Seer's synchronous RL setting requires (§3.4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def position_keys(base_key: jax.Array, seeds: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    """seeds: (B,), positions: (B,T) -> uint32 keys (B,T,2)."""
+    def one(seed, pos_row):
+        k = jax.random.fold_in(base_key, seed)
+        return jax.vmap(lambda p: jax.random.key_data(
+            jax.random.fold_in(k, p)))(pos_row)
+    return jax.vmap(one)(seeds, positions)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array,
+                  temps: jax.Array) -> jax.Array:
+    """logits (B,T,V) f32; keys (B,T,2) uint32; temps (B,).
+
+    temp <= 0 -> greedy; else Gumbel-max sampling (exact categorical).
+    """
+    B, T, V = logits.shape
+    lf = logits.astype(jnp.float32)
+
+    def one(lrow, krow, temp):
+        def pos(l, kd):
+            key = jax.random.wrap_key_data(kd)
+            g = jax.random.gumbel(key, (V,), jnp.float32)
+            scaled = jnp.where(temp > 0, l / jnp.maximum(temp, 1e-6) + g, l)
+            return jnp.argmax(scaled).astype(jnp.int32)
+        return jax.vmap(pos)(lrow, krow)
+
+    return jax.vmap(one)(lf, keys, temps)
+
+
+def token_logprobs_at(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """logprob of ``tokens`` under softmax(logits); (B,T,V),(B,T)->(B,T) f32."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    sel = jnp.take_along_axis(lf, tokens[..., None], axis=-1)[..., 0]
+    return sel - logz

@@ -1,0 +1,29 @@
+"""Jitted public wrapper for the flash attention kernel.
+
+On the TPU target ``interpret=False`` compiles the Pallas kernel; this
+container is CPU-only so the default executes the same kernel body in
+interpret mode (bit-accurate semantics, Python speed).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("q_offset", "causal", "window",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, q_offset: int = 0, causal: bool = True,
+                    window: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_pallas(
+        q, k, v, q_offset=q_offset, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)

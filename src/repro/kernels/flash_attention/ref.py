@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Contract (training/prefill path):
+  q: (B, Tq, Hq, D)  k, v: (B, Tk, Hk, D)   Hq % Hk == 0
+  positions are contiguous: q token i has absolute position q_offset + i,
+  k token j has position j.  causal + optional sliding window.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, q_offset: int = 0, causal: bool = True,
+                        window: int = 0):
+    B, Tq, Hq, D = q.shape
+    Tk, Hk = k.shape[1], k.shape[2]
+    rep = Hq // Hk
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    qp = q_offset + jnp.arange(Tq)[:, None]
+    kp = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return o.astype(q.dtype)

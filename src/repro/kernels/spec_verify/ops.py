@@ -1,0 +1,18 @@
+"""Jitted public wrapper for the spec-verify kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.spec_verify.kernel import spec_verify_pallas
+
+
+@partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def spec_verify_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                          block_k: int = 128,
+                          interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return spec_verify_pallas(q, k, v, q_pos, k_pos, window=window,
+                              block_k=block_k, interpret=interpret)

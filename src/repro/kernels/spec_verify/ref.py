@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the speculative-verify attention kernel.
+
+Contract (decode/verify hot path):
+  q:     (B, T, Hq, D)   T = gamma+1 draft positions (T small)
+  k, v:  (B, S, Hk, D)   slot-based cache, S = cache length
+  q_pos: (B, T) int32    absolute position of each query token
+  k_pos: (B, S) int32    absolute position held by each cache slot,
+                         -1 = empty slot (invalid)
+Masking: valid & causal (k_pos <= q_pos) & optional sliding window.
+Rows whose mask is empty output 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spec_verify_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
+    B, T, Hq, D = q.shape
+    S, Hk = k.shape[1], k.shape[2]
+    rep = Hq // Hk
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bthd,bshd->bhts", qf, kf)
+    qp = q_pos[:, None, :, None]
+    kp = k_pos[:, None, None, :]
+    mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhts,bshd->bthd", p / jnp.maximum(l, 1e-30), vf)
+    return o.astype(q.dtype)

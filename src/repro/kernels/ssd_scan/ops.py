@@ -1,0 +1,73 @@
+"""Public SSD op: Pallas intra-chunk kernel + jnp inter-chunk recurrence.
+
+Drop-in signature-compatible with :func:`repro.models.mamba2.ssd` (the
+oracle), so the model stack can be switched to the kernel path with one
+flag on the TPU target.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(x, dt, A, Bm, Cm, init_state, chunk: int,
+                   interpret: bool | None = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """x: (b,T,nh,P); dt: (b,T,nh); A: (nh,); Bm/Cm: (b,T,G,N).
+
+    Returns (y (b,T,nh,P), final_state (b,nh,P,N)) — same contract as the
+    jnp reference.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, T, nh, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, Q, nh, P).astype(f32)
+    dtc = dt.reshape(b, nc, Q, nh).astype(f32)
+    Bc = Bm.reshape(b, nc, Q, G, N).astype(f32)
+    Cc = Cm.reshape(b, nc, Q, G, N).astype(f32)
+    dAc = dtc * A.astype(f32)[None, None, None, :]
+
+    # Pallas: all intra-chunk terms in one sweep
+    y_diag, S_local, cs = ssd_intra_chunk_pallas(
+        xc, dtc, dAc, Bc, Cc, n_groups=G, interpret=interpret)
+    # S_local: (b,nc,nh,N,P); cs: (b,nc,Q,nh)
+
+    Hg = nh // G
+    Ch = jnp.repeat(Cc, Hg, axis=3)                # (b,nc,Q,nh,N)
+    decay_in = jnp.exp(cs)                         # (b,nc,Q,nh)
+    total = jnp.exp(cs[:, :, Q - 1, :])            # (b,nc,nh)
+
+    S0 = (jnp.zeros((b, nh, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(S, inp):
+        yd, Sl, Chc, dci, tot = inp
+        # carried-state output: (b,Q,nh,N) x (b,nh,P,N) -> (b,Q,nh,P)
+        y_off = jnp.einsum("bqhn,bhpn->bqhp", Chc, S) * dci[..., None]
+        S_new = tot[:, :, None, None] * S + Sl.transpose(0, 1, 3, 2)
+        return S_new, yd + y_off
+
+    xs = (y_diag.transpose(1, 0, 2, 3, 4), S_local.transpose(1, 0, 2, 3, 4),
+          Ch.transpose(1, 0, 2, 3, 4), decay_in.transpose(1, 0, 2, 3),
+          total.transpose(1, 0, 2))
+    S_f, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, Tp, nh, P)[:, :T]
+    return y.astype(x.dtype), S_f

@@ -1,0 +1,7 @@
+"""Oracle for the SSD chunk-scan kernel = the runtime jnp implementation.
+
+`repro.models.mamba2.ssd` is the chunked state-space-duality reference the
+whole model stack runs on; the Pallas kernel must match it exactly (same
+chunking, same f32 accumulation).
+"""
+from repro.models.mamba2 import ssd as ssd_ref  # noqa: F401

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes with 512 placeholder host devices.
+
+Per pair it records, from the compiled artifact:
+  * memory_analysis  — bytes per device (proves the sharding fits)
+  * cost_analysis    — HLO FLOPs + bytes accessed (roofline numerator)
+  * collective bytes — parsed from the compiled HLO text per collective
+                       kind (roofline's third term)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out results/dryrun
+Writes one JSON per pair so a crashed/slow pair never loses prior results.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+# --- HLO collective parsing --------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op, by kind.
+
+    Shapes in the compiled (SPMD-partitioned) HLO are per-device; the
+    roofline's collective term uses per-device bytes through the link, so
+    result bytes are the right unit (all-gather result = full gathered
+    shard set received; all-reduce counted once ~ 2x(N-1)/N x bytes on a
+    ring — we report raw result bytes and fold ring factors into the
+    roofline formulas).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start|-done)?\(", ls)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue            # avoid double count of async pairs
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+# --- per-pair dry run ---------------------------------------------------------
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             compile_: bool = True, unroll: bool = True,
+             seq_shard_prefill: bool = False, remat_policy: str = "none",
+             verify_gamma: int = 0, serve_bf16: bool = False) -> dict:
+    import jax
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_pair
+    from repro.models.transformer import set_scan_unroll
+
+    # XLA cost_analysis counts a while body once; unroll layer scans so
+    # FLOPs/bytes/collective counts are exact (roofline pass).  The
+    # multi-pod pass keeps the compact scan (lowering proof only).
+    set_scan_unroll(unroll)
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = lower_pair(cfg, shape, mesh,
+                         seq_shard_prefill=seq_shard_prefill,
+                         remat_policy=remat_policy,
+                         verify_gamma=verify_gamma,
+                         serve_bf16=serve_bf16)
+    t_lower = time.time() - t0
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "multi_pod": multi_pod, "mesh": dict(mesh.shape),
+        "unrolled": unroll,
+        "perf": {"seq_shard_prefill": seq_shard_prefill,
+                 "remat_policy": remat_policy,
+                 "verify_gamma": verify_gamma,
+                 "serve_bf16": serve_bf16},
+        "lower_seconds": round(t_lower, 1),
+    }
+    if compile_:
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_seconds"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+            "transcendentals": ca.get("transcendentals"),
+        }
+        rec["collectives"] = collective_bytes(compiled.as_text())
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep layer scans (fast compile, approximate "
+                         "cost analysis); default for multi-pod")
+    ap.add_argument("--seq-shard-prefill", action="store_true",
+                    help="§Perf 1: Megatron-SP residual during prefill")
+    ap.add_argument("--remat-policy", default="none",
+                    choices=["none", "dots"],
+                    help="§Perf 3: remat policy for the train step")
+    ap.add_argument("--verify-gamma", type=int, default=0,
+                    help="§Perf 2: decode shapes lower the γ-token "
+                         "verify step instead of 1-token serve_step")
+    ap.add_argument("--serve-bf16", action="store_true",
+                    help="§Perf 1d/2a: bf16 weight specs for inference "
+                         "steps (TPU win; host bytes regress)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output filenames (perf variants)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import INPUT_SHAPES, list_archs
+    os.makedirs(args.out, exist_ok=True)
+
+    pairs = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                pairs.append((a, s, mp))
+
+    failures = 0
+    for arch, shape, mp in pairs:
+        tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+        if args.tag:
+            tag += f"__{args.tag}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            unroll = (not args.no_unroll) and not mp
+            rec = run_pair(arch, shape, multi_pod=mp, unroll=unroll,
+                           seq_shard_prefill=args.seq_shard_prefill,
+                           remat_policy=args.remat_policy,
+                           verify_gamma=args.verify_gamma,
+                           serve_bf16=args.serve_bf16)
+            rec["status"] = "ok"
+        except Exception as e:  # noqa: BLE001 - report-and-continue CLI
+            rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            failures += 1
+            print(f"  FAILED: {e}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["status"] == "ok":
+            c = rec.get("cost", {})
+            m = rec.get("memory", {})
+            col = rec.get("collectives", {})
+            print(f"  ok lower={rec['lower_seconds']}s "
+                  f"compile={rec.get('compile_seconds')}s "
+                  f"flops={c.get('flops'):.3g} "
+                  f"peak={(m.get('peak_bytes') or 0)/2**30:.2f}GiB "
+                  f"coll={col.get('total_bytes', 0)/2**30:.3f}GiB",
+                  flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

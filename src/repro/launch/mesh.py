@@ -1,0 +1,40 @@
+"""Production mesh construction + sharding contexts.
+
+``make_production_mesh`` is a function (never module-level) so importing
+this module touches no jax device state — the dry-run sets
+``xla_force_host_platform_device_count=512`` *before* first jax init.
+
+Single pod: (data=16, model=16) = 256 chips (one TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+pure data parallelism (gradient all-reduce crosses DCN/ICI between pods).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_shard_ctx(mesh: Mesh, *, train: bool,
+                   seq_shard_prefill: bool = False) -> ShardCtx:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ShardCtx(mesh=mesh, dp=dp, tp="model",
+                    fsdp="data" if train else None,
+                    seq_shard=train or seq_shard_prefill)
+
+
+def small_mesh(n_model: Optional[int] = None) -> Mesh:
+    """Debug mesh over whatever devices exist (tests, CPU)."""
+    n = len(jax.devices())
+    m = n_model or 1
+    return jax.make_mesh((n // m, m), ("data", "model"))

@@ -1,0 +1,263 @@
+"""Jittable step functions + sharding specs for the production meshes.
+
+One module builds everything the dry-run, trainer and server lower:
+
+* ``train_step``   — GRPO loss + grad + AdamW update (donated state)
+* ``prefill_step`` — full-sequence cache build
+* ``serve_step``   — ONE new token against a seq_len KV cache (decode
+                     shapes lower this, per the assignment spec)
+
+Shardings: parameters via the logical-axis rules (TP on ``model``, FSDP
+rows on ``data`` in train mode), activations batch→(pod,data) and
+residual-seq→model (train), KV cache batch→data and cache-seq→model
+(always divisible, scales to any GQA count).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, for_shape
+from repro.models import forward, init_cache, init_params, input_specs
+from repro.sharding import ShardCtx, logical_to_spec, param_rules
+from repro.training.grpo import GRPOConfig, grpo_loss
+from repro.training.optim import OptConfig, OptState, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(cfg: ModelConfig, sctx: ShardCtx, *, train: bool,
+                    dtype=None):
+    """(ShapeDtypeStruct tree with shardings, axes tree).
+
+    ``dtype`` overrides floating param leaves (serving keeps bf16 weights
+    — halves weight streaming and weight all-gathers vs the f32 training
+    master copy; the checkpoint engine casts at weight-update time)."""
+    box = {}
+
+    def only_params(key):
+        p, a = init_params(cfg, key)
+        box["axes"] = a          # plain-Python tree, captured via closure
+        return p
+
+    params_s = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    axes = box["axes"]
+    rules = param_rules(sctx, train)
+
+    def one(spec, ax):
+        ps = logical_to_spec(ax, rules, sctx.mesh, spec.shape)
+        dt = spec.dtype
+        if dtype is not None and jnp.issubdtype(dt, jnp.floating):
+            dt = dtype
+        return jax.ShapeDtypeStruct(
+            spec.shape, dt,
+            sharding=NamedSharding(sctx.mesh, ps))
+
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(one, params_s, axes, is_leaf=is_ax), axes
+
+
+def _guard(size: int, axes, mesh: Mesh):
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if size % n == 0 and n > 1:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def batch_spec_axes(sctx: ShardCtx, batch: int):
+    return _guard(batch, tuple(sctx.dp), sctx.mesh)
+
+
+def cache_shardings(cfg: ModelConfig, sctx: ShardCtx, cache_tree):
+    """Sharding for each cache leaf, keyed by leaf name."""
+    mesh = sctx.mesh
+    dp = tuple(sctx.dp)
+    tp = sctx.tp
+
+    def spec_for(key: str, shape) -> P:
+        b_ax = lambda i: _guard(shape[i], dp, mesh)
+        t_ax = lambda i: _guard(shape[i], tp, mesh)
+        if key in ("k", "v"):            # (L, B, S, Hkv, hd)
+            return P(None, b_ax(1), t_ax(2), None, None)
+        if key == "slot_pos":            # (B, S)
+            return P(b_ax(0), t_ax(1))
+        if key in ("cross_k", "cross_v"):  # (L, B, Tm, Hkv, hd)
+            return P(None, b_ax(1), None, None, None)
+        if key == "conv":                # (L, B, K-1, ch)
+            return P(None, b_ax(1), None, t_ax(3))
+        if key == "ssm":                 # (L, B, nh, P, N)
+            return P(None, b_ax(1), t_ax(2), None, None)
+        return P()
+
+    return {k: NamedSharding(mesh, spec_for(k, v.shape))
+            for k, v in cache_tree.items()}
+
+
+def batch_shardings(cfg: ModelConfig, sctx: ShardCtx, shape: InputShape,
+                    specs: dict):
+    """Shardings for the input_specs tree of one (arch, shape) pair."""
+    mesh = sctx.mesh
+    out = {}
+    for key, spec in specs.items():
+        if key == "cache":
+            out[key] = cache_shardings(cfg, sctx, spec)
+            continue
+        b = _guard(spec.shape[0], tuple(sctx.dp), mesh)
+        if key in ("tokens", "loss_mask", "old_logprobs", "positions"):
+            out[key] = NamedSharding(mesh, P(b, None))
+        elif key == "advantages":
+            out[key] = NamedSharding(mesh, P(b))
+        elif key in ("image_embeds", "audio_frames"):
+            out[key] = NamedSharding(mesh, P(b, None, None))
+        else:
+            out[key] = NamedSharding(mesh, P())
+    return out
+
+
+def with_shardings(specs: dict, shardings: dict) -> dict:
+    def one(s, sh):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree.map(one, specs, shardings)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, sctx: ShardCtx,
+                     gcfg: GRPOConfig = GRPOConfig(),
+                     ocfg: OptConfig = OptConfig()):
+    def train_step(params, opt_state: OptState, batch: dict):
+        def loss_fn(p):
+            return grpo_loss(cfg, p, batch, gcfg=gcfg, sctx=sctx)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = adamw_update(ocfg, params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, sctx: ShardCtx):
+    # contiguous_update: the production prefill contract is that every row
+    # writes cache slots [start, start+T) — a scalar-start DUS the SPMD
+    # partitioner handles in place.  The general per-row scatter forces
+    # full-batch K/V replication (§Perf 1c; engine-tier chunked prefill
+    # with per-slot offsets keeps the general path).
+    def prefill_step(params, tokens, positions, cache, **aux):
+        _, new_cache, _ = forward(cfg, params, tokens, positions, cache,
+                                  aux_inputs=aux or None, sctx=sctx,
+                                  contiguous_update=True)
+        return new_cache
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, sctx: ShardCtx):
+    """Decode: ONE token appended to a seq_len cache, greedy sample."""
+    def serve_step(params, tokens, positions, cache):
+        logits, new_cache, _ = forward(cfg, params, tokens, positions,
+                                       cache, sctx=sctx)
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32), new_cache
+
+    return serve_step
+
+
+def build_verify_step(cfg: ModelConfig, sctx: ShardCtx):
+    """Speculative verify: γ+1 candidate tokens per sequence scored in one
+    forward (tokens (B, γ+1)); returns the target's greedy token at every
+    position (acceptance = longest matching prefix, computed host-side)
+    plus the updated cache.  This is the paper's lever for memory-bound
+    decode: per *generated* token, weight+KV streaming is amortised by
+    E[accepted+bonus] ≈ 2.5 at γ=8 with grouped CST drafts (Table 2)."""
+    def verify_step(params, tokens, positions, cache):
+        logits, new_cache, _ = forward(cfg, params, tokens, positions,
+                                       cache, sctx=sctx)
+        target = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        return target.astype(jnp.int32), new_cache
+
+    return verify_step
+
+
+def opt_state_specs(param_specs):
+    mu = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                       sharding=s.sharding), param_specs)
+    nu = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                       sharding=s.sharding), param_specs)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return OptState(step=step, mu=mu, nu=nu)
+
+
+def lower_pair(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               *, gcfg: GRPOConfig = GRPOConfig(),
+               ocfg: OptConfig = OptConfig(),
+               seq_shard_prefill: bool = False,
+               remat_policy: str = "none",
+               verify_gamma: int = 0,
+               serve_bf16: bool = False):
+    """Lower the right step for one (arch x input-shape) on a mesh.
+
+    Perf knobs (§Perf; all default off = paper-faithful baseline):
+      seq_shard_prefill — Megatron-SP residual sharding during prefill
+      remat_policy      — "none" (full remat) | "dots" (save matmul outs)
+      verify_gamma      — decode shapes lower the γ-token verify step
+      serve_bf16        — inference steps take bf16 weight specs (halves
+                          weight streaming on TPU; the host backend
+                          re-promotes bf16 dots to f32, so host-measured
+                          bytes regress — see §Perf 1d/2a)
+    """
+    from repro.launch.mesh import make_shard_ctx
+    from repro.models.transformer import set_remat_policy
+    cfg = for_shape(cfg, shape)
+    train = shape.mode == "train"
+    set_remat_policy(remat_policy)
+    sctx = make_shard_ctx(mesh, train=train,
+                          seq_shard_prefill=seq_shard_prefill)
+    specs = input_specs(cfg, shape, verify_gamma=verify_gamma)
+    serve_dtype = jnp.dtype(cfg.dtype) if (serve_bf16 and not train) \
+        else None
+    pspecs, _ = param_shardings(cfg, sctx, train=train, dtype=serve_dtype)
+    bshard = batch_shardings(cfg, sctx, shape, specs)
+    batch_in = with_shardings(specs, bshard)
+
+    with mesh:
+        if shape.mode == "train":
+            step = build_train_step(cfg, sctx, gcfg, ocfg)
+            ostate = opt_state_specs(pspecs)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                pspecs, ostate, batch_in)
+        elif shape.mode == "prefill":
+            step = build_prefill_step(cfg, sctx)
+            cache_in = batch_in.pop("cache")
+            aux = {k: batch_in.pop(k) for k in list(batch_in)
+                   if k in ("image_embeds", "audio_frames")}
+            lowered = jax.jit(step, donate_argnums=(3,)).lower(
+                pspecs, batch_in["tokens"], batch_in["positions"],
+                cache_in, **aux)
+        else:  # decode
+            step = (build_verify_step(cfg, sctx) if verify_gamma
+                    else build_serve_step(cfg, sctx))
+            cache_in = batch_in.pop("cache")
+            lowered = jax.jit(step, donate_argnums=(3,)).lower(
+                pspecs, batch_in["tokens"], batch_in["positions"],
+                cache_in)
+    return lowered

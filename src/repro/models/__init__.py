@@ -1,0 +1,18 @@
+from repro.models.model import (
+    build_cross_cache,
+    cache_len_for,
+    cache_specs,
+    encode_audio,
+    forward,
+    init_cache,
+    init_params,
+    input_specs,
+    make_model,
+    modality_inputs,
+)
+
+__all__ = [
+    "build_cross_cache", "cache_len_for", "cache_specs", "encode_audio",
+    "forward", "init_cache", "init_params", "input_specs", "make_model",
+    "modality_inputs",
+]

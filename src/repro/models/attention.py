@@ -1,0 +1,130 @@
+"""Attention: GQA, sliding-window, cache-aware masking.
+
+Two execution paths share one mask definition:
+  * ``plain``    — materialises (Tq, Tk) scores; used for decode/verify and
+                   short sequences.
+  * ``flash``    — pure-JAX kv-chunked online-softmax scan; used for long
+                   prefill/train sequences (memory O(Tq * block)).  The Pallas
+                   TPU kernels in repro.kernels implement the same contract
+                   for the hardware target and are validated against these.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+FLASH_MIN_TQ = 1024
+FLASH_KV_BLOCK = 1024
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int,
+          kv_valid: Optional[jax.Array]) -> jax.Array:
+    """(B,Tq),(B,Tk) -> (B,Tq,Tk) boolean allowed-mask."""
+    qp = q_pos[:, :, None]
+    kp = k_pos[:, None, :]
+    m = kp <= qp if causal else jnp.ones(
+        (q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), bool)
+    if window:
+        m = m & (kp > qp - window)
+    if kv_valid is not None:
+        m = m & kv_valid[:, None, :]
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              q_pos: jax.Array, k_pos: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              kv_valid: Optional[jax.Array] = None,
+              softcap: float = 0.0) -> jax.Array:
+    """q: (B,Tq,Hq,D); k,v: (B,Tk,Hk,D); positions absolute. -> (B,Tq,Hq,D)."""
+    B, Tq, Hq, D = q.shape
+    Tk, Hk = k.shape[1], k.shape[2]
+    assert Hq % Hk == 0, (Hq, Hk)
+    if Tq >= FLASH_MIN_TQ and Tk >= 2 * FLASH_KV_BLOCK:
+        return _flash(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                      kv_valid=kv_valid, softcap=softcap)
+    return _plain(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                  kv_valid=kv_valid, softcap=softcap)
+
+
+def _scores(qg, k, softcap):
+    """qg: (B,Tq,Hk,G,D) f32-scaled; k: (B,Tk,Hk,D) -> (B,Hk,G,Tq,Tk) f32."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _split_heads(q, Hk):
+    B, Tq, Hq, D = q.shape
+    G = Hq // Hk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    return (q.astype(jnp.float32) * scale).reshape(B, Tq, Hk, G, D)
+
+
+def _plain(q, k, v, q_pos, k_pos, *, causal, window, kv_valid, softcap):
+    B, Tq, Hq, D = q.shape
+    Hk = k.shape[2]
+    qg = _split_heads(q, Hk)
+    s = _scores(qg, k, softcap)                               # (B,Hk,G,Tq,Tk)
+    m = _mask(q_pos, k_pos, causal=causal, window=window, kv_valid=kv_valid)
+    s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no allowed key (padding) -> zero output
+    any_valid = jnp.any(m, axis=-1)[:, None, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, Hq, D).astype(q.dtype)
+
+
+def _flash(q, k, v, q_pos, k_pos, *, causal, window, kv_valid, softcap):
+    """kv-chunked online softmax (scan over key blocks)."""
+    B, Tq, Hq, D = q.shape
+    Tk, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    blk = FLASH_KV_BLOCK
+    pad = (-Tk) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        pad_valid = jnp.pad(
+            kv_valid if kv_valid is not None
+            else jnp.ones((B, Tk), bool), ((0, 0), (0, pad)))
+        kv_valid = pad_valid
+    elif kv_valid is None:
+        kv_valid = jnp.ones((B, Tk), bool)
+    nk = k.shape[1] // blk
+    qg = _split_heads(q, Hk)                                   # (B,Tq,Hk,G,D)
+
+    kb = k.reshape(B, nk, blk, Hk, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, blk, Hk, D).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(B, nk, blk).transpose(1, 0, 2)
+    mb = kv_valid.reshape(B, nk, blk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kc, vc, pc, mc = xs
+        s = _scores(qg, kc, softcap)                           # (B,Hk,G,Tq,blk)
+        allow = _mask(q_pos, pc, causal=causal, window=window, kv_valid=mc)
+        s = jnp.where(allow[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + o
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hk, G, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hk, G, Tq, D), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb, mb))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]             # (B,Hk,G,Tq,D)
+    out = jnp.where((l_f > 0)[..., None], out, 0.0)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, D).astype(q.dtype)

@@ -1,0 +1,149 @@
+"""Shared building blocks: parameter builder with logical sharding axes,
+norms, RoPE, activations.
+
+Parameters are plain nested dicts of jnp arrays (pytrees).  Every leaf has a
+parallel *logical axes* annotation (a tuple of strings, one per dim) kept in
+an identically-shaped tree; launch/sharding.py maps logical axes onto mesh
+axes.  Layer stacks are built with vmap(init) so they can be scanned.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+Axes = dict
+
+# ---------------------------------------------------------------------------
+# parameter builder
+# ---------------------------------------------------------------------------
+
+
+class Builder:
+    """Accumulates (params, logical-axes) trees."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, name: str, shape: tuple, axes: tuple,
+              init: str = "normal", scale: Optional[float] = None) -> None:
+        assert len(shape) == len(axes), (name, shape, axes)
+        key = self._next_key()
+        if init == "normal":
+            s = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+            val = jax.random.normal(key, shape, self.dtype) * s
+        elif init == "zeros":
+            val = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, self.dtype)
+        elif init == "embed":
+            val = jax.random.normal(key, shape, self.dtype) * 0.02
+        else:
+            raise ValueError(init)
+        self.params[name] = val
+        self.axes[name] = axes
+
+    def sub(self, name: str, fn: Callable[["Builder"], None]) -> None:
+        b = Builder(self._next_key(), self.dtype)
+        fn(b)
+        self.params[name] = b.params
+        self.axes[name] = b.axes
+
+    def stack(self, name: str, n: int, fn: Callable[["Builder"], None]) -> None:
+        """n stacked copies of a sub-module, leading 'layers' axis (scan-able)."""
+        keys = jax.random.split(self._next_key(), n)
+
+        def init_one(key):
+            b = Builder(key, self.dtype)
+            fn(b)
+            return b.params
+
+        # build the axes tree once (no tracing needed)
+        b0 = Builder(jax.random.PRNGKey(0), self.dtype)
+        fn(b0)
+        self.params[name] = jax.vmap(init_one)(keys)
+        self.axes[name] = jax.tree.map(
+            lambda a: ("layers",) + a,
+            b0.axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x),
+        )
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_count(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def lin(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Matmul with the weight cast to the activation dtype (bf16 compute)."""
+    return x @ w.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def gated_rms_norm(x: jax.Array, gate: jax.Array, weight: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """Mamba2's RMSNorm(x * silu(gate))."""
+    return rms_norm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype),
+                    weight, eps)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g) * u) @ w_down
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, D); positions: broadcastable to (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def token_logprobs(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    return -softmax_cross_entropy(logits, tokens)

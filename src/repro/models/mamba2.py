@@ -1,0 +1,187 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan formulation.
+
+Follows the minimal SSD recurrence of arXiv:2405.21060:
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . h_t + D * x_t
+computed chunk-parallel: intra-chunk quadratic term + inter-chunk state
+recurrence carried by lax.scan.  The same function serves training (full
+sequence, zero init state), chunked prefill (carry state), and decode/verify
+(T small, chunk = T).
+
+The Pallas kernel in repro.kernels.ssd_scan implements the intra-chunk term
+for the TPU target; this file is the reference/runtime path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Builder, gated_rms_norm, lin
+
+
+def init_mamba_block(b: Builder, cfg) -> None:
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = di + 2 * G * N
+    b.param("ln", (d,), ("norm",), init="ones")
+    b.param("in_proj", (d, 2 * di + 2 * G * N + nh), ("embed", "ssm_in"))
+    b.param("conv_w", (cfg.ssm_conv, conv_ch), ("conv", "ssm_in"),
+            scale=1.0 / cfg.ssm_conv ** 0.5)
+    b.param("conv_b", (conv_ch,), ("ssm_in",), init="zeros")
+    b.param("A_log", (nh,), ("norm",), init="zeros")      # A = -exp(A_log)=-1
+    b.param("dt_bias", (nh,), ("norm",), init="zeros")
+    b.param("D", (nh,), ("norm",), init="ones")
+    b.param("gn", (di,), ("ssm_in",), init="ones")
+    b.param("out_proj", (di, d), ("ssm_in", "embed"),
+            scale=1.0 / di ** 0.5)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<k<=i} dA_k (i>=j)."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+        Cm: jax.Array, init_state: Optional[jax.Array], chunk: int
+        ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x:  (b, T, nh, P)    values
+    dt: (b, T, nh)       positive step sizes (softplus already applied)
+    A:  (nh,)            negative
+    Bm, Cm: (b, T, G, N) input/output projections (G groups share heads)
+    init_state: (b, nh, P, N) or None
+    returns y (b, T, nh, P), final_state (b, nh, P, N)
+    """
+    b, T, nh, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Hg = nh // G
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))          # dt=0 -> no-op steps
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, Q, nh, Pd).astype(f32)
+    dtc = dt.reshape(b, nc, Q, nh).astype(f32)
+    Bc = Bm.reshape(b, nc, Q, G, N).astype(f32)
+    Cc = Cm.reshape(b, nc, Q, G, N).astype(f32)
+    dA = dtc * A.astype(f32)[None, None, None, :]      # (b,nc,Q,nh)
+
+    S0 = (jnp.zeros((b, nh, Pd, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def chunk_step(S, inp):
+        xq, dtq, Bq, Cq, dAq = inp                     # (b,Q,...) slices
+        # broadcast groups to heads
+        Bh = jnp.repeat(Bq, Hg, axis=2)                # (b,Q,nh,N)
+        Ch = jnp.repeat(Cq, Hg, axis=2)
+        cs = jnp.cumsum(dAq, axis=1)                   # (b,Q,nh) inclusive
+        # --- intra-chunk (quadratic) ---
+        L = jnp.exp(_segsum(dAq.transpose(0, 2, 1)))   # (b,nh,Q,Q)
+        CB = jnp.einsum("bihn,bjhn->bhij", Ch, Bh)     # (b,nh,Q,Q)
+        W = CB * L * dtq.transpose(0, 2, 1)[:, :, None, :]
+        y_diag = jnp.einsum("bhij,bjhp->bihp", W, xq)
+        # --- contribution of incoming state ---
+        y_off = jnp.einsum("bihn,bhpn->bihp", Ch, S) \
+            * jnp.exp(cs).transpose(0, 1, 2)[..., None]
+        # --- new state ---
+        total = cs[:, -1, :]                           # (b,nh)
+        decay_out = jnp.exp(total[:, None, :] - cs)    # (b,Q,nh)
+        S_local = jnp.einsum("bjhn,bjhp,bjh->bhpn", Bh, xq,
+                             dtq * decay_out)
+        S_new = jnp.exp(total)[:, :, None, None] * S + S_local
+        return S_new, y_diag + y_off
+
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          Bc.transpose(1, 0, 2, 3, 4), Cc.transpose(1, 0, 2, 3, 4),
+          dA.transpose(1, 0, 2, 3))
+    S_f, ys = jax.lax.scan(chunk_step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, Tp, nh, Pd)[:, :T]
+    return y.astype(x.dtype), S_f
+
+
+def causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                cache: Optional[jax.Array],
+                token_mask: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (b,T,ch); w: (K,ch); cache: (b,K-1,ch).
+
+    token_mask (b,T) marks valid tokens; invalid tokens are always a row
+    *suffix* (verify padding / inactive batch rows).  The new cache window
+    ends at each row's last valid token so masked tokens never pollute the
+    rolling conv state.
+    """
+    K = w.shape[0]
+    b, T, ch = x.shape
+    if cache is None:
+        cache = jnp.zeros((b, K - 1, ch), x.dtype)
+    if token_mask is not None:
+        x = x * token_mask[..., None].astype(x.dtype)
+    xin = jnp.concatenate([cache, x], axis=1)          # (b, T+K-1, ch)
+    out = jnp.zeros((b, T, ch), jnp.float32)
+    for i in range(K):
+        out = out + xin[:, i:i + T].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    out = out + bias.astype(jnp.float32)
+    if K > 1:
+        if token_mask is None:
+            new_cache = xin[:, -(K - 1):]
+        else:
+            n_valid = jnp.sum(token_mask.astype(jnp.int32), axis=1)  # (b,)
+            idx = n_valid[:, None] + jnp.arange(K - 1)[None, :]      # (b,K-1)
+            new_cache = jnp.take_along_axis(xin, idx[..., None], axis=1)
+    else:
+        new_cache = cache
+    return out.astype(x.dtype), new_cache
+
+
+def mamba_block(p: dict, x: jax.Array, cfg,
+                conv_cache: Optional[jax.Array],
+                ssm_state: Optional[jax.Array],
+                token_dt_mask: Optional[jax.Array] = None):
+    """x: (b,T,d) -> (y, new_conv_cache, new_ssm_state).
+
+    token_dt_mask (b,T): 0 for padding rows — forces dt=0 so padded tokens
+    neither update the state nor produce output (no-op steps).
+    """
+    b, T, d = x.shape
+    di, G, N = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    nh, Pd = cfg.ssm_nheads, cfg.ssm_head_dim
+
+    from repro.models.common import rms_norm
+    xn = rms_norm(x, p["ln"], cfg.rms_eps)
+    zxbcdt = lin(xn, p["in_proj"])                         # (b,T, 2di+2GN+nh)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * G * N]
+    dt_raw = zxbcdt[..., 2 * di + 2 * G * N:]
+    conv_out, new_conv = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_cache,
+                                     token_dt_mask)
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :di]
+    Bm = xbc[..., di:di + G * N].reshape(b, T, G, N)
+    Cm = xbc[..., di + G * N:].reshape(b, T, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    if token_dt_mask is not None:
+        dt = dt * token_dt_mask[..., None].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, T, nh, Pd)
+    y, S_new = ssd(xh, dt, A, Bm, Cm, ssm_state, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) \
+        * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, T, di)
+    y = gated_rms_norm(y, z, p["gn"], cfg.rms_eps)
+    out = lin(y, p["out_proj"])
+    return x + out, new_conv, S_new

@@ -1,0 +1,91 @@
+"""Public model API: init / forward / cache / input_specs.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins for every model input
+of a given (config x input-shape) pair — used by the multi-pod dry-run
+(lower + compile with no allocation) and by tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig, for_shape
+from repro.models import transformer
+from repro.models.transformer import (build_cross_cache, cache_len_for,
+                                      encode_audio, forward, init_cache,
+                                      init_params)
+
+
+def make_model(cfg: ModelConfig, key: Optional[jax.Array] = None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return init_params(cfg, key)
+
+
+def modality_inputs(cfg: ModelConfig, batch: int, as_spec: bool = False):
+    """Stubbed modality-frontend outputs (DESIGN.md: the one allowed stub).
+
+    VLM: projected vision-encoder patch embeddings; audio: post-conv mel
+    frame embeddings.  Returns {} for text-only archs.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.arch_type == "vlm":
+        shape = (batch, cfg.num_image_tokens, cfg.d_model)
+        out["image_embeds"] = (jax.ShapeDtypeStruct(shape, dt) if as_spec
+                               else jnp.zeros(shape, dt))
+    elif cfg.arch_type == "audio":
+        shape = (batch, cfg.num_audio_frames, cfg.d_model)
+        out["audio_frames"] = (jax.ShapeDtypeStruct(shape, dt) if as_spec
+                               else jnp.zeros(shape, dt))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                verify_gamma: int = 0) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x input-shape) pair.
+
+    ``verify_gamma > 0`` turns a decode shape into the speculative-verify
+    step: γ+1 candidate tokens scored per sequence per forward (the
+    paper's SD lever for the memory-bound decode phase).
+    """
+    cfg = for_shape(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    def tok(*s):
+        return jax.ShapeDtypeStruct(s, i32)
+
+    specs: dict = {}
+    if shape.mode == "train":
+        specs["tokens"] = tok(B, S)
+        specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), f32)
+        specs["advantages"] = jax.ShapeDtypeStruct((B,), f32)
+        specs["old_logprobs"] = jax.ShapeDtypeStruct((B, S), f32)
+        specs.update(modality_inputs(cfg, B, as_spec=True))
+    elif shape.mode == "prefill":
+        specs["tokens"] = tok(B, S)
+        specs["positions"] = tok(B, S)
+        specs.update(modality_inputs(cfg, B, as_spec=True))
+        specs["cache"] = cache_specs(cfg, B, S)
+    elif shape.mode == "decode":
+        t = verify_gamma + 1
+        specs["tokens"] = tok(B, t)
+        specs["positions"] = tok(B, t)
+        specs["cache"] = cache_specs(cfg, B, S)
+    else:
+        raise ValueError(shape.mode)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+__all__ = [
+    "make_model", "forward", "init_cache", "init_params", "input_specs",
+    "cache_specs", "modality_inputs", "build_cross_cache", "encode_audio",
+    "cache_len_for",
+]

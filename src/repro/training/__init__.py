@@ -1,0 +1,12 @@
+from repro.training.checkpoint import WeightUpdater, restore, save
+from repro.training.grpo import (GRPOConfig, group_advantages, grpo_loss,
+                                 pack_experience)
+from repro.training.loop import IterStats, RLConfig, RLTrainer
+from repro.training.optim import (OptConfig, OptState, adamw_update,
+                                  init_opt_state)
+
+__all__ = [
+    "WeightUpdater", "restore", "save", "GRPOConfig", "group_advantages",
+    "grpo_loss", "pack_experience", "IterStats", "RLConfig", "RLTrainer",
+    "OptConfig", "OptState", "adamw_update", "init_opt_state",
+]

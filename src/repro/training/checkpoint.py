@@ -1,0 +1,97 @@
+"""Checkpointing + weight-update plumbing.
+
+``save``/``restore`` serialize a params/opt-state pytree to a directory of
+``.npy`` leaves plus a JSON manifest (no orbax in the container; layout is
+deliberately flat so a Checkpoint-Engine-style broadcaster could mmap it).
+
+``WeightUpdater`` models the paper's weight-update phase: after each
+training step the new parameters are pushed to every inference instance.
+In-process this is a pytree swap (zero copy on one host); the
+``update_seconds`` estimate uses the broadcast model (bytes / link bw) so
+the phase-split benchmark can report realistic Table-1 numbers.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+    return tree
+
+
+def save(path: str, params, step: int = 0, extra: Optional[dict] = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for key, val in flat.items():
+        fname = key.replace("/", "__") + ".npy"
+        arr = np.asarray(val)
+        if arr.dtype.kind not in "fiub":
+            # bf16 etc: numpy can't round-trip extension dtypes in .npy —
+            # store the raw bits and record the real dtype in the manifest
+            arr = arr.view(np.uint8)
+        np.save(os.path.join(path, fname), arr)
+        manifest["leaves"][key] = {"file": fname,
+                                   "shape": list(val.shape),
+                                   "dtype": str(val.dtype)}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str) -> Tuple[dict, int]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for key, meta in manifest["leaves"].items():
+        arr = np.load(os.path.join(path, meta["file"]))
+        want = jnp.dtype(meta["dtype"])
+        if arr.dtype != want:
+            # raw-bits storage: view back per the manifest dtype
+            arr = np.ascontiguousarray(arr).view(want).reshape(
+                meta["shape"])
+        flat[key] = arr
+    return _unflatten(flat), manifest["step"]
+
+
+class WeightUpdater:
+    """Pushes fresh training weights to rollout instances (synchronous RL's
+    weight-update phase)."""
+
+    def __init__(self, instances: List, link_bw: float = 50e9):
+        self.instances = instances
+        self.link_bw = link_bw
+        self.updates = 0
+        self.modeled_seconds = 0.0
+
+    def push(self, params) -> float:
+        nbytes = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(params))
+        for inst in self.instances:
+            inst.params = params
+        self.updates += 1
+        t = nbytes / self.link_bw  # one broadcast stage
+        self.modeled_seconds += t
+        return t

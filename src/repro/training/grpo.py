@@ -1,0 +1,128 @@
+"""GRPO — Group Relative Policy Optimization (DeepSeekMath, §2.3 of the
+paper's background).
+
+For each prompt, G responses are sampled from the rollout policy; rewards
+are normalized *within the group* to get advantages:
+
+    A_i = (r_i - mean(r_group)) / (std(r_group) + eps)
+
+The policy loss is the clipped PPO surrogate per token, using the rollout
+logprobs as the old policy (strictly on-policy in Seer: rollout weights ==
+training weights at the start of the iteration, so ratio starts at 1).
+MoE models add the router load-balance aux loss.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+from repro.models.common import token_logprobs
+
+
+@dataclass(frozen=True)
+class GRPOConfig:
+    clip_eps: float = 0.2
+    kl_coef: float = 0.0           # optional KL-to-old penalty
+    aux_coef: float = 0.01         # MoE router load-balance coefficient
+    adv_eps: float = 1e-4
+    normalize_std: bool = True     # GRPO normalizes by group std
+
+
+def group_advantages(rewards: jax.Array, group_size: int,
+                     cfg: GRPOConfig = GRPOConfig()) -> jax.Array:
+    """rewards: (B,) with B = n_groups * group_size, group-major order.
+
+    Host-side (rewards come from the reward workers), so normalize in
+    float64: the (r - mean)/std cancellation is precision-critical when a
+    group's rewards are nearly constant."""
+    r = np.asarray(rewards, np.float64).reshape(-1, group_size)
+    mean = r.mean(axis=1, keepdims=True)
+    adv = r - mean
+    if cfg.normalize_std:
+        adv = adv / (r.std(axis=1, keepdims=True) + cfg.adv_eps)
+    return jnp.asarray(adv.reshape(-1), jnp.float32)
+
+
+def grpo_loss(cfg: ModelConfig, params, batch: dict, *,
+              gcfg: GRPOConfig = GRPOConfig(), sctx=None):
+    """batch: tokens (B,S) int32, loss_mask (B,S) f32 (1 on response
+    tokens), advantages (B,) f32, old_logprobs (B,S) f32.
+
+    tokens[:, t] predicts tokens[:, t+1]; loss_mask marks *predicted*
+    positions (shifted alignment done here).
+    """
+    tokens = batch["tokens"]
+    mask = batch["loss_mask"][:, 1:]
+    adv = batch["advantages"][:, None]
+    old_lp = batch["old_logprobs"][:, 1:]
+
+    aux_inputs = {k: v for k, v in batch.items()
+                  if k in ("image_embeds", "audio_frames")}
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    logits, _, aux = forward(cfg, params, tokens, positions,
+                             aux_inputs=aux_inputs or None,
+                             sctx=sctx, train=True)
+    lp = token_logprobs(logits[:, :-1], tokens[:, 1:])      # (B,S-1)
+
+    ratio = jnp.exp(lp - old_lp)
+    clipped = jnp.clip(ratio, 1.0 - gcfg.clip_eps, 1.0 + gcfg.clip_eps)
+    pg = -jnp.minimum(ratio * adv, clipped * adv)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (pg * mask).sum() / denom
+    if gcfg.kl_coef:
+        kl = (jnp.exp(old_lp - lp) - 1.0) - (old_lp - lp)
+        loss = loss + gcfg.kl_coef * (kl * mask).sum() / denom
+    if cfg.num_experts:
+        loss = loss + gcfg.aux_coef * aux
+    metrics = {
+        "pg_loss": (pg * mask).sum() / denom,
+        "aux_loss": aux,
+        "mean_ratio": (ratio * mask).sum() / denom,
+        "clip_frac": ((jnp.abs(ratio - 1.0) > gcfg.clip_eps) * mask).sum()
+        / denom,
+        "mean_adv": adv.mean(),
+    }
+    return loss, metrics
+
+
+def pack_experience(cfg: ModelConfig, responses: dict, prompts: dict,
+                    rewards: dict, logprobs: dict, group_size: int,
+                    max_len: int, *, gcfg: GRPOConfig = GRPOConfig(),
+                    pad_id: int = 0) -> dict:
+    """Build a fixed-shape training batch from rollout outputs.
+
+    responses/prompts/logprobs keyed by req_id; req order must be
+    group-major (g0.r0, g0.r1, ..., g1.r0, ...).
+    """
+    rids = sorted(responses, key=lambda k: (k.split(".r")[0],
+                                            int(k.split(".r")[1])))
+    B = len(rids)
+    tokens = np.full((B, max_len), pad_id, np.int32)
+    mask = np.zeros((B, max_len), np.float32)
+    old_lp = np.zeros((B, max_len), np.float32)
+    rew = np.zeros((B,), np.float32)
+    for i, rid in enumerate(rids):
+        seq = list(prompts[rid]) + list(responses[rid])
+        seq = seq[:max_len]
+        np_len = min(len(prompts[rid]), max_len)
+        tokens[i, :len(seq)] = seq
+        mask[i, np_len:len(seq)] = 1.0
+        lp = list(logprobs[rid])[:max(0, max_len - np_len)]
+        old_lp[i, np_len:np_len + len(lp)] = lp
+        rew[i] = rewards[rid]
+    adv = np.asarray(group_advantages(jnp.asarray(rew), group_size, gcfg))
+    return {
+        "tokens": jnp.asarray(tokens),
+        "loss_mask": jnp.asarray(mask),
+        "old_logprobs": jnp.asarray(old_lp),
+        "advantages": jnp.asarray(adv),
+        "rewards": jnp.asarray(rew),
+    }

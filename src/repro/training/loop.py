@@ -1,0 +1,172 @@
+"""The synchronous RL iteration loop (rollout → reward → experience →
+train → weight update) with Seer driving the rollout phase.
+
+This is the real-engine tier: every iteration generates actual tokens
+with the current policy via :class:`~repro.core.rollout.SeerRollout`,
+scores them with a programmatic task reward, builds a GRPO batch, takes
+one (or more) AdamW steps, and pushes the new weights to the instances —
+strictly on-policy, exactly the pipeline Seer preserves.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.request import Group, make_groups
+from repro.core.rollout import SeerRollout
+from repro.data.tasks import RewardWorker, Task
+from repro.models import init_params
+from repro.training.checkpoint import WeightUpdater, save
+from repro.training.grpo import GRPOConfig, grpo_loss, pack_experience
+from repro.training.optim import (OptConfig, OptState, adamw_update,
+                                  init_opt_state)
+
+
+@dataclass
+class RLConfig:
+    n_groups: int = 8
+    group_size: int = 4
+    max_new_tokens: int = 16
+    temperature: float = 1.0
+    iterations: int = 20
+    train_steps_per_iter: int = 1
+    seed: int = 0
+    policy: str = "seer"
+    spec_decode: bool = True
+    n_instances: int = 2
+    max_slots: int = 4
+    cache_len: int = 256
+    chunk_size: int = 64
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    log: Callable[[str], None] = print
+
+
+@dataclass
+class IterStats:
+    iteration: int
+    mean_reward: float
+    loss: float
+    rollout_seconds: float
+    train_seconds: float
+    weight_update_seconds: float
+    tokens: int
+    mean_acceptance: float
+    metrics: dict = field(default_factory=dict)
+
+
+def make_train_step(cfg: ModelConfig, gcfg: GRPOConfig, ocfg: OptConfig,
+                    sctx=None):
+    @jax.jit
+    def step(params, opt_state: OptState, batch: dict):
+        def loss_fn(p):
+            return grpo_loss(cfg, p, batch, gcfg=gcfg, sctx=sctx)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = adamw_update(ocfg, params, grads, opt_state)
+        metrics.update(om)
+        return params, opt_state, loss, metrics
+
+    return step
+
+
+class RLTrainer:
+    def __init__(self, cfg: ModelConfig, task: Task, rl: RLConfig,
+                 gcfg: GRPOConfig = GRPOConfig(),
+                 ocfg: Optional[OptConfig] = None, params=None):
+        self.cfg = cfg
+        self.task = task
+        self.rl = rl
+        self.gcfg = gcfg
+        self.ocfg = ocfg or OptConfig(
+            total_steps=rl.iterations * rl.train_steps_per_iter)
+        key = jax.random.PRNGKey(rl.seed)
+        self.params = params if params is not None \
+            else init_params(cfg, key)[0]
+        self.opt_state = init_opt_state(self.params)
+        self.train_step = make_train_step(cfg, gcfg, self.ocfg)
+        self.rollout = SeerRollout(
+            cfg, self.params, n_instances=rl.n_instances,
+            max_slots=rl.max_slots, cache_len=rl.cache_len,
+            chunk_size=rl.chunk_size, policy=rl.policy,
+            spec_decode=rl.spec_decode, base_seed=rl.seed)
+        self.updater = WeightUpdater(self.rollout.instances)
+        self.rewards = RewardWorker(task)
+        self.history: List[IterStats] = []
+
+    def _sample_groups(self, it: int) -> List[Group]:
+        rng = np.random.default_rng(self.rl.seed * 7919 + it)
+        prompts = [self.task.sample_prompt(rng)
+                   for _ in range(self.rl.n_groups)]
+        return make_groups(
+            prompts, self.rl.group_size,
+            max_new_tokens=self.rl.max_new_tokens,
+            temperature=self.rl.temperature,
+            stop_token=None, seed=self.rl.seed * 131 + it,
+            prefix=f"it{it}-g")
+
+    def run(self) -> List[IterStats]:
+        rl = self.rl
+        for it in range(rl.iterations):
+            # ---- rollout (Seer) --------------------------------------------
+            t0 = time.monotonic()
+            groups = self._sample_groups(it)
+            # fresh context/DGDS per iteration (the paper drops group state
+            # at iteration end; CSTs are iteration-scoped)
+            self.rollout.ctx = type(self.rollout.ctx)(
+                max_gen_length=rl.cache_len)
+            res = self.rollout.run(groups)
+            t_roll = time.monotonic() - t0
+
+            # ---- rewards (async backend drained here) ----------------------
+            prompts, responses, logprobs = {}, {}, {}
+            for g in groups:
+                for r in g.requests:
+                    prompts[r.req_id] = r.prompt
+                    responses[r.req_id] = r.generated
+                    logprobs[r.req_id] = r.logprobs
+                    self.rewards.submit(r.req_id, r.prompt, r.generated)
+            rewards = self.rewards.collect()
+
+            # ---- experience + training -------------------------------------
+            t1 = time.monotonic()
+            max_len = max(len(p) for p in prompts.values()) \
+                + rl.max_new_tokens
+            batch = pack_experience(
+                self.cfg, responses, prompts, rewards, logprobs,
+                rl.group_size, max_len, gcfg=self.gcfg)
+            loss = jnp.zeros(())
+            metrics: dict = {}
+            for _ in range(rl.train_steps_per_iter):
+                self.params, self.opt_state, loss, metrics = \
+                    self.train_step(self.params, self.opt_state, batch)
+            loss.block_until_ready()
+            t_train = time.monotonic() - t1
+
+            # ---- weight update ----------------------------------------------
+            t2 = time.monotonic()
+            self.updater.push(self.params)
+            t_upd = time.monotonic() - t2
+
+            mean_r = float(np.mean(list(rewards.values())))
+            st = IterStats(
+                iteration=it, mean_reward=mean_r, loss=float(loss),
+                rollout_seconds=t_roll, train_seconds=t_train,
+                weight_update_seconds=t_upd, tokens=res.stats.tokens,
+                mean_acceptance=res.stats.mean_acceptance,
+                metrics={k: float(v) for k, v in metrics.items()})
+            self.history.append(st)
+            rl.log(f"[iter {it:3d}] reward={mean_r:.3f} loss={float(loss):+.4f} "
+                   f"rollout={t_roll:.1f}s train={t_train:.1f}s "
+                   f"acc={res.stats.mean_acceptance:.2f}")
+            if rl.checkpoint_dir and rl.checkpoint_every and \
+                    (it + 1) % rl.checkpoint_every == 0:
+                save(f"{rl.checkpoint_dir}/it{it + 1}", self.params, it + 1)
+        return self.history

@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 device;
+only the dry-run forces 512 placeholder devices (in its own process).
+"""
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_params_cache():
+    """Share tiny-model params across tests (init is the slow part)."""
+    store = {}
+
+    def get(arch: str):
+        if arch not in store:
+            from repro.configs import get_tiny_config
+            from repro.models import init_params
+            cfg = get_tiny_config(arch)
+            params, _ = init_params(cfg, jax.random.PRNGKey(1))
+            store[arch] = (cfg, params)
+        return store[arch]
+
+    return get

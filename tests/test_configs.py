@@ -1,0 +1,83 @@
+"""Config registry: exact assigned numbers + tiny-variant constraints."""
+import pytest
+
+from repro.configs import (INPUT_SHAPES, get_config, get_tiny_config,
+                           list_archs)
+
+ASSIGNED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+}
+
+
+def test_all_archs_registered():
+    assert sorted(list_archs()) == sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_published_numbers(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert (cfg.d_ff or 0) == ff or cfg.moe_d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source, f"{arch} missing source citation"
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_tiny_variant_bounds(arch):
+    t = get_tiny_config(arch)
+    assert t.num_layers <= 2 or (t.arch_type in ("hybrid", "vlm")
+                                 and t.num_layers <= 4)
+    assert t.d_model <= 512
+    assert t.num_experts <= 4
+    assert t.arch_type == get_config(arch).arch_type
+
+
+def test_moe_extras():
+    ds = get_config("deepseek-moe-16b")
+    assert ds.num_experts == 64 and ds.moe_top_k == 6
+    assert ds.num_shared_experts == 2
+    mx = get_config("mixtral-8x7b")
+    assert mx.num_experts == 8 and mx.moe_top_k == 2
+    assert mx.sliding_window == 4096
+    ms = get_config("moonshot-v1-16b-a3b")
+    assert ms.num_experts == 64 and ms.moe_top_k == 6
+
+
+def test_ssm_extras():
+    mb = get_config("mamba2-370m")
+    assert mb.ssm_state == 128 and mb.arch_type == "ssm"
+    zb = get_config("zamba2-1.2b")
+    assert zb.ssm_state == 64 and zb.arch_type == "hybrid"
+
+
+def test_input_shapes():
+    s = INPUT_SHAPES
+    assert s["train_4k"].seq_len == 4096 and s["train_4k"].global_batch == 256
+    assert s["prefill_32k"].seq_len == 32768
+    assert s["prefill_32k"].global_batch == 32
+    assert s["decode_32k"].global_batch == 128
+    assert s["long_500k"].seq_len == 524288
+    assert s["long_500k"].global_batch == 1
+
+
+def test_param_counts_plausible():
+    # sanity: analytic counts land in the right ballpark
+    assert 5.5e9 < get_config("yi-6b").num_params() < 7e9
+    assert 40e9 < get_config("mixtral-8x7b").num_params() < 50e9
+    assert 3e8 < get_config("mamba2-370m").num_params() < 5e8
+    mx = get_config("mixtral-8x7b")
+    assert mx.active_params() < 0.35 * mx.num_params()

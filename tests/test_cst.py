@@ -1,0 +1,117 @@
+"""CST / DGDS unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cst import GroupCST, SuffixTree
+from repro.core.dgds import DraftClient, DraftServer, SpeculationArgs
+
+
+def test_exact_repeat_is_predicted():
+    t = SuffixTree(max_depth=8)
+    seq = [1, 2, 3, 4, 5] * 10
+    t.append(0, seq)
+    d = t.speculate([3, 4, 5], 4)
+    assert d.tokens == [1, 2, 3, 4]
+    assert d.score == pytest.approx(1.0)
+
+
+def test_cross_request_sharing():
+    """Request B is drafted from request A's pattern (the paper's point)."""
+    t = SuffixTree(max_depth=8)
+    t.append(0, [7, 8, 9, 10, 11, 12])
+    d = t.speculate([8, 9, 10], 2)          # a different request's context
+    assert d.tokens == [11, 12]
+
+
+def test_multipath_contains_greedy():
+    t = SuffixTree(max_depth=8)
+    t.append(0, [1, 2, 3] * 5)
+    t.append(1, [1, 2, 4] * 3)
+    paths = t.speculate_multipath([1, 2], 1, top_k=2)
+    toks = {tuple(p.tokens) for p in paths}
+    assert (3,) in toks and (4,) in toks
+    best = max(paths, key=lambda p: p.score)
+    assert best.tokens == [3]               # higher frequency wins
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
+       st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_draft_always_seen_ngram(seq, n_draft):
+    """Property: every drafted token continues an n-gram that occurred."""
+    t = SuffixTree(max_depth=6)
+    t.append(0, seq)
+    ctx = seq[-3:]
+    d = t.speculate(ctx, n_draft)
+    # verify each drafted step was a real continuation somewhere
+    hay = list(seq)
+    run = list(ctx)
+    for tok in d.tokens:
+        found = False
+        for k in range(len(run), 0, -1):
+            pat = run[len(run) - k:] + [tok]
+            for i in range(len(hay) - len(pat) + 1):
+                if hay[i:i + len(pat)] == pat:
+                    found = True
+                    break
+            if found:
+                break
+        assert found, (seq, ctx, d.tokens, tok)
+        run.append(tok)
+
+
+@given(st.lists(st.lists(st.integers(0, 9), min_size=1, max_size=30),
+                min_size=1, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_incremental_equals_bulk(streams):
+    """Appending token-by-token == appending in one call."""
+    t1 = SuffixTree(max_depth=5)
+    t2 = SuffixTree(max_depth=5)
+    for rid, s in enumerate(streams):
+        t1.append(rid, s)
+        for tok in s:
+            t2.append(rid, [tok])
+    assert t1.n_tokens == t2.n_tokens
+
+    def dump(node, prefix, out):
+        for tok, ch in node.children.items():
+            out[tuple(prefix + [tok])] = ch.count
+            dump(ch, prefix + [tok], out)
+
+    d1, d2 = {}, {}
+    dump(t1.root, [], d1)
+    dump(t2.root, [], d2)
+    assert d1 == d2
+
+
+def test_group_cst_out_of_order_updates():
+    g = GroupCST("g0")
+    g.update(1, 0, [1, 2, 3])
+    g.update(1, 2, [3, 4, 5])      # overlapping redelivery: skip seen part
+    assert g.token_counts[1] == 5  # 1,2,3 then 4,5
+
+
+def test_dgds_async_fetch_staleness():
+    srv = DraftServer()
+    cli = DraftClient(srv, fetch_interval=3, shared_snapshot=False)
+    cli.register_group("g")
+    srv.update_cst("g", 0, 0, [5, 6, 7, 8])
+    a = SpeculationArgs(max_spec_tokens=2)
+    # 1st call fetches (interval counter hits), drafts available afterwards
+    out = None
+    for _ in range(4):
+        out = cli.batch_speculate(["g"], [[5, 6]], [a])
+    assert out[0][0].tokens == [7, 8]
+
+
+def test_dgds_cross_instance_sharing():
+    srv = DraftServer()
+    c1 = DraftClient(srv)
+    c2 = DraftClient(srv)
+    for c in (c1, c2):
+        c.register_group("g")
+    srv.update_cst("g", 0, 0, [1, 2, 3, 4])     # generated on instance 1
+    out = c2.batch_speculate(["g"], [[2, 3]],
+                             [SpeculationArgs(max_spec_tokens=1)])
+    assert out[0][0].tokens == [4]

@@ -1,0 +1,96 @@
+"""Engine: speculative verify losslessness + KV migration correctness."""
+import jax
+import numpy as np
+import pytest
+
+from repro.engine import EngineSeq, Instance, StepFunctions
+
+ARCHS = ["granite-3-8b", "mamba2-370m", "zamba2-1.2b", "mixtral-8x7b"]
+
+
+def _run_plain(cfg, params, steps, prompt, n, temp, seed):
+    inst = Instance(cfg, params, steps, max_slots=2, cache_len=256,
+                    gamma_max=4, base_seed=7)
+    seq = EngineSeq("r0", "g0", list(prompt), seed=seed, temperature=temp,
+                    max_new_tokens=n)
+    inst.admit(seq)
+    while not seq.finished:
+        inst.run_step()
+    return seq.generated
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("temp", [0.0, 1.0])
+def test_spec_decode_lossless(arch, temp, tiny_params_cache):
+    """Paper's hard requirement: SD must not change sampled outputs."""
+    cfg, params = tiny_params_cache(arch)
+    steps = StepFunctions(cfg)
+    prompt = [5, 9, 2, 7]
+    ref = _run_plain(cfg, params, steps, prompt, 16, temp, seed=3)
+
+    inst = Instance(cfg, params, steps, max_slots=2, cache_len=256,
+                    gamma_max=4, base_seed=7)
+    seq = EngineSeq("r0", "g0", list(prompt), seed=3, temperature=temp,
+                    max_new_tokens=16)
+    slot = inst.admit(seq)
+    i, accepted = 0, 0
+    while not seq.finished:
+        k = len(seq.generated)
+        if i % 3 == 2:   # garbage drafts must be rejected cleanly
+            drafts = [(seq.generated[-1] + 13) % cfg.vocab_size] * 3 \
+                if seq.generated else []
+        else:            # oracle drafts must be accepted
+            drafts = list(ref[k:k + 3])
+        out = inst.run_step({slot: drafts})
+        accepted += out[slot][2]
+        i += 1
+    assert seq.generated == ref
+    assert accepted > 0
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-370m"])
+def test_kv_export_import_roundtrip(arch, tiny_params_cache):
+    """Blob export -> import on another instance resumes identically."""
+    cfg, params = tiny_params_cache(arch)
+    steps = StepFunctions(cfg)
+    prompt = [4, 8, 15, 16]
+
+    ref = _run_plain(cfg, params, steps, prompt, 20, 0.0, seed=1)
+
+    a = Instance(cfg, params, steps, max_slots=2, cache_len=256,
+                 gamma_max=4, instance_id="a", base_seed=7)
+    b = Instance(cfg, params, steps, max_slots=2, cache_len=256,
+                 gamma_max=4, instance_id="b", base_seed=7)
+    seq = EngineSeq("r0", "g0", list(prompt), seed=1, temperature=0.0,
+                    max_new_tokens=20)
+    slot = a.admit(seq)
+    for _ in range(10):
+        a.run_step()
+    blob = a.release(slot, export=True)
+    slot_b = b.admit(seq, blob)
+    assert b.prefill_tokens == 0            # blob hit: no re-prefill
+    while not seq.finished:
+        b.run_step()
+    assert seq.generated == ref
+
+
+def test_pool_miss_reprefills(tiny_params_cache):
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    prompt = [4, 8, 15, 16]
+    ref = _run_plain(cfg, params, steps, prompt, 12, 0.0, seed=1)
+    a = Instance(cfg, params, steps, max_slots=2, cache_len=256,
+                 gamma_max=4, base_seed=7)
+    seq = EngineSeq("r0", "g0", list(prompt), seed=1, temperature=0.0,
+                    max_new_tokens=12)
+    slot = a.admit(seq)
+    for _ in range(6):
+        a.run_step()
+    a.release(slot, export=False)
+    b = Instance(cfg, params, steps, max_slots=2, cache_len=256,
+                 gamma_max=4, base_seed=7)
+    slot_b = b.admit(seq, None)             # miss -> re-prefill path
+    assert b.prefill_tokens > 0
+    while not seq.finished:
+        b.run_step()
+    assert seq.generated == ref

@@ -1,0 +1,151 @@
+"""Kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.spec_verify.kernel import spec_verify_pallas
+from repro.kernels.spec_verify.ref import spec_verify_ref
+from repro.kernels.ssd_scan.ops import ssd_chunk_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return 3e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------- flash attention --------------------------------------------
+
+FLASH_CASES = [
+    # B, Tq, Tk, Hq, Hk, D, off, causal, win
+    (2, 128, 128, 4, 2, 64, 0, True, 0),
+    (1, 256, 256, 4, 4, 128, 0, True, 0),
+    (2, 100, 260, 8, 2, 64, 160, True, 0),
+    (1, 128, 384, 4, 1, 64, 256, True, 128),
+    (1, 7, 128, 2, 2, 64, 121, True, 0),
+    (2, 64, 64, 4, 2, 64, 0, False, 0),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(case, dtype):
+    B, Tq, Tk, Hq, Hk, D, off, causal, win = case
+    q = jnp.asarray(RNG.normal(size=(B, Tq, Hq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Tk, Hk, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Tk, Hk, D)), dtype)
+    ref = flash_attention_ref(q, k, v, q_offset=off, causal=causal,
+                              window=win)
+    out = flash_attention_pallas(q, k, v, q_offset=off, causal=causal,
+                                 window=win, block_q=64, block_k=64,
+                                 interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_block_shape_independence():
+    """Output must not depend on the chosen BlockSpec tiling."""
+    q = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    outs = [flash_attention_pallas(q, k, v, block_q=bq, block_k=bk,
+                                   interpret=True)
+            for bq, bk in [(64, 64), (128, 128), (256, 64), (64, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5)
+
+
+# ---------------- spec verify -------------------------------------------------
+
+VERIFY_CASES = [
+    (2, 5, 256, 4, 2, 64, 0),
+    (1, 1, 128, 8, 8, 128, 0),
+    (3, 9, 384, 4, 1, 64, 0),
+    (2, 4, 256, 4, 2, 64, 64),
+]
+
+
+@pytest.mark.parametrize("case", VERIFY_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spec_verify(case, dtype):
+    B, T, S, Hq, Hk, D, win = case
+    q = jnp.asarray(RNG.normal(size=(B, T, Hq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hk, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hk, D)), dtype)
+    base = RNG.integers(50, 150, size=(B, 1))
+    q_pos = jnp.asarray(base + np.arange(T)[None], jnp.int32)
+    k_pos = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        n_valid = int(base[b, 0]) + T
+        sl = RNG.permutation(S)[:min(n_valid, S)]
+        k_pos[b, sl] = np.arange(len(sl))
+    k_pos = jnp.asarray(k_pos)
+    ref = spec_verify_ref(q, k, v, q_pos, k_pos, window=win)
+    out = spec_verify_pallas(q, k, v, q_pos, k_pos, window=win,
+                             block_k=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_spec_verify_equals_flash_on_contiguous_cache():
+    """On a fresh (non-ring) cache both kernels implement the same math."""
+    B, T, S, H, D = 1, 4, 128, 2, 64
+    q = jnp.asarray(RNG.normal(size=(B, T, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
+    off = 90
+    q_pos = jnp.asarray(off + np.arange(T)[None], jnp.int32)
+    k_pos = np.where(np.arange(S) < off + T, np.arange(S), -1)[None]
+    a = spec_verify_pallas(q, k, v, q_pos, jnp.asarray(k_pos, jnp.int32),
+                           interpret=True)
+    b = flash_attention_pallas(q, k, v, q_offset=off, causal=True,
+                               block_q=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------- ssd scan ----------------------------------------------------
+
+SSD_CASES = [
+    (2, 128, 4, 64, 1, 128, 64, False),
+    (1, 96, 8, 32, 2, 64, 32, True),
+    (2, 32, 2, 64, 1, 128, 128, True),
+    (1, 256, 4, 64, 4, 32, 64, False),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan(case):
+    b, T, nh, P, G, N, chunk, with_init = case
+    x = jnp.asarray(RNG.normal(size=(b, T, nh, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, T, nh)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 1.5, size=(nh,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(b, T, G, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(b, T, G, N)), jnp.float32)
+    S0 = jnp.asarray(RNG.normal(size=(b, nh, P, N)), jnp.float32) \
+        if with_init else None
+    y_ref, s_ref = ssd_ref(x, dt, A, Bm, Cm, S0, chunk)
+    y, s = ssd_chunk_scan(x, dt, A, Bm, Cm, S0, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=1e-4)
+
+
+def test_ssd_chunk_independence():
+    """Same result regardless of chunk size (state-passing correctness)."""
+    b, T, nh, P, G, N = 1, 192, 2, 32, 1, 64
+    x = jnp.asarray(RNG.normal(size=(b, T, nh, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, T, nh)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 1.5, size=(nh,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(b, T, G, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(b, T, G, N)), jnp.float32)
+    outs = [ssd_chunk_scan(x, dt, A, Bm, Cm, None, c)[0]
+            for c in (32, 64, 192)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=2e-4)

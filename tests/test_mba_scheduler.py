@@ -1,0 +1,187 @@
+"""Alg. 1 (MBA) and Alg. 2 (context-aware scheduling) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.context import ContextManager
+from repro.core.mba import MBAConfig, mba_speculation
+from repro.core.request import make_groups
+from repro.core.scheduler import InstanceView, Scheduler
+from repro.core.sdmodel import (TPU_V5E, ForwardCostModel,
+                                SDThroughputModel)
+
+
+@pytest.fixture(scope="module")
+def sd():
+    fwd = ForwardCostModel(get_config("yi-6b"), TPU_V5E, chips=4)
+    return SDThroughputModel(fwd)
+
+
+# ---------------- Alg. 1 ----------------------------------------------------
+
+
+def test_mba_zero_when_unprofitable(sd):
+    """Huge batch + low acceptance -> drafting costs exceed gains."""
+    beta = [0.2 * 0.85 ** i for i in range(10)]
+    g_h, g_l = mba_speculation(10, 4000, beta, sd, alpha=0.2,
+                               mean_ctx=2048)
+    assert (g_h, g_l) == (0, 0)
+
+
+def test_gamma_shrinks_with_batch(sd):
+    """The adaptive core: optimal draft length falls as batch grows."""
+    gs = [sd.optimal_gamma(b, 0.6, 8192, 16) for b in (1, 64, 4096)]
+    assert gs[0] >= gs[1] >= gs[2]
+    assert gs[0] >= 4
+
+
+def test_mba_high_priority_gets_more(sd):
+    """With comparable class sizes, the λ bias favors the probes."""
+    beta = [0.7 * 0.9 ** i for i in range(12)]
+    g_h, g_l = mba_speculation(4, 4, beta, sd, alpha=0.7, mean_ctx=8192,
+                               cfg=MBAConfig(gamma_max=8, lam=2.0))
+    assert g_h >= g_l
+    assert g_h >= 1
+
+
+def test_mba_throughput_beats_priority_at_scale(sd):
+    """Huge low-priority class -> throughput term dominates λ."""
+    beta = [0.7 * 0.9 ** i for i in range(12)]
+    g_h, g_l = mba_speculation(1, 64, beta, sd, alpha=0.7, mean_ctx=8192,
+                               cfg=MBAConfig(gamma_max=8, lam=2.0))
+    assert g_l >= 1
+
+
+def test_mba_respects_gamma_max(sd):
+    beta = [0.95] * 20
+    g_h, g_l = mba_speculation(1, 1, beta, sd, alpha=0.95, mean_ctx=1024,
+                               cfg=MBAConfig(gamma_max=4, lam=2.0))
+    assert g_h <= 4 and g_l <= 4
+
+
+@given(b_h=st.integers(0, 16), b_l=st.integers(0, 64),
+       alpha=st.floats(0.05, 0.95), lam=st.floats(1.0, 4.0))
+@settings(max_examples=60, deadline=None)
+def test_mba_budget_conservation(sd, b_h, b_l, alpha, lam):
+    """Property: allocated tokens never exceed the Γ* budget and are
+    non-negative; empty classes get nothing."""
+    beta = [alpha * (0.9 ** i) for i in range(12)]
+    cfg = MBAConfig(gamma_max=8, lam=lam)
+    g_h, g_l = mba_speculation(b_h, b_l, beta, sd, alpha, 4096, cfg)
+    assert 0 <= g_h <= cfg.gamma_max and 0 <= g_l <= cfg.gamma_max
+    B = b_h + b_l
+    if B:
+        gamma_star = sd.optimal_gamma(B, alpha, 4096, cfg.gamma_max)
+        assert g_h * b_h + g_l * b_l <= gamma_star * B
+    if b_h == 0:
+        assert g_h == 0
+    if b_l == 0:
+        assert g_l == 0
+
+
+def test_tsd_matches_paper_formula(sd):
+    """T_SD = (1-a)(D+T)/(1-a^{γ+1})."""
+    a, g, B, ctx = 0.6, 4, 8, 2048
+    d = sd.draft_time(B, g)
+    t = sd.fwd.verify_time(B, g, ctx)
+    expect = (1 - a) * (d + t) / (1 - a ** (g + 1))
+    assert sd.t_sd(B, g, a, ctx) == pytest.approx(expect)
+
+
+# ---------------- Alg. 2 ----------------------------------------------------
+
+
+def _mk(n_groups=4, gsz=3, maxtok=100):
+    groups = make_groups([[1, 2]] * n_groups, gsz, max_new_tokens=maxtok)
+    ctx = ContextManager(max_gen_length=maxtok)
+    return groups, ctx
+
+
+def test_speculative_requests_first():
+    groups, ctx = _mk()
+    s = Scheduler(groups, ctx, policy="seer", starvation_every=0)
+    picks = [s.pick_request() for _ in range(4)]
+    for i, r in enumerate(picks):
+        assert r.speculative, f"pick {i} was not a speculative probe"
+        r.state = r.state.__class__.RUNNING
+
+
+def test_lfs_on_estimates_after_probe():
+    groups, ctx = _mk(n_groups=2, gsz=3)
+    s = Scheduler(groups, ctx, policy="seer", starvation_every=0)
+    # probe of g0 finished short; g1 unknown -> g1 assumed long -> first
+    g0, g1 = groups
+    for r in (g0.speculative_request, g1.speculative_request):
+        r.gen_count = None
+        r.generated = [0] * 5
+        r.finish(0.0)
+        s.on_finished(r)
+    ctx.update_estimate("g1", 90)           # g1 probed long
+    r = s.pick_request()
+    assert r.group_id == "g1"
+
+
+def test_unknown_groups_assumed_long():
+    groups, ctx = _mk(n_groups=2, gsz=2)
+    s = Scheduler(groups, ctx, policy="seer", starvation_every=0)
+    # finish ALL of g0 (short); g1 untouched
+    for r in groups[0].requests:
+        r.generated = [0] * 3
+        r.finish(0.0)
+        s.on_finished(r)
+    # g1's estimate must be the conservative max
+    assert ctx.estimate("g1") == ctx.max_gen_length
+    assert ctx.estimate("g0") == 3
+
+
+def test_estimate_is_running_max():
+    ctx = ContextManager(max_gen_length=1000)
+    groups = make_groups([[1]], 3, max_new_tokens=1000)
+    Scheduler(groups, ctx)
+    ctx.update_estimate("g0", 10)
+    assert ctx.estimate("g0") == 10
+    ctx.update_estimate("g0", 50)
+    assert ctx.estimate("g0") == 50
+    ctx.update_estimate("g0", 20)
+    assert ctx.estimate("g0") == 50
+
+
+def test_select_instance_kv_aware():
+    groups, ctx = _mk(1, 1, maxtok=64)
+    s = Scheduler(groups, ctx, chunk_size=32)
+    r = groups[0].requests[0]
+    views = [InstanceView("a", free_slots=1, kv_free_tokens=10),
+             InstanceView("b", free_slots=1, kv_free_tokens=500),
+             InstanceView("c", free_slots=0, kv_free_tokens=900)]
+    assert s.select_instance(views, r) == "b"   # c full, a too small
+    assert s.chunk_tokens(r) == 32
+
+
+def test_starvation_safeguard():
+    groups, ctx = _mk(n_groups=3, gsz=2, maxtok=50)
+    s = Scheduler(groups, ctx, policy="seer", starvation_every=2)
+    seen_groups = set()
+    for _ in range(6):
+        r = s.pick_request()
+        seen_groups.add(r.group_id)
+        r.state = r.state.__class__.RUNNING
+    assert len(seen_groups) >= 2
+
+
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(0, 400))
+@settings(max_examples=30, deadline=None)
+def test_scheduler_terminates(n_groups, gsz, seed):
+    """Property: repeatedly picking+finishing drains all requests."""
+    rng = np.random.default_rng(seed)
+    groups, ctx = _mk(n_groups, gsz, maxtok=64)
+    s = Scheduler(groups, ctx, policy="seer")
+    n = sum(g.size for g in groups)
+    for _ in range(n):
+        r = s.pick_request()
+        assert r is not None
+        r.generated = [0] * int(rng.integers(1, 64))
+        r.finish(0.0)
+        s.on_finished(r)
+    assert s.pick_request() is None
+    assert s.all_finished

@@ -1,0 +1,83 @@
+"""System-level divided-rollout invariants (the paper's losslessness)."""
+import jax
+import pytest
+
+from repro.core import GlobalKVPool, SeerRollout, make_groups
+from repro.engine.engine import KVBlob
+
+
+PROMPTS = [[3, 1, 4, 1], [5, 9, 2, 6], [2, 7, 1, 8]]
+
+
+def _responses(cfg, params, **kw):
+    groups = make_groups(PROMPTS, group_size=2, max_new_tokens=24, seed=5)
+    defaults = dict(n_instances=1, max_slots=2, cache_len=128,
+                    chunk_size=100, policy="fifo", spec_decode=False)
+    defaults.update(kw)
+    ro = SeerRollout(cfg, params, **defaults)
+    res = ro.run(groups)
+    for g in groups:
+        assert g.all_finished
+    return res.responses(), res.stats
+
+
+def test_outputs_invariant_to_system_config(tiny_params_cache):
+    """Chunking, placement, scheduling policy and speculative decoding may
+    change WHERE and WHEN tokens are produced — never WHICH tokens."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    base, _ = _responses(cfg, params)
+    for kw in (
+        dict(chunk_size=8),                              # many chunks
+        dict(n_instances=3, max_slots=1, chunk_size=8),  # migrations
+        dict(policy="seer", spec_decode=True, chunk_size=16),
+        dict(policy="seer", spec_decode=True, multipath_top_k=2),
+    ):
+        other, stats = _responses(cfg, params, **kw)
+        assert other == base, f"outputs changed under {kw}"
+
+
+def test_chunked_run_uses_pool(tiny_params_cache):
+    cfg, params = tiny_params_cache("granite-3-8b")
+    _, stats = _responses(cfg, params, chunk_size=8, n_instances=2,
+                          max_slots=2)
+    assert stats.chunks > 6
+    assert stats.pool_hits > 0
+    assert stats.pool_misses == 0
+
+
+def test_group_estimates_populated(tiny_params_cache):
+    cfg, params = tiny_params_cache("granite-3-8b")
+    groups = make_groups(PROMPTS, group_size=2, max_new_tokens=16, seed=5)
+    ro = SeerRollout(cfg, params, n_instances=1, max_slots=2,
+                     cache_len=128, chunk_size=8, policy="seer")
+    ro.run(groups)
+    st = ro.ctx.stats()
+    assert st["groups_with_estimate"] == len(PROMPTS)
+
+
+# ---------------- KV pool ----------------------------------------------------
+
+
+def _blob(rid, nbytes):
+    return KVBlob(rid, {}, 1, nbytes)
+
+
+def test_pool_lru_eviction_to_ssd():
+    pool = GlobalKVPool(dram_capacity=100)
+    pool.put(_blob("a", 60), "n0")
+    pool.put(_blob("b", 60), "n0")          # a spills to ssd
+    assert pool.evictions == 1
+    assert pool.dram_used == 60
+    b = pool.get("a", "n1")                 # ssd + cross-node fetch
+    assert b is not None
+    assert pool.transfer_seconds > 0
+    assert pool.misses == 0
+    pool.drop("a")
+    pool.drop("b")
+    assert pool.dram_used == 0
+
+
+def test_pool_miss_counts():
+    pool = GlobalKVPool()
+    assert pool.get("nope") is None
+    assert pool.misses == 1

@@ -1,0 +1,122 @@
+"""Scheduler invariants + differential test of the incremental (heap)
+implementation against the original O(n)-scan reference."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.context import ContextManager
+from repro.core.request import Group, ReqState, RolloutRequest
+from repro.core.scheduler import Scheduler
+
+
+class RefScheduler(Scheduler):
+    """The original full-scan pick (kept verbatim as the oracle)."""
+
+    def pick_request(self):
+        ready = self._ready()
+        if not ready:
+            return None
+        self._decisions += 1
+        p = self.policy
+        if p in ("fifo", "nocontext"):
+            return min(ready, key=lambda r: self._submit_order[r.req_id])
+        if p == "sfs":
+            return min(ready, key=self._true_len)
+        if p == "lfs":
+            return max(ready, key=self._true_len)
+        if self._starvation_every and \
+                self._decisions % self._starvation_every == 0:
+            return min(ready, key=lambda r: (
+                self.ctx.group_progress(r.group_id),
+                self._submit_order[r.req_id]))
+        spec = [r for r in ready if r.speculative]
+        if spec:
+            return min(spec, key=lambda r: (r.gen_len,
+                                            self._submit_order[r.req_id]))
+        return max(ready, key=lambda r: (self.ctx.estimate(r.group_id),
+                                         -self._submit_order[r.req_id]))
+
+    def requeue(self, r):
+        r.state = ReqState.READY
+
+
+def _build(cls, policy, n_groups=5, group_size=4, seed=0):
+    groups = []
+    oracle = {}
+    rng = np.random.default_rng(seed)
+    for gi in range(n_groups):
+        reqs = []
+        for ri in range(group_size):
+            r = RolloutRequest(req_id=f"g{gi}.r{ri}", group_id=f"g{gi}",
+                               prompt=[0] * 8, seed=0, max_new_tokens=1000,
+                               speculative=(ri == 0), gen_count=0)
+            oracle[r.req_id] = int(rng.integers(100, 900))
+            reqs.append(r)
+        groups.append(Group(f"g{gi}", reqs))
+    ctx = ContextManager(1000)
+    return cls(groups, ctx, policy=policy, chunk_size=100,
+               oracle_lengths=oracle)
+
+
+def _drive(sched, ops):
+    """Replay a random pick/requeue/finish script; return pick sequence."""
+    picks, running = [], []
+    for i, u in enumerate(ops):
+        if u < 0.6 or not running:
+            r = sched.pick_request()
+            if r is None:
+                continue
+            picks.append(r.req_id)
+            r.state = ReqState.RUNNING
+            running.append(r)
+        else:
+            r = running.pop(int(u * 1009) % len(running))
+            r.gen_count += 100
+            if r.gen_count >= 300 + (hash(r.req_id) % 5) * 100:
+                r.finish(i)
+                sched.on_finished(r)
+            else:
+                sched.requeue(r)
+    return picks
+
+
+@pytest.mark.parametrize("policy", ["fifo", "sfs", "lfs", "seer"])
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_incremental_matches_reference(policy, data):
+    seed = data.draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    ops = rng.random(600).tolist()
+    a = _drive(_build(RefScheduler, policy, seed=seed), ops)
+    b = _drive(_build(Scheduler, policy, seed=seed), ops)
+    assert a == b
+
+
+def test_no_double_pick():
+    sched = _build(Scheduler, "seer")
+    seen = set()
+    while True:
+        r = sched.pick_request()
+        if r is None:
+            break
+        assert r.req_id not in seen, "request handed out twice"
+        seen.add(r.req_id)
+        r.state = ReqState.RUNNING
+    assert len(seen) == 20                      # everyone scheduled once
+
+
+def test_requeue_then_pick_again():
+    sched = _build(Scheduler, "seer")
+    r = sched.pick_request()
+    r.state = ReqState.RUNNING
+    sched.requeue(r)
+    again = set()
+    while True:
+        x = sched.pick_request()
+        if x is None:
+            break
+        assert x.req_id not in again
+        again.add(x.req_id)
+        x.state = ReqState.RUNNING
+    assert r.req_id in again
+    assert len(again) == 20

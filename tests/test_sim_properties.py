@@ -1,0 +1,76 @@
+"""Hypothesis property tests on cluster-simulator invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.simulator import ClusterSimulator, SimConfig
+from repro.data.workload import MOONLIGHT, make_workload
+
+
+def _sim(spec, **kw):
+    kw.setdefault("max_slots", 16)
+    kw.setdefault("chips_per_instance", 1)
+    kw.setdefault("kv_capacity_tokens", 40_000)
+    kw.setdefault("chunk_size", 512)
+    return ClusterSimulator(get_config("yi-6b"), spec, SimConfig(**kw))
+
+
+def _spec(n_requests, group_size, n_instances):
+    return dataclasses.replace(
+        MOONLIGHT, n_requests=n_requests, group_size=group_size,
+        n_instances=n_instances, max_gen_length=8192,
+        mean_gen_length=2000)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000),
+       mode=st.sampled_from(["group", "request", "divided", "streamrl"]),
+       gsz=st.sampled_from([4, 8]))
+def test_token_conservation(seed, mode, gsz):
+    """Every synchronous mode emits exactly the workload's tokens, once."""
+    spec = _spec(48, gsz, 2)
+    wl = make_workload(spec, seed=seed)
+    policy = "seer" if mode == "divided" else "fifo"
+    res = _sim(spec, mode=mode, policy=policy).run(wl)
+    assert res.n_requests == spec.n_requests
+    assert res.tokens == wl.lengths.sum()
+    assert np.all(res.completion_times > 0)
+    assert res.total_time > 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_partial_completes_exactly_target(seed):
+    spec = _spec(64, 8, 2)
+    wl = make_workload(spec, seed=seed)
+    res = _sim(spec, mode="partial", policy="fifo",
+               over_issue=2.0).run(wl)
+    assert res.n_requests == spec.n_requests // 2
+    # completed requests' lengths are a subset of the true lengths
+    assert res.output_lengths.sum() <= wl.lengths.sum()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_divided_never_preempts(seed):
+    """Divided rollout's whole point: chunk-level control => no KV
+    preemption events, ever."""
+    spec = _spec(48, 8, 2)
+    wl = make_workload(spec, seed=seed)
+    res = _sim(spec, mode="divided", policy="seer").run(wl)
+    assert res.preemptions == 0
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_sd_only_speeds_up(seed):
+    """Lossless SD must never reduce simulated throughput vs no-SD on the
+    same schedule (the MBA policy falls back to γ=0 when unprofitable)."""
+    spec = _spec(32, 8, 2)
+    wl = make_workload(spec, seed=seed)
+    plain = _sim(spec, mode="divided", policy="seer", sd="none").run(wl)
+    sd = _sim(spec, mode="divided", policy="seer", sd="grouped").run(wl)
+    assert sd.tokens_per_sec >= 0.98 * plain.tokens_per_sec

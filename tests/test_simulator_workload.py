@@ -1,0 +1,121 @@
+"""Workload generator statistics + cluster simulator behaviour."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.simulator import (ClusterSimulator, SimConfig,
+                                  _acclen_to_alpha, sd_strategy)
+from repro.data.workload import (MOONLIGHT, QWEN2_VL_72B, length_stats,
+                                 make_workload, sample_lengths)
+
+
+@pytest.fixture(scope="module")
+def small_spec():
+    return dataclasses.replace(MOONLIGHT, n_requests=160, n_instances=2,
+                               max_gen_length=16384, mean_gen_length=4000)
+
+
+@pytest.fixture(scope="module")
+def small_wl(small_spec):
+    return make_workload(small_spec, seed=0)
+
+
+def _sim(spec, **kw):
+    kw.setdefault("max_slots", 24)
+    kw.setdefault("chips_per_instance", 1)
+    kw.setdefault("kv_capacity_tokens", 60_000)
+    kw.setdefault("chunk_size", 1024)
+    return ClusterSimulator(get_config("yi-6b"), spec, SimConfig(**kw))
+
+
+# ---------------- workload ----------------------------------------------------
+
+
+def test_lengths_heavy_tailed_and_correlated():
+    wl = make_workload(MOONLIGHT, seed=1)
+    st = wl.stats()
+    assert st["p99"] > 3 * st["p50"]            # heavy tail (Fig. 2)
+    assert st["icc_log"] > 0.6                  # group correlation (Fig. 4)
+    assert st["max"] <= MOONLIGHT.max_gen_length
+
+
+def test_rho_controls_correlation():
+    hi = dataclasses.replace(MOONLIGHT, rho=0.9)
+    lo = dataclasses.replace(MOONLIGHT, rho=0.1)
+    s_hi = length_stats(sample_lengths(hi, np.random.default_rng(0)))
+    s_lo = length_stats(sample_lengths(lo, np.random.default_rng(0)))
+    assert s_hi["icc_log"] > s_lo["icc_log"] + 0.3
+
+
+def test_acclen_alpha_inversion():
+    for acc in (1.7, 2.04, 2.53):
+        a = _acclen_to_alpha(acc, 8)
+        e = (1 - a ** 9) / (1 - a)
+        assert e == pytest.approx(acc, abs=1e-3)
+
+
+def test_grouped_alpha_grows_with_refs():
+    st = sd_strategy("grouped", get_config("yi-6b"))
+    assert st.alpha(15, 8) > st.alpha(5, 8) > st.alpha(0, 8)
+
+
+# ---------------- simulator ----------------------------------------------------
+
+
+def test_all_requests_complete(small_spec, small_wl):
+    res = _sim(small_spec, mode="divided", policy="seer").run(small_wl)
+    assert res.n_requests == small_spec.n_requests
+    assert res.tokens == small_wl.lengths.sum()
+
+
+def test_divided_eliminates_preemptions(small_spec, small_wl):
+    base = _sim(small_spec, mode="group", policy="fifo").run(small_wl)
+    div = _sim(small_spec, mode="divided", policy="seer").run(small_wl)
+    assert base.preemptions > 0
+    assert div.preemptions == 0
+    assert div.tokens_per_sec > base.tokens_per_sec
+
+
+def test_context_reduces_tail(small_spec, small_wl):
+    noctx = _sim(small_spec, mode="divided", policy="nocontext").run(small_wl)
+    seer = _sim(small_spec, mode="divided", policy="seer").run(small_wl)
+    assert seer.tail_frac < noctx.tail_frac
+
+
+def test_seer_close_to_oracle(small_spec, small_wl):
+    # The paper's 96%-of-oracle holds at production scale (validated in
+    # benchmarks/context_vs_oracle.py); this 2-instance micro config is
+    # much tighter (20 probes compete for 48 slots and the tail is only
+    # 16 requests), so allow 75% here.
+    seer = _sim(small_spec, mode="divided", policy="seer").run(small_wl)
+    oracle = _sim(small_spec, mode="divided", policy="lfs").run(small_wl)
+    assert seer.tokens_per_sec > 0.75 * oracle.tokens_per_sec
+
+
+def test_grouped_sd_speedup(small_spec, small_wl):
+    plain = _sim(small_spec, mode="divided", policy="seer",
+                 sd="none").run(small_wl)
+    sd = _sim(small_spec, mode="divided", policy="seer",
+              sd="grouped").run(small_wl)
+    assert sd.tokens_per_sec > 1.2 * plain.tokens_per_sec
+    assert sd.mean_acceptance_len > 1.3
+
+
+def test_partial_rollout_biases_lengths(small_spec, small_wl):
+    full = _sim(small_spec, mode="divided", policy="seer").run(small_wl)
+    part = _sim(small_spec, mode="partial", policy="fifo",
+                over_issue=2.0).run(small_wl)
+    assert part.n_requests == small_spec.n_requests // 2
+    # Fig. 12b: partial rollout completes disproportionately short requests
+    # (biased mean + under-represented long tail vs the synchronous run)
+    assert np.mean(part.output_lengths) < 0.97 * np.mean(full.output_lengths)
+    p90 = np.percentile(small_wl.lengths, 90)
+    assert (part.output_lengths >= p90).mean() \
+        < (full.output_lengths >= p90).mean()
+
+
+def test_infeasible_capacity_raises(small_spec):
+    with pytest.raises(ValueError):
+        _sim(small_spec, kv_capacity_tokens=1000)
