@@ -71,6 +71,129 @@ def save_result(name: str, record: dict) -> None:
         json.dump(record, f, indent=1, default=float)
 
 
+# ---------------------------------------------------------------------------
+# BENCH_rollout.json — machine-readable rollout perf trajectory
+# ---------------------------------------------------------------------------
+
+BENCH_ROLLOUT = "BENCH_rollout.json"
+
+
+def update_bench_rollout(section: str, record: dict) -> dict:
+    """Merge ``record`` under ``section`` of RESULTS_DIR/BENCH_rollout.json.
+
+    One file, sections per contributor (engine / phase_split /
+    e2e_throughput), so the perf trajectory of the rollout hot path is
+    tracked in a single machine-readable artifact from PR to PR.
+    """
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, BENCH_ROLLOUT)
+    doc: dict = {"benchmark": "rollout"}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, dict):
+                doc = loaded
+        except (OSError, ValueError):
+            pass
+    doc[section] = record
+    doc["timestamp"] = time.strftime("%Y-%m-%d %H:%M:%S")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    return doc
+
+
+def bench_engine_rollout(n_requests: int = 16, n_instances: int = 2,
+                         max_slots: int = 4, prompt_len: int = 96,
+                         max_new_tokens: int = 8, prefill_chunk: int = 16,
+                         seed: int = 5) -> dict:
+    """Admission-heavy real-engine rollout (tiny model): long prompts,
+    short decode, so admission prefill dominates.  Runs the sequential
+    seed path (sync prefill) and the batched mixed-step path on identical
+    workloads and reports tokens/s, engine forward invocations,
+    prefill-wasted-row fraction and admission latency for each.
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.core.request import make_groups
+    from repro.core.rollout import SeerRollout
+
+    cfg = get_tiny_config("granite-3-8b")
+    from repro.models import init_params
+    params, _ = init_params(cfg, jax.random.PRNGKey(1))
+    group_size = 2
+    prompts = [[(13 * g + j) % (cfg.vocab_size - 2) + 1
+                for j in range(prompt_len)]
+               for g in range(n_requests // group_size)]
+
+    def one(mode: str) -> dict:
+        ro = SeerRollout(
+            cfg, params, n_instances=n_instances, max_slots=max_slots,
+            cache_len=prompt_len + max_new_tokens + 32,
+            chunk_size=1 << 20, prefill_chunk=prefill_chunk,
+            prefill_mode=mode, policy="fifo", spec_decode=False,
+            base_seed=7)
+        # warm-up pass compiles the step shapes so the timed pass
+        # measures steady-state throughput, not XLA compile time
+        ro.run(make_groups(prompts[:1], group_size=group_size,
+                           max_new_tokens=max_new_tokens, seed=seed))
+        inv0 = ro.steps.invocations
+        for inst in ro.instances:
+            inst.row_slots_total = inst.row_slots_active = 0
+            inst.admits = 0
+            inst.admit_seconds = 0.0
+        groups = make_groups(prompts, group_size=group_size,
+                             max_new_tokens=max_new_tokens, seed=seed)
+        t0 = time.perf_counter()
+        res = ro.run(groups)
+        wall = time.perf_counter() - t0
+        rows_total = sum(i.row_slots_total for i in ro.instances)
+        rows_active = sum(i.row_slots_active for i in ro.instances)
+        admits = sum(i.admits for i in ro.instances)
+        admit_s = sum(i.admit_seconds for i in ro.instances)
+        return {
+            "forward_invocations": ro.steps.invocations - inv0,
+            "tokens_per_sec": res.stats.tokens / max(wall, 1e-9),
+            "wall_seconds": wall,
+            "prefill_wasted_row_frac":
+                1.0 - rows_active / max(rows_total, 1),
+            "admission_latency_s": admit_s / max(admits, 1),
+            "responses": res.responses(),
+        }
+
+    sync = one("sync")
+    batched = one("batched")
+    token_exact = sync.pop("responses") == batched.pop("responses")
+    return {
+        "workload": {
+            "n_requests": n_requests, "n_instances": n_instances,
+            "max_slots": max_slots, "prompt_len": prompt_len,
+            "max_new_tokens": max_new_tokens,
+            "prefill_chunk": prefill_chunk,
+        },
+        "sync": sync,
+        "batched": batched,
+        "forward_invocation_ratio":
+            sync["forward_invocations"] / max(batched["forward_invocations"],
+                                              1),
+        "token_exact": token_exact,
+    }
+
+
+_ENGINE_ROLLOUT_CACHE: Optional[dict] = None
+
+
+def ensure_engine_rollout_record() -> dict:
+    """Run the engine rollout micro-benchmark once per process and write
+    it to BENCH_rollout.json's 'engine' section (several benchmarks call
+    this; the real-engine run is shared)."""
+    global _ENGINE_ROLLOUT_CACHE
+    if _ENGINE_ROLLOUT_CACHE is None:
+        _ENGINE_ROLLOUT_CACHE = bench_engine_rollout()
+        update_bench_rollout("engine", _ENGINE_ROLLOUT_CACHE)
+    return _ENGINE_ROLLOUT_CACHE
+
+
 def table(rows: List[dict], cols: List[str], title: str = "") -> str:
     out = []
     if title:

@@ -5,7 +5,8 @@ Paper claims: Seer = 1.44-2.04x veRL; ablation ~1.4x / ~1.5x / 1.9-2.04x.
 """
 from __future__ import annotations
 
-from benchmarks.common import run_sim, save_result, table, workload
+from benchmarks.common import ensure_engine_rollout_record, run_sim, \
+    save_result, table, update_bench_rollout, workload
 
 SYSTEMS = [
     ("veRL (group)", dict(mode="group", policy="fifo")),
@@ -54,6 +55,19 @@ def run(workloads=("moonlight", "qwen2-vl-72b", "kimi-k2"), seed=0):
                      "within_2x_band": 1.2 <= full <= 3.2}
     save_result("e2e_throughput", {"rows": rows, "checks": checks,
                                    "table": txt})
+    try:
+        engine = ensure_engine_rollout_record()
+        ratio = engine["forward_invocation_ratio"]
+    except Exception as e:  # noqa: BLE001 - report-and-continue CLI
+        print(f"[e2e_throughput] engine rollout bench failed: {e}",
+              flush=True)
+        ratio = None
+    update_bench_rollout("e2e_throughput", {
+        "tokens_per_sec": {k: v["tokens_per_sec"]
+                           for k, v in record.items()},
+        "seer_speedup": {w: checks[w]["seer_speedup"] for w in checks},
+        "engine_forward_invocation_ratio": ratio,
+    })
     return record
 
 

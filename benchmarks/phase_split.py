@@ -12,8 +12,8 @@ from __future__ import annotations
 from repro.configs import get_config
 from repro.core.sdmodel import H800
 
-from benchmarks.common import DEPLOY, SPECS, run_sim, save_result, table, \
-    workload
+from benchmarks.common import DEPLOY, SPECS, ensure_engine_rollout_record, \
+    run_sim, save_result, table, update_bench_rollout, workload
 
 TRAIN_MFU = 0.35                  # Megatron-style large-model training MFU
 BCAST_BW = 25e9                   # checkpoint-engine effective bytes/s
@@ -48,6 +48,15 @@ def run(workloads=("moonlight", "qwen2-vl-72b", "kimi-k2"), seed=0):
                 "Table 1 — RL phase time split")
     save_result("phase_split", {"rows": rows, "record": record,
                                 "table": txt})
+    # rollout dominance is the motivation for the engine hot-path work;
+    # track it next to the engine numbers in BENCH_rollout.json.  The
+    # engine micro-bench must not take the simulator results down with it.
+    try:
+        ensure_engine_rollout_record()
+    except Exception as e:  # noqa: BLE001 - report-and-continue CLI
+        print(f"[phase_split] engine rollout bench failed: {e}", flush=True)
+    update_bench_rollout("phase_split", {
+        w: {"rollout_pct": record[w]["rollout_pct"]} for w in record})
     return record
 
 

@@ -30,11 +30,13 @@ def run_spec(cfg, params, steps, prompt, n, temp, seed, oracle):
     while not seq.finished:
         k = len(seq.generated)
         if i % 3 == 2:
-            drafts = [(seq.generated[-1] + 13) % cfg.vocab_size] * 3  # garbage
+            drafts = [(seq.generated[-1] + 13) % cfg.vocab_size] * 3 \
+                if seq.generated else []                              # garbage
         else:
             drafts = list(oracle[k:k + 3])                            # perfect
         out = inst.run_step({slot: drafts})
-        accepted += out[slot][2]
+        # batched prefill: prefill-only steps emit nothing for the slot
+        accepted += out[slot][2] if slot in out else 0
         i += 1
     return seq.generated, accepted
 

@@ -94,13 +94,17 @@ class GlobalKVPool:
         self.transfer_seconds += self.costs.fetch_seconds(
             entry.nbytes, entry.tier, cross)
         self.bytes_moved += entry.nbytes
-        # promote back to DRAM on the fetching node
+        # promote back to DRAM on the fetching node.  Recency must be
+        # bumped BEFORE eviction runs: the just-fetched entry was the LRU
+        # head, so evicting first picked it as its own victim — counted as
+        # an eviction and left tier-tagged "ssd" while the caller used it
+        # as a DRAM hit.
+        entry.home_node = node
+        self._entries.move_to_end(req_id)
         if entry.tier == "ssd":
             entry.tier = "dram"
             self.dram_used += entry.nbytes
             self._evict_to_ssd()
-        entry.home_node = node
-        self._entries.move_to_end(req_id)
         return entry.blob
 
     def drop(self, req_id: str) -> None:

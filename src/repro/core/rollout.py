@@ -22,6 +22,7 @@ autoregressive decoding.
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -73,6 +74,8 @@ class SeerRollout:
                  n_instances: int = 2, max_slots: int = 4,
                  cache_len: int = 1024, chunk_size: int = 128,
                  prefill_chunk: int = 64,
+                 prefill_mode: str = "batched",
+                 prefill_budget: Optional[int] = None,
                  policy: str = "seer", spec_decode: bool = True,
                  multipath_top_k: int = 1,
                  gamma_max: int = 8, lam: float = 2.0,
@@ -86,10 +89,12 @@ class SeerRollout:
         self.multipath_top_k = multipath_top_k
         self.mba_cfg = MBAConfig(gamma_max=min(gamma_max, 8), lam=lam)
         self.oracle_lengths = oracle_lengths
-        steps = StepFunctions(cfg)
+        self.steps = StepFunctions(cfg)
         self.instances = [
-            Instance(cfg, params, steps, max_slots=max_slots,
+            Instance(cfg, params, self.steps, max_slots=max_slots,
                      cache_len=cache_len, prefill_chunk=prefill_chunk,
+                     prefill_mode=prefill_mode,
+                     prefill_budget=prefill_budget,
                      gamma_max=gamma_max, instance_id=f"inst{i}",
                      base_seed=base_seed)
             for i in range(n_instances)
@@ -117,7 +122,8 @@ class SeerRollout:
                 free_slots=inst.free_slots(),
                 kv_free_tokens=inst.kv_capacity_tokens()
                 - inst.kv_used_tokens(),
-                active_requests=len(inst.active_slots()))
+                active_requests=len(inst.active_slots()),
+                queued_prefill_tokens=inst.queued_prefill_tokens())
             for inst in self.instances
         ]
 
@@ -174,13 +180,19 @@ class SeerRollout:
     def _collect_drafts(self, inst: Instance) -> Dict[int, List[int]]:
         if not self.spec_decode:
             return {}
-        active = inst.active_slots()
+        # still-prefilling slots have no pending token to verify against —
+        # only decode-ready slots draw drafts
+        active = inst.decode_slots()
         if not active:
             return {}
         b_h = sum(1 for i in active
                   if self._reqs[inst.slots[i].req_id].speculative)
         b_l = len(active) - b_h
-        mean_ctx = inst.kv_used_tokens() / max(len(active), 1)
+        # context of the verifying batch only: kv_used_tokens() also
+        # counts still-prefilling slots' full footprints, which would
+        # inflate mean_ctx and suppress MBA draft budgets mid-admission
+        mean_ctx = sum(min(inst.slots[i].next_pos, inst.cache_len)
+                       for i in active) / max(len(active), 1)
         gamma_h, gamma_l = mba_speculation(
             b_h, b_l, self.ctx.beta_padded(self.mba_cfg.gamma_max + 1),
             self.sd_model, self.ctx.alpha, mean_ctx, self.mba_cfg)
@@ -261,8 +273,12 @@ class SeerRollout:
                     if n_draft:
                         self.ctx.record_verification(n_draft, n_acc)
                     if new_toks:
+                        # stable speculator id: python str hash is
+                        # randomized per process (PYTHONHASHSEED), which
+                        # made DGDS ids — and draft paths — nondeterministic
                         self.server.update_cst(
-                            r.group_id, hash(r.req_id) & 0x7FFFFFFF,
+                            r.group_id,
+                            zlib.crc32(r.req_id.encode()) & 0x7FFFFFFF,
                             len(seq.generated) - len(new_toks), new_toks)
                 # 3) chunk / finish bookkeeping
                 for slot in list(inst.active_slots()):

@@ -33,6 +33,10 @@ class InstanceView:
     free_slots: int
     kv_free_tokens: int            # KV head-room in tokens
     active_requests: int = 0
+    # prefill tokens queued but not yet written (batched prefill): KV
+    # accounting already covers their footprint, but each queued token is
+    # a step of compute the instance owes before its decode rows speed up
+    queued_prefill_tokens: int = 0
 
 
 class Scheduler:
@@ -202,16 +206,23 @@ class Scheduler:
 
     def select_instance(self, instances: Sequence[InstanceView],
                         r: RolloutRequest) -> Optional[str]:
-        """Least-loaded instance with room for the chunk's footprint."""
+        """Least-loaded instance with room for the chunk's footprint.
+
+        Load is KV head-room net of queued prefill: a pool miss dumps the
+        request's whole context back onto the prefill queue, so an
+        instance with a deep backlog is busier than its KV occupancy
+        alone suggests (the admission itself is still immediate — queued
+        prefill rides along with mixed steps)."""
         need = len(r.prompt) + r.gen_len + self.chunk_tokens(r)
-        best, best_free = None, -1
+        best, best_free = None, None
         for iv in instances:
             if iv.free_slots <= 0:
                 continue
             if iv.kv_free_tokens < need:
                 continue
-            if iv.kv_free_tokens > best_free:
-                best, best_free = iv.instance_id, iv.kv_free_tokens
+            effective_free = iv.kv_free_tokens - iv.queued_prefill_tokens
+            if best_free is None or effective_free > best_free:
+                best, best_free = iv.instance_id, effective_free
         return best
 
     # -- lifecycle callbacks -----------------------------------------------------

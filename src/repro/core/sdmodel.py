@@ -69,6 +69,10 @@ class ForwardCostModel:
 
     # -- forward time --------------------------------------------------------------
 
+    def _attn_dim(self) -> float:
+        return self.cfg.num_heads * self.cfg.head_dim * 2 \
+            if self.cfg.arch_type != "ssm" else self.cfg.d_inner
+
     def forward_time(self, batch: int, tokens_per_req: int,
                      mean_ctx: float) -> float:
         """One forward scoring ``batch * tokens_per_req`` tokens with mean
@@ -76,9 +80,7 @@ class ForwardCostModel:
         n_tok = batch * tokens_per_req
         # compute term: linear in scored tokens + attention term
         flops = n_tok * self.flops_per_token()
-        flops += 2.0 * n_tok * mean_ctx * (
-            self.cfg.num_heads * self.cfg.head_dim * 2 if
-            self.cfg.arch_type != "ssm" else self.cfg.d_inner)
+        flops += 2.0 * n_tok * mean_ctx * self._attn_dim()
         t_compute = flops / (self.chips * self.hw.peak_flops * self.mfu)
         # memory term: weights stream once per forward; KV streams per req
         mem = self.active_param_bytes()
@@ -94,6 +96,31 @@ class ForwardCostModel:
 
     def prefill_time(self, n_tokens: int, mean_ctx: float = 0.0) -> float:
         return self.forward_time(1, n_tokens, mean_ctx or n_tokens / 2)
+
+    def mixed_step_time(self, batch: int, tokens_per_req: int,
+                        prefill_tokens: float, mean_ctx: float,
+                        prefill_ctx: Optional[float] = None) -> float:
+        """One fused step: ``batch`` decode/verify rows of
+        ``tokens_per_req`` tokens plus ``prefill_tokens`` chunk tokens
+        packed into the same forward (the engine's mixed prefill/decode
+        step).  Prefill tokens add compute (linear + attention over their
+        own growing context, ~prefill_ctx) but share the per-forward
+        weight stream and launch overhead — which is exactly why batching
+        prefill into decode steps wins over serial chunk forwards."""
+        if prefill_tokens <= 0:
+            return self.forward_time(batch, tokens_per_req, mean_ctx) \
+                if batch else 0.0
+        pctx = prefill_ctx if prefill_ctx is not None else prefill_tokens / 2
+        n_dec = batch * tokens_per_req
+        flops = (n_dec + prefill_tokens) * self.flops_per_token()
+        flops += 2.0 * n_dec * mean_ctx * self._attn_dim()
+        flops += 2.0 * prefill_tokens * pctx * self._attn_dim()
+        t_compute = flops / (self.chips * self.hw.peak_flops * self.mfu)
+        mem = self.active_param_bytes()
+        mem += batch * mean_ctx * self.kv_bytes_per_token()
+        mem += prefill_tokens * self.kv_bytes_per_token()   # KV writes
+        t_mem = mem / (self.chips * self.hw.hbm_bw * self.mbu)
+        return max(t_compute, t_mem) + self.hw.launch_overhead
 
 
 @dataclass(frozen=True)

@@ -158,6 +158,13 @@ class SimInstance:
         self.preempted: List[SimSeq] = []
         self.busy_time = 0.0
         self.overhead = 0.0          # prefill/pool time owed to next segment
+        # prefill tokens folded into the next segment's mixed steps
+        # (divided mode: the engine batches admission prefill into decode
+        # forwards instead of running serial chunk forwards); ctxsum
+        # carries sum(L_i^2/2) so the attention term charges each
+        # admission its own mean context, not the aggregated backlog's
+        self.prefill_backlog = 0.0
+        self.prefill_backlog_ctxsum = 0.0
         self.tokens_out = 0.0
         self.preemptions = 0
 
@@ -337,6 +344,19 @@ class ClusterSimulator:
                 t_step += gamma_mean * max(t_comp, t_mem)
         steps = max(1, math.ceil(n_event / tok_per_step))
         dur = steps * t_step
+        if inst.prefill_backlog > 0:
+            # queued admission prefill rides along with the segment's
+            # forwards: charge the marginal mixed-step cost (extra scored
+            # tokens + KV writes) rather than serial per-chunk forwards
+            # with their own weight streams and launch overheads
+            tpr = 1 if gamma_mean == 0 else int(round(gamma_mean)) + 1
+            pctx = inst.prefill_backlog_ctxsum / inst.prefill_backlog
+            dur += self.fwd.mixed_step_time(
+                B, tpr, inst.prefill_backlog, mean_ctx,
+                prefill_ctx=pctx) \
+                - self.fwd.forward_time(B, tpr, mean_ctx)
+            inst.prefill_backlog = 0.0
+            inst.prefill_backlog_ctxsum = 0.0
         self._seg_stats["steps"] += steps * B
         self._seg_stats["drafted"] += steps * B * gamma_mean
         self._seg_stats["accepted"] += steps * B * (tok_per_step - 1.0)
@@ -538,7 +558,10 @@ class ClusterSimulator:
                 if r is None:
                     break
                 views = [InstanceView(i.iid, i.free_slots(),
-                                      int(i.kv_free()))
+                                      int(i.kv_free()),
+                                      active_requests=len(i.running),
+                                      queued_prefill_tokens=int(
+                                          i.prefill_backlog))
                          for i in instances]
                 target = sched.select_instance(views, r)
                 if target != inst.iid:
@@ -591,7 +614,14 @@ class ClusterSimulator:
             pool_time = ctx0 * self.kv_bytes_per_token / self.sim.pool_net_bw
             inst.overhead += pool_time
         if r.gen_len == 0:
-            inst.overhead += self.fwd.prefill_time(len(r.prompt))
+            if self.sim.mode == "divided":
+                # batched prefill: admission queues the prompt; its cost
+                # lands as mixed-step marginal time in _segment
+                L = len(r.prompt)
+                inst.prefill_backlog += L
+                inst.prefill_backlog_ctxsum += L * (L / 2.0)
+            else:
+                inst.overhead += self.fwd.prefill_time(len(r.prompt))
         if r.t_first_scheduled is None:
             r.t_first_scheduled = now
         r.state = ReqState.RUNNING

@@ -3,19 +3,27 @@
 Slot-based continuous batching with static JAX shapes:
 
 * a cache buffer of ``max_slots`` rows x ``cache_len`` positions
-* chunked prefill (fixed chunk size, python loop)
-* one jitted ``step`` covering decode (T=1) and speculative verify
-  (T = gamma_max+1); rows carry a token mask so each request may submit a
-  different number of draft tokens
+* batched chunked prefill: ``admit`` only *queues* prefill work; every
+  ``run_step`` packs the next chunk of every still-prefilling slot into
+  the same forward as the decode/verify rows (a mixed step), bounded by a
+  Sarathi-style per-step prefill token budget
+* one jitted ``step`` covering decode (T=1), speculative verify
+  (T = gamma_max+1) and mixed prefill/decode (T = prefill_chunk); rows
+  carry a token mask so each request may submit a different number of
+  tokens, and a per-row sample mask so prefill rows never sample
 * KV export/import per slot — the handle the global KV pool moves between
   instances (divided rollout's stateless chunk migration)
 
 Step functions are compiled once per (config, T) and shared by every
 instance of that model (the paper colocates many instances per model).
+``prefill_mode="sync"`` keeps the original admit-time python loop (one
+single-row forward per chunk) as the reference path for losslessness and
+perf comparisons.
 """
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -35,30 +43,48 @@ from repro.models import build_cross_cache, forward, init_cache
 
 
 class StepFunctions:
-    """Compile-once holder for a given model config."""
+    """Compile-once holder for a given model config.
+
+    Every returned callable counts its calls in ``invocations`` (total
+    model forwards) and ``invocations_by_kind`` ("step:T" / "prefill:T")
+    — the benchmark/regression currency for the batched-prefill work: the
+    whole point of mixed steps is fewer forwards for the same tokens.
+    """
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self._step_cache: dict = {}
+        self.invocations = 0
+        self.invocations_by_kind: Dict[str, int] = {}
+
+    def _counted(self, fn, kind: str):
+        def wrapper(*args):
+            self.invocations += 1
+            self.invocations_by_kind[kind] = \
+                self.invocations_by_kind.get(kind, 0) + 1
+            return fn(*args)
+        return wrapper
 
     def step(self, T: int):
-        """(params, cache, tokens(B,T), positions, mask, keys, temps)
-        -> (sampled(B,T), logprobs(B,T), new_cache)."""
+        """(params, cache, tokens(B,T), positions, mask, keys, temps,
+        sample_rows(B,)) -> (sampled(B,T), logprobs(B,T), new_cache)."""
         if T in self._step_cache:
             return self._step_cache[T]
         cfg = self.cfg
 
         @jax.jit
-        def fn(params, cache, tokens, positions, mask, keys, temps):
+        def fn(params, cache, tokens, positions, mask, keys, temps,
+               sample_rows):
             logits, new_cache, _ = forward(
                 cfg, params, tokens, positions, cache, token_mask=mask)
             logits = logits.astype(jnp.float32)
-            sampled = sample_tokens(logits, keys, temps)
+            sampled = sample_tokens(logits, keys, temps, sample_rows)
             lp = token_logprobs_at(logits, sampled)
             return sampled, lp, new_cache
 
-        self._step_cache[T] = fn
-        return fn
+        counted = self._counted(fn, f"step:{T}")
+        self._step_cache[T] = counted
+        return counted
 
     def prefill(self, T: int):
         key = ("prefill", T)
@@ -72,8 +98,9 @@ class StepFunctions:
                 cfg, params, tokens, positions, cache, token_mask=mask)
             return new_cache
 
-        self._step_cache[key] = fn
-        return fn
+        counted = self._counted(fn, f"prefill:{T}")
+        self._step_cache[key] = counted
+        return counted
 
     @property
     def rollback(self):
@@ -110,6 +137,17 @@ class EngineSeq:
     last_token: int = -1          # pending token (fed on next step)
     next_pos: int = 0             # position of the pending token
     finished: bool = False
+    # queued prefill work (batched prefill): tokens not yet written to the
+    # KV cache, and the absolute position of the first of them.  While the
+    # queue is non-empty the slot submits prefill chunks instead of
+    # decode rows; ``next_pos``/``last_token`` already hold the resume
+    # state, so KV accounting sees the full footprint from admission.
+    prefill_queue: List[int] = field(default_factory=list)
+    prefill_pos: int = 0
+
+    @property
+    def prefilling(self) -> bool:
+        return bool(self.prefill_queue)
 
     @property
     def total_len(self) -> int:
@@ -147,8 +185,12 @@ class Instance:
     def __init__(self, cfg: ModelConfig, params, steps: StepFunctions, *,
                  max_slots: int = 8, cache_len: int = 4096,
                  prefill_chunk: int = 64, gamma_max: int = 8,
+                 prefill_mode: str = "batched",
+                 prefill_budget: Optional[int] = None,
                  instance_id: str = "inst0", base_seed: int = 0,
                  modality_embeds=None):
+        if prefill_mode not in ("batched", "sync"):
+            raise ValueError(f"prefill_mode={prefill_mode!r}")
         self.cfg = cfg
         self.params = params
         self.steps = steps
@@ -156,6 +198,12 @@ class Instance:
         self.cache_len = cache_len
         self.prefill_chunk = prefill_chunk
         self.gamma_max = gamma_max
+        self.prefill_mode = prefill_mode
+        # Sarathi-style cap on prefill tokens admitted into one mixed step
+        # (bounds decode-row latency); default: no throttle beyond one
+        # chunk per slot
+        self.prefill_budget = prefill_budget \
+            if prefill_budget is not None else max_slots * prefill_chunk
         self.instance_id = instance_id
         self.base_key = jax.random.PRNGKey(base_seed)
         self.cache = init_cache(cfg, max_slots, cache_len)
@@ -171,6 +219,13 @@ class Instance:
         self.tokens_generated = 0
         self.steps_run = 0
         self.prefill_tokens = 0
+        self.admits = 0
+        self.admit_seconds = 0.0
+        # row-occupancy accounting: every forward scores max_slots rows;
+        # wasted rows = rows carrying neither decode nor prefill work
+        self.row_slots_total = 0
+        self.row_slots_active = 0
+        self.prefill_rows_packed = 0   # chunk-rows of prefill work issued
 
     # -- capacity ------------------------------------------------------------
 
@@ -179,6 +234,19 @@ class Instance:
 
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def decode_slots(self) -> List[int]:
+        """Slots holding a pending token (prefill complete)."""
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and not s.prefilling]
+
+    def prefilling_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.prefilling]
+
+    def queued_prefill_tokens(self) -> int:
+        return sum(len(s.prefill_queue)
+                   for s in self.slots if s is not None)
 
     def kv_used_tokens(self) -> int:
         return sum(min(s.next_pos, self.cache_len)
@@ -193,24 +261,43 @@ class Instance:
     # -- admission / release ---------------------------------------------------
 
     def admit(self, seq: EngineSeq, blob: Optional[KVBlob] = None) -> int:
+        """Place ``seq`` in a free slot.  Batched mode only *queues* the
+        prefill work — O(1), no forward — so K admissions cost K queue
+        appends, not K x ceil(len/chunk) single-row forwards; the queued
+        chunks ride along with subsequent mixed ``run_step`` batches."""
+        t0 = time.perf_counter()
         slot = self.slots.index(None)
         self.slots[slot] = seq
         self._clear_slot_cache(slot)
+        seq.prefill_queue = []
+        seq.prefill_pos = 0
         if blob is not None and blob.next_pos == seq.next_pos:
             self._import_kv(slot, blob)
         elif seq.next_pos > 0:
             # no blob (pool miss): re-prefill everything up to next_pos
             tokens = (seq.prompt + seq.generated)[:seq.next_pos]
-            self._prefill_slot(slot, tokens, start_pos=0)
+            self._queue_prefill(slot, seq, tokens, start_pos=0)
         else:
             tokens = seq.prompt[:-1]
-            self._prefill_slot(slot, tokens, start_pos=0)
             seq.last_token = seq.prompt[-1]
             seq.next_pos = len(seq.prompt) - 1
+            self._queue_prefill(slot, seq, tokens, start_pos=0)
+        if self.prefill_mode == "sync":
+            # jit dispatch is async: without a barrier the timer would
+            # capture only trace/dispatch time, not the chunk forwards
+            jax.block_until_ready(self.cache)
+        self.admits += 1
+        self.admit_seconds += time.perf_counter() - t0
         return slot
 
     def release(self, slot: int, export: bool = True) -> Optional[KVBlob]:
         seq = self.slots[slot]
+        if export and seq is not None and seq.prefilling:
+            # a blob must cover [0, next_pos); half-done queued prefill
+            # doesn't — callers release mid-prefill only without export
+            raise RuntimeError(
+                f"slot {slot} ({seq.req_id}) still has queued prefill; "
+                "cannot export its KV blob")
         blob = self._export_kv(slot, seq) if export and seq else None
         self.slots[slot] = None
         return blob
@@ -244,7 +331,18 @@ class Instance:
 
     # -- prefill -----------------------------------------------------------------
 
+    def _queue_prefill(self, slot: int, seq: EngineSeq,
+                       tokens: List[int], start_pos: int) -> None:
+        if not tokens:
+            return
+        if self.prefill_mode == "sync":
+            self._prefill_slot(slot, tokens, start_pos)
+        else:
+            seq.prefill_queue = list(tokens)
+            seq.prefill_pos = start_pos
+
     def _prefill_slot(self, slot: int, tokens: List[int], start_pos: int):
+        """Reference path: one single-row forward per chunk at admit time."""
         if not tokens:
             return
         B = self.max_slots
@@ -261,21 +359,52 @@ class Instance:
             self.cache = fn(self.params, self.cache, jnp.asarray(buf),
                             jnp.asarray(pos), jnp.asarray(mask))
             self.prefill_tokens += len(chunk)
+            self.row_slots_total += B
+            self.row_slots_active += 1
+            self.prefill_rows_packed += 1
 
-    # -- the decode / verify step -------------------------------------------------
+    # -- the mixed prefill / decode / verify step ---------------------------------
+
+    def _prefill_plan(self) -> Dict[int, int]:
+        """slot -> number of queued prefill tokens to pack this step,
+        bounded per-row by ``prefill_chunk`` and per-step by
+        ``prefill_budget`` (Sarathi-style)."""
+        plan: Dict[int, int] = {}
+        # at least one token per step, or prefilling slots starve forever
+        budget = max(self.prefill_budget, 1)
+        for i in self.prefilling_slots():
+            if budget <= 0:
+                break
+            n = min(len(self.slots[i].prefill_queue), self.prefill_chunk,
+                    budget)
+            if n > 0:
+                plan[i] = n
+                budget -= n
+        return plan
 
     def run_step(self, drafts: Optional[Dict[int, List[int]]] = None
                  ) -> Dict[int, Tuple[List[int], List[float], int]]:
         """One engine iteration over all active slots.
 
-        drafts: slot -> draft token list (may be empty).  Returns
-        slot -> (new_tokens, logprobs, n_draft_accepted).
+        Builds a single (max_slots, T) batch in which each row is either a
+        decode/verify row (pending token + drafts) or the next prefill
+        chunk of a still-prefilling slot — admitting K migrated chunks
+        costs ~K rows inside shared forwards instead of K full-batch
+        forwards, and prefill no longer head-of-line-blocks decode.
+
+        drafts: slot -> draft token list (may be empty; ignored for
+        prefilling slots).  Returns slot -> (new_tokens, logprobs,
+        n_draft_accepted) for decode rows only.
         """
         drafts = drafts or {}
         active = self.active_slots()
         if not active:
             return {}
-        gamma = max((len(drafts.get(i, [])) for i in active), default=0)
+        decode = self.decode_slots()
+        plan = self._prefill_plan()
+        if not decode and not plan:
+            return {}
+        gamma = max((len(drafts.get(i, [])) for i in decode), default=0)
         gamma = min(gamma, self.gamma_max)
         # bucket gamma to bound the number of compiled step shapes
         for b in (0, 1, 2, 4, 8, 16, 32):
@@ -283,6 +412,16 @@ class Instance:
                 gamma = b
                 break
         T = gamma + 1
+        if plan:
+            # bucket the widest planned chunk to a power of two (capped
+            # at prefill_chunk) so tail/throttled chunks don't pad every
+            # decode row to a full-width forward, while compiled step
+            # shapes stay bounded
+            need = max(plan.values())
+            b = 1
+            while b < need:
+                b <<= 1
+            T = max(T, min(b, self.prefill_chunk))
         B = self.max_slots
 
         tokens = np.zeros((B, T), np.int32)
@@ -290,8 +429,9 @@ class Instance:
         mask = np.zeros((B, T), bool)
         temps = np.zeros((B,), np.float32)
         seeds = np.zeros((B,), np.int32)
+        sample_rows = np.zeros((B,), bool)
         ndraft = {}
-        for i in active:
+        for i in decode:
             seq = self.slots[i]
             d = list(drafts.get(i, []))[:gamma]
             ndraft[i] = len(d)
@@ -301,6 +441,12 @@ class Instance:
             mask[i, :len(row)] = True
             temps[i] = seq.temperature
             seeds[i] = seq.seed
+            sample_rows[i] = True
+        for i, n in plan.items():
+            seq = self.slots[i]
+            tokens[i, :n] = seq.prefill_queue[:n]
+            positions[i, :n] = seq.prefill_pos + np.arange(n)
+            mask[i, :n] = True
 
         keys = position_keys(self.base_key, jnp.asarray(seeds),
                              jnp.asarray(positions))
@@ -311,13 +457,23 @@ class Instance:
         sampled, lps, self.cache = fn(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(mask), keys,
-            jnp.asarray(temps))
+            jnp.asarray(temps), jnp.asarray(sample_rows))
         sampled = np.asarray(sampled)
         lps = np.asarray(lps)
+        self.row_slots_total += B
+        self.row_slots_active += len(decode) + len(plan)
+        self.prefill_rows_packed += len(plan)
+
+        # consume queued prefill that this step just wrote to the cache
+        for i, n in plan.items():
+            seq = self.slots[i]
+            del seq.prefill_queue[:n]
+            seq.prefill_pos += n
+            self.prefill_tokens += n
 
         out = {}
         rollback_from = np.full((B,), np.iinfo(np.int32).max, np.int32)
-        for i in active:
+        for i in decode:
             seq = self.slots[i]
             d = list(drafts.get(i, []))[:ndraft[i]]
             # acceptance: longest prefix of drafts matching sampled chain
@@ -358,9 +514,12 @@ class Instance:
             # SSM states advanced through *rejected* draft tokens cannot be
             # invalidated by slot masking — restore the pre-step recurrent
             # state and replay only the accepted prefix (beyond-paper:
-            # spec-decode on SSM/hybrid archs; see DESIGN.md).
-            accepted_mask = np.zeros((B, T), bool)
-            for i in active:
+            # spec-decode on SSM/hybrid archs; see DESIGN.md).  Prefill
+            # rows keep their full mask: every chunk token is "accepted",
+            # and the replay recomputes their state identically.
+            accepted_mask = mask.copy()
+            for i in decode:
+                accepted_mask[i, :] = False
                 n_ok = rollback_from[i] - positions[i, 0]
                 accepted_mask[i, :n_ok] = True
             if not np.array_equal(accepted_mask, mask):
@@ -368,6 +527,6 @@ class Instance:
                 _, _, self.cache = fn(
                     self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(positions), jnp.asarray(accepted_mask), keys,
-                    jnp.asarray(temps))
+                    jnp.asarray(temps), jnp.asarray(sample_rows))
         self.steps_run += 1
         return out

@@ -23,13 +23,21 @@ def position_keys(base_key: jax.Array, seeds: jax.Array,
 
 
 def sample_tokens(logits: jax.Array, keys: jax.Array,
-                  temps: jax.Array) -> jax.Array:
+                  temps: jax.Array,
+                  row_valid: jax.Array = None) -> jax.Array:
     """logits (B,T,V) f32; keys (B,T,2) uint32; temps (B,).
 
     temp <= 0 -> greedy; else Gumbel-max sampling (exact categorical).
+
+    ``row_valid`` (B,) bool marks rows whose samples are consumed.  In a
+    mixed prefill/decode step, prefill rows carry chunk tokens whose
+    "samples" are never used; they are forced greedy (no Gumbel draw from
+    garbage keys) and returned as -1 so a stray consumer fails loudly.
     """
     B, T, V = logits.shape
     lf = logits.astype(jnp.float32)
+    if row_valid is not None:
+        temps = jnp.where(row_valid, temps, 0.0)
 
     def one(lrow, krow, temp):
         def pos(l, kd):
@@ -39,7 +47,10 @@ def sample_tokens(logits: jax.Array, keys: jax.Array,
             return jnp.argmax(scaled).astype(jnp.int32)
         return jax.vmap(pos)(lrow, krow)
 
-    return jax.vmap(one)(lf, keys, temps)
+    sampled = jax.vmap(one)(lf, keys, temps)
+    if row_valid is not None:
+        sampled = jnp.where(row_valid[:, None], sampled, -1)
+    return sampled
 
 
 def token_logprobs_at(logits: jax.Array, tokens: jax.Array) -> jax.Array:

@@ -1,7 +1,7 @@
 """CST / DGDS unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.cst import GroupCST, SuffixTree
 from repro.core.dgds import DraftClient, DraftServer, SpeculationArgs

@@ -1,7 +1,7 @@
 """Alg. 1 (MBA) and Alg. 2 (context-aware scheduling) unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core.context import ContextManager

@@ -22,15 +22,21 @@ def _responses(cfg, params, **kw):
 
 
 def test_outputs_invariant_to_system_config(tiny_params_cache):
-    """Chunking, placement, scheduling policy and speculative decoding may
-    change WHERE and WHEN tokens are produced — never WHICH tokens."""
+    """Chunking, placement, scheduling policy, speculative decoding and
+    prefill batching may change WHERE and WHEN tokens are produced —
+    never WHICH tokens."""
     cfg, params = tiny_params_cache("granite-3-8b")
-    base, _ = _responses(cfg, params)
+    # the reference is the sequential seed path: sync prefill at admit
+    base, _ = _responses(cfg, params, prefill_mode="sync")
     for kw in (
+        dict(),                                          # batched prefill
+        dict(prefill_budget=16),                         # throttled prefill
         dict(chunk_size=8),                              # many chunks
         dict(n_instances=3, max_slots=1, chunk_size=8),  # migrations
         dict(policy="seer", spec_decode=True, chunk_size=16),
         dict(policy="seer", spec_decode=True, multipath_top_k=2),
+        dict(policy="seer", spec_decode=True, chunk_size=16,
+             prefill_mode="sync"),
     ):
         other, stats = _responses(cfg, params, **kw)
         assert other == base, f"outputs changed under {kw}"
@@ -81,3 +87,43 @@ def test_pool_miss_counts():
     pool = GlobalKVPool()
     assert pool.get("nope") is None
     assert pool.misses == 1
+
+
+def test_pool_promotion_is_not_its_own_victim():
+    """Regression: ``get`` promoted an SSD entry to DRAM and evicted
+    *before* bumping recency, so the just-fetched entry was the LRU head
+    and could be chosen as its own eviction victim — counted as an
+    eviction and left tier-tagged "ssd" while the caller used it as a
+    DRAM hit."""
+    pool = GlobalKVPool(dram_capacity=100)
+    pool.put(_blob("a", 60), "n0")
+    pool.put(_blob("b", 60), "n0")          # a spills to ssd
+    assert pool._entries["a"].tier == "ssd"
+    assert pool.get("a", "n0") is not None  # promote: b must spill, not a
+    assert pool._entries["a"].tier == "dram"
+    assert pool._entries["b"].tier == "ssd"
+    assert pool.evictions == 2
+    assert pool.dram_used == 60
+    # the promoted entry now really is a DRAM hit: a re-fetch adds only
+    # the DRAM-tier transfer cost, no SSD leg
+    t0 = pool.transfer_seconds
+    pool.get("a", "n0")
+    assert pool.transfer_seconds - t0 == \
+        pytest.approx(pool.costs.fetch_seconds(60, "dram", False))
+
+
+def test_pool_stats_consistent_under_tight_capacity():
+    """Churning hot entries through a tight DRAM tier must keep byte
+    accounting exact: dram_used equals the sum of dram-tier entries."""
+    pool = GlobalKVPool(dram_capacity=150)
+    for i in range(6):
+        pool.put(_blob(f"r{i}", 60), "n0")
+    for rid in ("r0", "r3", "r0", "r5", "r1"):
+        assert pool.get(rid, "n0") is not None
+    dram = [e for e in pool._entries.values() if e.tier == "dram"]
+    assert pool.dram_used == sum(e.nbytes for e in dram)
+    assert pool.dram_used <= pool.dram_capacity
+    assert pool.misses == 0
+    for i in range(6):
+        pool.drop(f"r{i}")
+    assert pool.dram_used == 0

@@ -2,7 +2,7 @@
 implementation against the original O(n)-scan reference."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.context import ContextManager
 from repro.core.request import Group, ReqState, RolloutRequest

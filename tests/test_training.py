@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.training import (GRPOConfig, OptConfig, adamw_update,
                             group_advantages, init_opt_state, restore, save)
