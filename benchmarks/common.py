@@ -138,10 +138,13 @@ def bench_engine_rollout(n_requests: int = 16, n_instances: int = 2,
         ro.run(make_groups(prompts[:1], group_size=group_size,
                            max_new_tokens=max_new_tokens, seed=seed))
         inv0 = ro.steps.invocations
+        hs0 = ro.steps.host_syncs
+        steps0 = sum(i.steps_run for i in ro.instances)
         for inst in ro.instances:
             inst.row_slots_total = inst.row_slots_active = 0
             inst.admits = 0
             inst.admit_seconds = 0.0
+            inst.tail_fused_rows = 0
         groups = make_groups(prompts, group_size=group_size,
                              max_new_tokens=max_new_tokens, seed=seed)
         t0 = time.perf_counter()
@@ -151,8 +154,13 @@ def bench_engine_rollout(n_requests: int = 16, n_instances: int = 2,
         rows_active = sum(i.row_slots_active for i in ro.instances)
         admits = sum(i.admits for i in ro.instances)
         admit_s = sum(i.admit_seconds for i in ro.instances)
+        engine_steps = sum(i.steps_run for i in ro.instances) - steps0
         return {
             "forward_invocations": ro.steps.invocations - inv0,
+            "engine_steps": engine_steps,
+            "host_syncs_per_step":
+                (ro.steps.host_syncs - hs0) / max(engine_steps, 1),
+            "tail_fused_rows": sum(i.tail_fused_rows for i in ro.instances),
             "tokens_per_sec": res.stats.tokens / max(wall, 1e-9),
             "wall_seconds": wall,
             "prefill_wasted_row_frac":
@@ -164,7 +172,9 @@ def bench_engine_rollout(n_requests: int = 16, n_instances: int = 2,
     sync = one("sync")
     batched = one("batched")
     token_exact = sync.pop("responses") == batched.pop("responses")
+    from repro.engine import donation_supported
     return {
+        "cache_donated": donation_supported(),
         "workload": {
             "n_requests": n_requests, "n_instances": n_instances,
             "max_slots": max_slots, "prompt_len": prompt_len,

@@ -1,0 +1,108 @@
+"""Guard the rollout hot-path perf trajectory.
+
+Runs the real-engine admission micro-benchmark fresh (or loads a fresh
+``BENCH_rollout.json`` via ``--fresh``) and diffs its ``engine`` section
+against the committed baseline in ``results/bench/BENCH_rollout.json``:
+
+* the batched path must stay token-exact vs the sync reference,
+* engine forward launches must not regress (fresh <= baseline + slack),
+* the fused device step must keep <= 1 host sync per ``run_step``,
+* cache-buffer donation must fire (no per-step full-cache copy) on
+  backends that support it,
+* tokens/s must stay within ``--min-tokens-ratio`` of the baseline
+  (loose by default: wall-clock on shared CI boxes is noisy).
+
+Exit status 0 iff every check passes — invoked from the verify skill so
+perf regressions fail tier-1 review, not just eyeballs.
+
+Usage::
+
+    PYTHONPATH=src python scripts/check_bench.py [--baseline PATH]
+        [--fresh PATH] [--min-tokens-ratio 0.5] [--fwd-slack 0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _engine_section(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if "engine" not in doc:
+        raise SystemExit(f"{path}: no 'engine' section")
+    return doc["engine"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline",
+                    default=os.path.join("results", "bench",
+                                         "BENCH_rollout.json"))
+    ap.add_argument("--fresh", default=None,
+                    help="path to a freshly produced BENCH_rollout.json; "
+                         "omitted -> run the engine micro-benchmark now")
+    ap.add_argument("--min-tokens-ratio", type=float, default=0.5,
+                    help="fresh batched tokens/s must be >= this fraction "
+                         "of the committed baseline")
+    ap.add_argument("--fwd-slack", type=int, default=0,
+                    help="allowed extra forward launches vs baseline")
+    args = ap.parse_args(argv)
+
+    base = _engine_section(args.baseline)
+    if args.fresh:
+        fresh = _engine_section(args.fresh)
+    else:
+        # the benchmarks package lives at the repo root, one level up
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        from benchmarks.common import bench_engine_rollout
+        fresh = bench_engine_rollout()
+
+    if fresh.get("workload") != base.get("workload"):
+        print("[check_bench] FAIL workload mismatch: fresh "
+              f"{fresh.get('workload')} vs baseline {base.get('workload')} "
+              "— numbers are not comparable")
+        return 1
+
+    fb, bb = fresh["batched"], base["batched"]
+    checks = [
+        ("token_exact", fresh.get("token_exact") is True,
+         f"batched vs sync token-exact: {fresh.get('token_exact')}"),
+        ("forward_invocations",
+         fb["forward_invocations"]
+         <= bb["forward_invocations"] + args.fwd_slack,
+         f"{fb['forward_invocations']} <= "
+         f"{bb['forward_invocations']} + {args.fwd_slack}"),
+        ("host_syncs_per_step",
+         fb.get("host_syncs_per_step", float("inf")) <= 1.0 + 1e-9,
+         f"{fb.get('host_syncs_per_step')} <= 1"),
+        ("cache_donated",
+         fresh.get("cache_donated", False) or not _donation_supported(),
+         f"donation fired: {fresh.get('cache_donated')}"),
+        ("tokens_per_sec",
+         fb["tokens_per_sec"]
+         >= args.min_tokens_ratio * bb["tokens_per_sec"],
+         f"{fb['tokens_per_sec']:.1f} >= {args.min_tokens_ratio} * "
+         f"{bb['tokens_per_sec']:.1f}"),
+    ]
+    ok = True
+    for name, passed, detail in checks:
+        status = "ok  " if passed else "FAIL"
+        print(f"[check_bench] {status} {name}: {detail}")
+        ok &= passed
+    if not ok:
+        print("[check_bench] rollout hot-path perf regressed vs "
+              f"{args.baseline}")
+    return 0 if ok else 1
+
+
+def _donation_supported() -> bool:
+    from repro.engine import donation_supported
+    return donation_supported()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

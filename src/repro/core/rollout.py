@@ -253,15 +253,23 @@ class SeerRollout:
                 self._admit(sched, r, iid, stats)
                 placed = True
 
-            # 2) step every instance
+            # 2) step every instance — dispatch all device work first
+            # (JAX async dispatch), then commit results, so instance
+            # i+1's host-side work (CST drafting via batch_speculate,
+            # buffer packing) overlaps instance i's device compute.
+            # Drafts for this tick therefore see the CST as of the
+            # previous tick, which cannot change sampled outputs (the
+            # losslessness guarantee: drafts affect only acceptance).
             any_active = False
+            tickets = []
             for inst in self.instances:
-                active = inst.active_slots()
-                if not active:
+                if not inst.active_slots():
                     continue
                 any_active = True
                 drafts = self._collect_drafts(inst)
-                out = inst.run_step(drafts)
+                tickets.append((inst, drafts, inst.dispatch_step(drafts)))
+            for inst, drafts, ticket in tickets:
+                out = inst.commit_step(ticket)
                 stats.steps += 1
                 for slot, (new_toks, _lps, n_acc) in out.items():
                     seq = inst.slots[slot]

@@ -29,6 +29,11 @@ class HardwareSpec:
     hbm_bw: float                # bytes/s per chip
     link_bw: float               # bytes/s per ICI/NVLink link
     launch_overhead: float = 3e-4  # fixed per-forward overhead (s)
+    # blocking device->host readback between steps (host-side accept /
+    # commit).  The fused device-resident step avoids it: acceptance,
+    # bonus select and rollback run inside the jitted step and the host
+    # reads one tiny async block instead.
+    host_sync_overhead: float = 2e-4
 
 
 H800 = HardwareSpec("h800", peak_flops=989e12 / 2, hbm_bw=3.35e12,
@@ -93,6 +98,22 @@ class ForwardCostModel:
 
     def verify_time(self, batch: int, gamma: int, mean_ctx: float) -> float:
         return self.forward_time(batch, gamma + 1, mean_ctx)
+
+    def step_time(self, batch: int, tokens_per_req: int, mean_ctx: float,
+                  *, fused_accept: bool = True) -> float:
+        """One engine decode/verify step including accept/commit cost.
+
+        The device-resident fused step (engine hot path) does the draft
+        acceptance, bonus-token select and slot rollback inside the jit
+        and reads back one tiny async block — no extra term.  The
+        host-accept reference path pays a blocking device->host sync per
+        step (the engine's sync path additionally replays an SSM/hybrid
+        forward on draft rejection; the simulator models attention-cache
+        deployments, so that term is not modeled here)."""
+        t = self.forward_time(batch, tokens_per_req, mean_ctx)
+        if not fused_accept:
+            t += self.hw.host_sync_overhead
+        return t
 
     def prefill_time(self, n_tokens: int, mean_ctx: float = 0.0) -> float:
         return self.forward_time(1, n_tokens, mean_ctx or n_tokens / 2)

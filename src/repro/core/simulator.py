@@ -201,6 +201,10 @@ class SimConfig:
     pool_net_bw: float = 25e9       # KV pool fetch bandwidth (bytes/s)
     streamrl_buckets: int = 4
     seed: int = 0
+    # engines accept/commit on device (the engine tier's fused step);
+    # set False to model a host-accept loop paying a blocking
+    # device->host sync per step (HardwareSpec.host_sync_overhead)
+    fused_accept: bool = True
 
 
 @dataclass
@@ -320,7 +324,8 @@ class ClusterSimulator:
         g_h, g_l = self._gamma_for(inst, ctxmgr, mean_refs)
         mean_ctx = inst.kv_used() / B + n_event / 2
         if st.name == "none" or (g_h == 0 and g_l == 0):
-            t_step = self.fwd.decode_time(B, mean_ctx)
+            t_step = self.fwd.step_time(B, 1, mean_ctx,
+                                        fused_accept=self.sim.fused_accept)
             tok_per_step = 1.0
             gamma_mean = 0.0
         else:
@@ -330,8 +335,9 @@ class ClusterSimulator:
             alpha = st.alpha(int(mean_refs), int(max(g_h, g_l, 1)))
             tok_per_step = self.sd_model.expected_tokens(
                 alpha, int(round(gamma_mean)))
-            t_step = self.fwd.verify_time(B, int(round(gamma_mean)),
-                                          mean_ctx)
+            t_step = self.fwd.step_time(B, int(round(gamma_mean)) + 1,
+                                        mean_ctx,
+                                        fused_accept=self.sim.fused_accept)
             t_step += self.sd_model.draft_time(B, int(round(gamma_mean)))
             if st.draft_flops_per_token or st.draft_param_bytes:
                 # γ sequential draft forwards: roofline of compute (all B

@@ -1,6 +1,8 @@
-from repro.engine.engine import EngineSeq, Instance, KVBlob, StepFunctions
-from repro.engine.sampling import (position_keys, sample_tokens,
-                                   token_logprobs_at)
+from repro.engine.engine import (EngineSeq, Instance, KVBlob, StepFunctions,
+                                 StepTicket, donation_supported)
+from repro.engine.sampling import (draft_acceptance, position_keys,
+                                   sample_tokens, token_logprobs_at)
 
-__all__ = ["EngineSeq", "Instance", "KVBlob", "StepFunctions",
-           "position_keys", "sample_tokens", "token_logprobs_at"]
+__all__ = ["EngineSeq", "Instance", "KVBlob", "StepFunctions", "StepTicket",
+           "donation_supported", "draft_acceptance", "position_keys",
+           "sample_tokens", "token_logprobs_at"]

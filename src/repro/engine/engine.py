@@ -4,25 +4,56 @@ Slot-based continuous batching with static JAX shapes:
 
 * a cache buffer of ``max_slots`` rows x ``cache_len`` positions
 * batched chunked prefill: ``admit`` only *queues* prefill work; every
-  ``run_step`` packs the next chunk of every still-prefilling slot into
-  the same forward as the decode/verify rows (a mixed step), bounded by a
-  Sarathi-style per-step prefill token budget
-* one jitted ``step`` covering decode (T=1), speculative verify
+  step packs the next chunk of every still-prefilling slot into the same
+  forward as the decode/verify rows (a mixed step), bounded by a
+  Sarathi-style per-step prefill token budget.  Chunks are ordered
+  shortest-remaining-prefill first so nearly-ready slots reach decode
+  (and free their queue budget) sooner, and a tail chunk that fits the
+  step with one column to spare is fused with the row's first decode
+  token (saves one full step per admission).
+* one jitted ``fused_step`` covering decode (T=1), speculative verify
   (T = gamma_max+1) and mixed prefill/decode (T = prefill_chunk); rows
   carry a token mask so each request may submit a different number of
   tokens, and a per-row sample mask so prefill rows never sample
 * KV export/import per slot — the handle the global KV pool moves between
-  instances (divided rollout's stateless chunk migration)
+  instances (divided rollout's stateless chunk migration).  Blobs are
+  trimmed to the live prefix ``[0, next_pos)`` along the position axis
+  so pool accounting and migrations never carry dead bytes.
+
+Device-resident step contract (the hot path)
+--------------------------------------------
+
+``prefill_mode="batched"`` steps are device-resident:
+
+* **The cache pytree is donated.**  ``StepFunctions.fused_step`` /
+  ``prefill`` are compiled with ``donate_argnums`` on the cache, so each
+  step updates the KV buffers in place instead of copying
+  ``max_slots x cache_len`` of cache every iteration.  Callers must not
+  retain references to ``Instance.cache`` leaves across a step — after
+  dispatch the previous arrays are invalid.  ``_export_kv`` materialises
+  fresh slices (``jnp.take``), never aliases, so exported blobs survive
+  donation.
+* **Accept/commit runs on device.**  The longest-prefix draft-acceptance
+  match, bonus-token select and the ``slot_pos`` rollback of rejected
+  draft positions all happen inside the jitted step; the SSM
+  accepted-prefix replay is a masked second forward under ``lax.cond``
+  in the same jit rather than a host round-trip.
+* **The host reads one tiny array block per step.**  ``dispatch_step``
+  only enqueues device work (JAX async dispatch) and returns a
+  :class:`StepTicket`; ``commit_step`` performs the single
+  ``jax.device_get`` of ``(sampled, logprobs, n_accepted)`` — counted in
+  ``StepFunctions.host_syncs`` — and folds the results into host state.
+  Between a dispatch and its commit the instance must not admit or
+  release slots (enforced).
 
 Step functions are compiled once per (config, T) and shared by every
 instance of that model (the paper colocates many instances per model).
-``prefill_mode="sync"`` keeps the original admit-time python loop (one
-single-row forward per chunk) as the reference path for losslessness and
-perf comparisons.
+``prefill_mode="sync"`` keeps the original admit-time python loop plus
+host-side acceptance (one blocking read of the full sample block per
+step) as the reference path for losslessness and perf comparisons.
 """
 from __future__ import annotations
 
-import math
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -32,9 +63,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.engine.sampling import (position_keys, sample_tokens,
-                                   token_logprobs_at)
+from repro.engine.sampling import (draft_acceptance, position_keys,
+                                   sample_tokens, token_logprobs_at)
 from repro.models import build_cross_cache, forward, init_cache
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+_DONATION_SUPPORTED: Optional[bool] = None
+
+
+def donation_supported() -> bool:
+    """Whether the default backend actually reuses donated buffers."""
+    global _DONATION_SUPPORTED
+    if _DONATION_SUPPORTED is None:
+        probe = jnp.zeros((8,), jnp.float32)
+        jax.jit(lambda a: a + 1, donate_argnums=(0,))(probe)
+        _DONATION_SUPPORTED = bool(probe.is_deleted())
+    return _DONATION_SUPPORTED
 
 
 # ---------------------------------------------------------------------------
@@ -46,9 +91,12 @@ class StepFunctions:
     """Compile-once holder for a given model config.
 
     Every returned callable counts its calls in ``invocations`` (total
-    model forwards) and ``invocations_by_kind`` ("step:T" / "prefill:T")
-    — the benchmark/regression currency for the batched-prefill work: the
-    whole point of mixed steps is fewer forwards for the same tokens.
+    step launches) and ``invocations_by_kind`` ("step:T" / "fused:T" /
+    "prefill:T") — the benchmark/regression currency for the batched
+    prefill + fused-step work: fewer launches for the same tokens.
+    ``host_syncs`` counts blocking device->host reads of step results
+    (the other currency: the fused path reads one tiny block per step,
+    the sync reference path synchronizes the full sample block).
     """
 
     def __init__(self, cfg: ModelConfig):
@@ -56,6 +104,7 @@ class StepFunctions:
         self._step_cache: dict = {}
         self.invocations = 0
         self.invocations_by_kind: Dict[str, int] = {}
+        self.host_syncs = 0
 
     def _counted(self, fn, kind: str):
         def wrapper(*args):
@@ -66,7 +115,8 @@ class StepFunctions:
         return wrapper
 
     def step(self, T: int):
-        """(params, cache, tokens(B,T), positions, mask, keys, temps,
+        """Reference step (no donation, host-side acceptance):
+        (params, cache, tokens(B,T), positions, mask, keys, temps,
         sample_rows(B,)) -> (sampled(B,T), logprobs(B,T), new_cache)."""
         if T in self._step_cache:
             return self._step_cache[T]
@@ -84,6 +134,81 @@ class StepFunctions:
 
         counted = self._counted(fn, f"step:{T}")
         self._step_cache[T] = counted
+        return counted
+
+    def fused_step(self, T: int):
+        """Device-resident step with donated cache and on-device
+        accept/commit.
+
+        (params, cache, tokens(B,T), positions, mask, keys, temps,
+        sample_rows(B,), anchor(B,), n_drafts(B,)) ->
+        (sampled(B,T), logprobs(B,T), n_accepted(B,), new_cache)
+
+        Row layout: column ``anchor[i]`` holds the row's pending token
+        (0 for plain decode/verify rows; the tail-fused first-decode row
+        puts its pending token after the last prefill-chunk column);
+        columns ``anchor+1 .. anchor+n_drafts`` hold draft tokens.  The
+        returned cache already has rejected draft positions invalidated
+        (``slot_pos`` rollback) and, on SSM/hybrid archs, the recurrent
+        state replayed over the accepted prefix only — the host never
+        touches the cache between steps.
+        """
+        key = ("fused", T)
+        if key in self._step_cache:
+            return self._step_cache[key]
+        cfg = self.cfg
+
+        def raw(params, cache, tokens, positions, mask, keys, temps,
+                sample_rows, anchor, n_drafts):
+            has_rec = "ssm" in cache
+            pre_rec = {k: cache[k] for k in ("ssm", "conv")
+                       if k in cache}
+            logits, new_cache, _ = forward(
+                cfg, params, tokens, positions, cache, token_mask=mask)
+            logits = logits.astype(jnp.float32)
+            sampled = sample_tokens(logits, keys, temps, sample_rows)
+            lp = token_logprobs_at(logits, sampled)
+            n_acc = draft_acceptance(sampled, tokens, anchor, n_drafts)
+            # on-device commit: the accepted chain of row i covers
+            # positions [pos(anchor), pos(anchor)+n_acc]; invalidate every
+            # cache slot beyond it (rejected drafts)
+            anchor_pos = jnp.take_along_axis(
+                positions, anchor[:, None], axis=1)[:, 0]
+            committed_end = jnp.where(
+                sample_rows, anchor_pos + n_acc + 1, _INT32_MAX)
+            if "slot_pos" in new_cache:
+                new_cache["slot_pos"] = jnp.where(
+                    new_cache["slot_pos"] >= committed_end[:, None], -1,
+                    new_cache["slot_pos"])
+            if has_rec and T > 1:
+                # SSM states advanced through *rejected* draft tokens
+                # cannot be invalidated by slot masking — replay the
+                # accepted prefix from the pre-step recurrent state as a
+                # masked second pass in the same jit (beyond-paper:
+                # spec-decode on SSM/hybrid archs; see DESIGN.md).
+                # Prefill rows keep their full mask: every chunk token is
+                # "accepted" and the replay recomputes their state
+                # identically.
+                cols = jnp.arange(T)[None, :]
+                acc_mask = mask & jnp.where(
+                    sample_rows[:, None],
+                    cols <= (anchor + n_acc)[:, None], True)
+
+                def replay(nc):
+                    c2 = dict(nc)
+                    c2.update(pre_rec)
+                    _, c3, _ = forward(cfg, params, tokens, positions,
+                                       c2, token_mask=acc_mask)
+                    return c3
+
+                new_cache = jax.lax.cond(
+                    jnp.any(acc_mask != mask), replay, lambda nc: nc,
+                    new_cache)
+            return sampled, lp, n_acc, new_cache
+
+        fn = jax.jit(raw, donate_argnums=(1,))
+        counted = self._counted(fn, f"fused:{T}")
+        self._step_cache[key] = counted
         return counted
 
     def prefill(self, T: int):
@@ -162,7 +287,13 @@ class EngineSeq:
 
 @dataclass
 class KVBlob:
-    """Exported per-request cache state (what the global pool stores)."""
+    """Exported per-request cache state (what the global pool stores).
+
+    Position-indexed leaves (k/v/slot_pos) are trimmed to the live
+    prefix ``[0, min(next_pos, cache_len))`` — ``nbytes`` is the real
+    footprint, and migrations move no dead bytes.  Recurrent leaves
+    (ssm/conv) have no position axis and ship whole.
+    """
     req_id: str
     arrays: dict                  # cache leaves sliced at the slot
     next_pos: int
@@ -177,6 +308,30 @@ class KVBlob:
 def _slot_slice(key: str):
     """Cache leaves carry the slot (batch) dim at 0 or 1."""
     return 0 if key == "slot_pos" else 1
+
+
+def _pos_axis(key: str) -> Optional[int]:
+    """Axis of the cache-position dim in a per-slot blob leaf, or None
+    for leaves without one (recurrent state, cross-attention memory)."""
+    return {"k": 1, "v": 1, "slot_pos": 0}.get(key)
+
+
+@dataclass
+class StepTicket:
+    """In-flight device step: everything ``commit_step`` needs to fold
+    the (still-async) results into host state.  ``sampled``/``lps``/
+    ``n_acc`` are device arrays; reading them is the one host sync."""
+    sampled: jax.Array
+    lps: jax.Array
+    n_acc: jax.Array
+    sample_slots: List[int]           # decode rows + tail-fused rows
+    anchors: Dict[int, int]           # slot -> column of its pending token
+
+
+@dataclass
+class _SyncTicket:
+    """Already-committed result of the sync reference path."""
+    out: Dict[int, Tuple[List[int], List[float], int]]
 
 
 class Instance:
@@ -215,6 +370,7 @@ class Instance:
             ck, cv = build_cross_cache(cfg, params, modality_embeds)
             self.cache["cross_k"], self.cache["cross_v"] = ck, cv
         self.slots: List[Optional[EngineSeq]] = [None] * max_slots
+        self._inflight: Optional[StepTicket] = None
         # stats
         self.tokens_generated = 0
         self.steps_run = 0
@@ -226,6 +382,7 @@ class Instance:
         self.row_slots_total = 0
         self.row_slots_active = 0
         self.prefill_rows_packed = 0   # chunk-rows of prefill work issued
+        self.tail_fused_rows = 0       # tail chunks fused with 1st decode
 
     # -- capacity ------------------------------------------------------------
 
@@ -264,7 +421,9 @@ class Instance:
         """Place ``seq`` in a free slot.  Batched mode only *queues* the
         prefill work — O(1), no forward — so K admissions cost K queue
         appends, not K x ceil(len/chunk) single-row forwards; the queued
-        chunks ride along with subsequent mixed ``run_step`` batches."""
+        chunks ride along with subsequent mixed step batches."""
+        if self._inflight is not None:
+            raise RuntimeError("admit() while a step ticket is in flight")
         t0 = time.perf_counter()
         slot = self.slots.index(None)
         self.slots[slot] = seq
@@ -291,6 +450,8 @@ class Instance:
         return slot
 
     def release(self, slot: int, export: bool = True) -> Optional[KVBlob]:
+        if self._inflight is not None:
+            raise RuntimeError("release() while a step ticket is in flight")
         seq = self.slots[slot]
         if export and seq is not None and seq.prefilling:
             # a blob must cover [0, next_pos); half-done queued prefill
@@ -305,10 +466,20 @@ class Instance:
     # -- KV migration -----------------------------------------------------------
 
     def _export_kv(self, slot: int, seq: EngineSeq) -> KVBlob:
+        """Slice the slot's cache state, trimmed to the live prefix.
+
+        ``jnp.take`` / ``lax.slice`` materialise new arrays, so blobs
+        never alias the (donated) instance cache."""
         arrays = {}
         nbytes = 0
         for k, v in self.cache.items():
             sl = jnp.take(v, slot, axis=_slot_slice(k))
+            ax = _pos_axis(k)
+            if ax is not None:
+                # ring caches wrap at the buffer size; the live region is
+                # [0, next_pos) until the ring fills, then the whole ring
+                live = min(seq.next_pos, sl.shape[ax])
+                sl = jax.lax.slice_in_dim(sl, 0, live, axis=ax)
             arrays[k] = sl
             nbytes += sl.size * sl.dtype.itemsize
         return KVBlob(seq.req_id, arrays, seq.next_pos, nbytes)
@@ -317,6 +488,18 @@ class Instance:
         for k in self.cache:
             ax = _slot_slice(k)
             src = blob.arrays[k]
+            tshape = list(self.cache[k].shape)
+            del tshape[ax]
+            pax = _pos_axis(k)
+            if pax is not None and src.shape[pax] != tshape[pax]:
+                # trimmed blob: pad dead positions back (slot_pos with -1
+                # so they stay invalid, K/V with zeros — never attended)
+                pad = tshape[pax] - src.shape[pax]
+                widths = [(0, 0)] * src.ndim
+                widths[pax] = (0, max(pad, 0))
+                fill = -1 if k == "slot_pos" else 0
+                src = jnp.pad(src, widths, constant_values=fill) if pad > 0 \
+                    else jax.lax.slice_in_dim(src, 0, tshape[pax], axis=pax)
             idx = [slice(None)] * self.cache[k].ndim
             idx[ax] = slot
             self.cache[k] = self.cache[k].at[tuple(idx)].set(src)
@@ -368,11 +551,15 @@ class Instance:
     def _prefill_plan(self) -> Dict[int, int]:
         """slot -> number of queued prefill tokens to pack this step,
         bounded per-row by ``prefill_chunk`` and per-step by
-        ``prefill_budget`` (Sarathi-style)."""
+        ``prefill_budget`` (Sarathi-style).  Slots are served shortest
+        remaining prefill first (ties by slot index) so nearly-ready
+        slots reach decode — and release their queue budget — sooner."""
         plan: Dict[int, int] = {}
         # at least one token per step, or prefilling slots starve forever
         budget = max(self.prefill_budget, 1)
-        for i in self.prefilling_slots():
+        order = sorted(self.prefilling_slots(),
+                       key=lambda i: (len(self.slots[i].prefill_queue), i))
+        for i in order:
             if budget <= 0:
                 break
             n = min(len(self.slots[i].prefill_queue), self.prefill_chunk,
@@ -384,26 +571,43 @@ class Instance:
 
     def run_step(self, drafts: Optional[Dict[int, List[int]]] = None
                  ) -> Dict[int, Tuple[List[int], List[float], int]]:
-        """One engine iteration over all active slots.
-
-        Builds a single (max_slots, T) batch in which each row is either a
-        decode/verify row (pending token + drafts) or the next prefill
-        chunk of a still-prefilling slot — admitting K migrated chunks
-        costs ~K rows inside shared forwards instead of K full-batch
-        forwards, and prefill no longer head-of-line-blocks decode.
+        """One engine iteration over all active slots: dispatch + commit.
 
         drafts: slot -> draft token list (may be empty; ignored for
-        prefilling slots).  Returns slot -> (new_tokens, logprobs,
-        n_draft_accepted) for decode rows only.
+        still-prefilling slots).  Returns slot -> (new_tokens, logprobs,
+        n_draft_accepted) for sample rows only.
         """
+        return self.commit_step(self.dispatch_step(drafts))
+
+    def dispatch_step(self, drafts: Optional[Dict[int, List[int]]] = None):
+        """Enqueue one engine step on the device without any host sync.
+
+        Builds a single (max_slots, T) batch in which each row is either
+        a decode/verify row (pending token + drafts) or the next prefill
+        chunk of a still-prefilling slot — admitting K migrated chunks
+        costs ~K rows inside shared forwards instead of K full-batch
+        forwards, and prefill no longer head-of-line-blocks decode.  A
+        tail chunk that fits T with a column to spare also carries the
+        row's pending token and samples its first decode token in the
+        same forward.
+
+        Returns a :class:`StepTicket` (or None if there is nothing to
+        do) to pass to :meth:`commit_step`; callers may dispatch steps
+        on several instances before committing any, overlapping host
+        work with device compute.
+        """
+        if self._inflight is not None:
+            raise RuntimeError("dispatch_step() with a ticket in flight")
         drafts = drafts or {}
+        if self.prefill_mode == "sync":
+            return _SyncTicket(self._run_step_sync(drafts))
         active = self.active_slots()
         if not active:
-            return {}
+            return None
         decode = self.decode_slots()
         plan = self._prefill_plan()
         if not decode and not plan:
-            return {}
+            return None
         gamma = max((len(drafts.get(i, [])) for i in decode), default=0)
         gamma = min(gamma, self.gamma_max)
         # bucket gamma to bound the number of compiled step shapes
@@ -417,6 +621,166 @@ class Instance:
             # at prefill_chunk) so tail/throttled chunks don't pad every
             # decode row to a full-width forward, while compiled step
             # shapes stay bounded
+            need = max(plan.values())
+            b = 1
+            while b < need:
+                b <<= 1
+            T = max(T, min(b, self.prefill_chunk))
+        B = self.max_slots
+
+        # tail-chunk fusion: a slot whose whole remaining queue fits this
+        # step with one column to spare becomes a sample row — its first
+        # decode token is emitted by the same forward, saving one full
+        # step per admission
+        fused = [i for i, n in plan.items()
+                 if n == len(self.slots[i].prefill_queue) and n + 1 <= T]
+
+        tokens = np.zeros((B, T), np.int32)
+        positions = np.zeros((B, T), np.int32)
+        mask = np.zeros((B, T), bool)
+        temps = np.zeros((B,), np.float32)
+        seeds = np.zeros((B,), np.int32)
+        sample_rows = np.zeros((B,), bool)
+        anchor = np.zeros((B,), np.int32)
+        n_drafts = np.zeros((B,), np.int32)
+        anchors: Dict[int, int] = {}
+        for i in decode:
+            seq = self.slots[i]
+            d = list(drafts.get(i, []))[:gamma]
+            n_drafts[i] = len(d)
+            row = [seq.last_token] + d
+            tokens[i, :len(row)] = row
+            positions[i, :len(row)] = seq.next_pos + np.arange(len(row))
+            mask[i, :len(row)] = True
+            temps[i] = seq.temperature
+            seeds[i] = seq.seed
+            sample_rows[i] = True
+            anchors[i] = 0
+        for i, n in plan.items():
+            seq = self.slots[i]
+            tokens[i, :n] = seq.prefill_queue[:n]
+            positions[i, :n] = seq.prefill_pos + np.arange(n)
+            mask[i, :n] = True
+            if i in fused:
+                # queue covers [prefill_pos, next_pos): the pending token
+                # sits right after the tail chunk
+                tokens[i, n] = seq.last_token
+                positions[i, n] = seq.next_pos
+                mask[i, n] = True
+                temps[i] = seq.temperature
+                seeds[i] = seq.seed
+                sample_rows[i] = True
+                anchor[i] = n
+                anchors[i] = n
+
+        keys = position_keys(self.base_key, jnp.asarray(seeds),
+                             jnp.asarray(positions))
+        fn = self.steps.fused_step(T)
+        sampled, lps, n_acc, self.cache = fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(mask), keys,
+            jnp.asarray(temps), jnp.asarray(sample_rows),
+            jnp.asarray(anchor), jnp.asarray(n_drafts))
+        self.row_slots_total += B
+        self.row_slots_active += len(decode) + len(plan)
+        self.prefill_rows_packed += len(plan)
+        self.tail_fused_rows += len(fused)
+
+        # consume queued prefill that this step just wrote to the cache
+        # (host bookkeeping only — no result needed)
+        for i, n in plan.items():
+            seq = self.slots[i]
+            del seq.prefill_queue[:n]
+            seq.prefill_pos += n
+            self.prefill_tokens += n
+        self.steps_run += 1
+
+        ticket = StepTicket(sampled=sampled, lps=lps, n_acc=n_acc,
+                            sample_slots=decode + fused, anchors=anchors)
+        self._inflight = ticket
+        return ticket
+
+    def commit_step(self, ticket) -> Dict[int, Tuple[List[int],
+                                                     List[float], int]]:
+        """Fold a dispatched step's results into host state.
+
+        Performs the step's single host sync: one ``jax.device_get`` of
+        the tiny ``(sampled, logprobs, n_accepted)`` block.  Everything
+        else (acceptance, rollback, SSM replay) already happened on
+        device."""
+        if ticket is None:
+            return {}
+        if isinstance(ticket, _SyncTicket):
+            return ticket.out
+        if ticket is not self._inflight:
+            # committing a stale/duplicate ticket would re-apply its
+            # results (duplicated tokens, next_pos past the cache state)
+            raise RuntimeError("commit_step(): ticket is not the "
+                               "instance's in-flight step")
+        self._inflight = None
+        sampled, lps, n_acc = jax.device_get(
+            (ticket.sampled, ticket.lps, ticket.n_acc))
+        self.steps.host_syncs += 1
+        out = {}
+        for i in ticket.sample_slots:
+            seq = self.slots[i]
+            a = int(n_acc[i])
+            off = ticket.anchors[i]
+            new_toks = [int(sampled[i, off + j]) for j in range(a + 1)]
+            new_lps = [float(lps[i, off + j]) for j in range(a + 1)]
+            out[i] = self._commit_row(seq, new_toks, new_lps, a)
+        return out
+
+    def _commit_row(self, seq: EngineSeq, new_toks: List[int],
+                    new_lps: List[float], a: int):
+        """Shared host bookkeeping for one sample row's step result."""
+        # truncate to request budget / stop token
+        room = seq.max_new_tokens - len(seq.generated)
+        cut = new_toks[:room]
+        if seq.stop_token is not None and seq.stop_token in cut:
+            cut = cut[:cut.index(seq.stop_token) + 1]
+        new_toks, new_lps = cut, new_lps[:len(cut)]
+        seq.generated.extend(new_toks)
+        seq.logprobs.extend(new_lps)
+        self.tokens_generated += len(new_toks)
+        # cache holds positions next_pos .. next_pos+gamma for this row;
+        # committed prefix is next_pos .. next_pos+a (len(new_toks) may
+        # be shorter due to budget/stop, but those are finished anyway)
+        committed_hi = seq.next_pos + a          # highest valid position
+        seq.last_token = new_toks[-1] if new_toks else seq.last_token
+        seq.next_pos = committed_hi + 1
+        if seq.stop_token is not None and new_toks and \
+                new_toks[-1] == seq.stop_token:
+            seq.finished = True
+        if len(seq.generated) >= seq.max_new_tokens:
+            seq.finished = True
+        if seq.next_pos >= self.cache_len - 1 and not self.cfg.sliding_window \
+                and self.cfg.arch_type not in ("ssm",):
+            seq.finished = True   # cache exhausted (engine-tier guard)
+        return (new_toks, new_lps, a)
+
+    # -- sync reference path (losslessness oracle) --------------------------------
+
+    def _run_step_sync(self, drafts: Dict[int, List[int]]
+                       ) -> Dict[int, Tuple[List[int], List[float], int]]:
+        """Seed-path step: undonated cache, host-side acceptance over the
+        full sample block, host-issued rollback and SSM replay.  Kept
+        verbatim as the oracle the fused device path is tested against."""
+        active = self.active_slots()
+        if not active:
+            return {}
+        decode = self.decode_slots()
+        plan = self._prefill_plan()
+        if not decode and not plan:
+            return {}
+        gamma = max((len(drafts.get(i, [])) for i in decode), default=0)
+        gamma = min(gamma, self.gamma_max)
+        for b in (0, 1, 2, 4, 8, 16, 32):
+            if gamma <= b:
+                gamma = b
+                break
+        T = gamma + 1
+        if plan:
             need = max(plan.values())
             b = 1
             while b < need:
@@ -460,6 +824,7 @@ class Instance:
             jnp.asarray(temps), jnp.asarray(sample_rows))
         sampled = np.asarray(sampled)
         lps = np.asarray(lps)
+        self.steps.host_syncs += 2   # full sample + logprob blocks
         self.row_slots_total += B
         self.row_slots_active += len(decode) + len(plan)
         self.prefill_rows_packed += len(plan)
@@ -472,7 +837,7 @@ class Instance:
             self.prefill_tokens += n
 
         out = {}
-        rollback_from = np.full((B,), np.iinfo(np.int32).max, np.int32)
+        rollback_from = np.full((B,), _INT32_MAX, np.int32)
         for i in decode:
             seq = self.slots[i]
             d = list(drafts.get(i, []))[:ndraft[i]]
@@ -482,41 +847,17 @@ class Instance:
                 a += 1
             new_toks = [int(sampled[i, j]) for j in range(a + 1)]
             new_lps = [float(lps[i, j]) for j in range(a + 1)]
-            # truncate to request budget / stop token
-            room = seq.max_new_tokens - len(seq.generated)
-            cut = new_toks[:room]
-            if seq.stop_token is not None and seq.stop_token in cut:
-                cut = cut[:cut.index(seq.stop_token) + 1]
-            new_toks, new_lps = cut, new_lps[:len(cut)]
-            seq.generated.extend(new_toks)
-            seq.logprobs.extend(new_lps)
-            self.tokens_generated += len(new_toks)
-            # cache holds positions next_pos .. next_pos+gamma for this row;
-            # committed prefix is next_pos .. next_pos+a (len(new_toks) may
-            # be shorter due to budget/stop, but those are finished anyway)
-            committed_hi = seq.next_pos + a          # highest valid position
-            rollback_from[i] = committed_hi + 1
-            seq.last_token = new_toks[-1] if new_toks else seq.last_token
-            seq.next_pos = committed_hi + 1
-            if seq.stop_token is not None and new_toks and \
-                    new_toks[-1] == seq.stop_token:
-                seq.finished = True
-            if len(seq.generated) >= seq.max_new_tokens:
-                seq.finished = True
-            if seq.next_pos >= self.cache_len - 1 and not self.cfg.sliding_window \
-                    and self.cfg.arch_type not in ("ssm",):
-                seq.finished = True   # cache exhausted (engine-tier guard)
-            out[i] = (new_toks, new_lps, a)
+            rollback_from[i] = seq.next_pos + a + 1
+            out[i] = self._commit_row(seq, new_toks, new_lps, a)
         if "slot_pos" in self.cache and gamma > 0:
             self.cache["slot_pos"] = self.steps.rollback(
                 self.cache["slot_pos"], jnp.asarray(rollback_from))
         if pre_ssm is not None:
             # SSM states advanced through *rejected* draft tokens cannot be
             # invalidated by slot masking — restore the pre-step recurrent
-            # state and replay only the accepted prefix (beyond-paper:
-            # spec-decode on SSM/hybrid archs; see DESIGN.md).  Prefill
-            # rows keep their full mask: every chunk token is "accepted",
-            # and the replay recomputes their state identically.
+            # state and replay only the accepted prefix.  Prefill rows keep
+            # their full mask: every chunk token is "accepted", and the
+            # replay recomputes their state identically.
             accepted_mask = mask.copy()
             for i in decode:
                 accepted_mask[i, :] = False

@@ -53,6 +53,33 @@ def sample_tokens(logits: jax.Array, keys: jax.Array,
     return sampled
 
 
+def draft_acceptance(sampled: jax.Array, tokens: jax.Array,
+                     anchor: jax.Array, n_drafts: jax.Array) -> jax.Array:
+    """Longest accepted draft prefix per row, computed on device.
+
+    Row layout: column ``anchor[i]`` of ``tokens`` holds the row's
+    pending token and columns ``anchor+1 .. anchor+n_drafts`` its draft
+    tokens.  ``sampled[i, anchor+j]`` is the token the model samples
+    after consuming draft ``j-1`` (the pending token for ``j=0``), so
+    draft ``j`` is accepted iff it equals that sample and every earlier
+    draft was accepted — the same longest-prefix match the host-side
+    reference path performs, but without a device sync.
+
+    sampled/tokens: (B, T); anchor/n_drafts: (B,) int32 -> (B,) int32.
+    """
+    B, T = tokens.shape
+    if T == 1:
+        return jnp.zeros((B,), jnp.int32)
+    j = jnp.arange(T - 1)
+    d_cols = jnp.clip(anchor[:, None] + 1 + j[None, :], 0, T - 1)
+    c_cols = jnp.clip(anchor[:, None] + j[None, :], 0, T - 1)
+    d_tok = jnp.take_along_axis(tokens, d_cols, axis=1)
+    chain = jnp.take_along_axis(sampled, c_cols, axis=1)
+    ok = (d_tok == chain) & (j[None, :] < n_drafts[:, None])
+    return jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1),
+                   axis=1).astype(jnp.int32)
+
+
 def token_logprobs_at(logits: jax.Array, tokens: jax.Array) -> jax.Array:
     """logprob of ``tokens`` under softmax(logits); (B,T,V),(B,T)->(B,T) f32."""
     lf = logits.astype(jnp.float32)

@@ -1,0 +1,173 @@
+"""Device-resident engine hot path: donation, single host sync per step,
+trimmed KV blobs, prefill ordering and tail-chunk fusion."""
+import jax
+import numpy as np
+import pytest
+
+from repro.engine import (EngineSeq, Instance, StepFunctions,
+                          donation_supported)
+
+
+def _seq(rid, prompt, n, temp=0.0, seed=0):
+    return EngineSeq(rid, "g0", list(prompt), seed=seed, temperature=temp,
+                     max_new_tokens=n)
+
+
+# ---------------- host syncs ---------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-370m"])
+def test_run_step_at_most_one_host_sync(arch, tiny_params_cache):
+    """The fused path must read back exactly one tiny block per step —
+    any hidden implicit device->host transfer (the old full-sample-block
+    sync, a host-side acceptance read, ...) trips the transfer guard."""
+    cfg, params = tiny_params_cache(arch)
+    steps = StepFunctions(cfg)
+    inst = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                    gamma_max=4, prefill_chunk=8, base_seed=7)
+    s0 = _seq("r0", [2, 3, 4, 5, 6, 7], 12, temp=1.0, seed=3)
+    s1 = _seq("r1", [5, 9, 2], 12, temp=1.0, seed=4)
+    slot0 = inst.admit(s0)
+    inst.admit(s1)
+    # warm the compile cache (T=1 and T=3 shapes) outside the guard:
+    # compilation itself may move data between host and device
+    inst.run_step()
+    inst.run_step({slot0: [1, 1]})
+    it = 0
+    while not (s0.finished and s1.finished):
+        syncs0 = steps.host_syncs
+        drafts = {slot0: [(s0.generated[-1] + 13) % cfg.vocab_size] * 2} \
+            if (s0.generated and not s0.finished and it % 2) else {}
+        with jax.transfer_guard_device_to_host("disallow"):
+            inst.run_step(drafts)
+        assert steps.host_syncs - syncs0 <= 1
+        it += 1
+        assert it < 200
+    assert len(s0.generated) == 12 and len(s1.generated) == 12
+
+
+# ---------------- donation -----------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "zamba2-1.2b"])
+def test_step_donates_cache_buffers(arch, tiny_params_cache):
+    """Each fused step must reuse the cache buffers in place: after a
+    step, every leaf of the previous cache pytree is deleted, not
+    copied."""
+    if not donation_supported():
+        pytest.skip("backend does not implement buffer donation")
+    cfg, params = tiny_params_cache(arch)
+    steps = StepFunctions(cfg)
+    inst = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                    gamma_max=4, prefill_chunk=8, base_seed=7)
+    s = _seq("r0", range(2, 20), 6, temp=1.0, seed=3)
+    inst.admit(s)
+    while not s.finished:
+        before = dict(inst.cache)
+        inst.run_step()
+        for key, leaf in before.items():
+            assert leaf.is_deleted(), \
+                f"cache[{key!r}] was copied, not donated"
+
+
+# ---------------- trimmed KV blobs ---------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "zamba2-1.2b"])
+def test_kv_blob_trimmed_to_live_prefix(arch, tiny_params_cache):
+    """Exported blobs carry only [0, next_pos) along the position axis,
+    so pool accounting and migrations move no dead bytes — and a
+    re-imported trimmed blob resumes identically."""
+    cfg, params = tiny_params_cache(arch)
+    steps = StepFunctions(cfg)
+    prompt = [4, 8, 15, 16, 23, 42]
+
+    ref_inst = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                        gamma_max=4, base_seed=7)
+    ref_seq = _seq("ref", prompt, 16, seed=1)
+    ref_inst.admit(ref_seq)
+    while not ref_seq.finished:
+        ref_inst.run_step()
+
+    a = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                 gamma_max=4, instance_id="a", base_seed=7)
+    seq = _seq("r0", prompt, 16, seed=1)
+    slot = a.admit(seq)
+    for _ in range(6):
+        a.run_step()
+    blob = a.release(slot, export=True)
+    assert 0 < blob.next_pos < 128
+    for key in ("k", "v"):
+        if key in blob.arrays:
+            assert blob.arrays[key].shape[1] == blob.next_pos
+    if "slot_pos" in blob.arrays:
+        assert blob.arrays["slot_pos"].shape[0] == blob.next_pos
+    full = sum(np.prod(v.shape) * v.dtype.itemsize
+               for v in a.cache.values()) / a.max_slots
+    assert blob.nbytes < full
+
+    b = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                 gamma_max=4, instance_id="b", base_seed=7)
+    b.admit(seq, blob)
+    assert b.prefill_tokens == 0            # blob hit: no re-prefill
+    while not seq.finished:
+        b.run_step()
+    assert seq.generated == ref_seq.generated
+
+
+# ---------------- prefill chunk ordering ---------------------------------------
+
+
+def test_prefill_plan_shortest_remaining_first(tiny_params_cache):
+    """Under a tight budget the nearly-done slot gets the chunk, even if
+    it sits at a higher slot index."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    chunk = 8
+    inst = Instance(cfg, params, steps, max_slots=3, cache_len=256,
+                    gamma_max=0, prefill_chunk=chunk, prefill_budget=chunk,
+                    base_seed=7)
+    inst.admit(_seq("long", range(1, 34), 2))     # 32 queued
+    inst.admit(_seq("mid", range(1, 26), 2))      # 24 queued
+    inst.admit(_seq("short", range(1, 7), 2))     # 5 queued
+    # shortest-remaining first: slot 2's tail chunk, then slot 1 gets
+    # what is left of the budget, slot 0 starves this step
+    plan = inst._prefill_plan()
+    assert plan == {2: 5, 1: 3}
+    assert list(plan) == [2, 1]           # serving order, not slot order
+    inst.prefill_budget = 5
+    assert inst._prefill_plan() == {2: 5}
+
+
+# ---------------- tail-chunk fusion --------------------------------------------
+
+
+def test_tail_chunk_fuses_first_decode_token(tiny_params_cache):
+    """A tail prefill chunk with a spare column emits the row's first
+    token in the same forward — one fewer step per admission — and
+    matches the sync reference token-for-token."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    prompt = list(range(2, 16))                   # 13 queued after admit
+
+    sync = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                    gamma_max=0, prefill_chunk=8, prefill_mode="sync",
+                    base_seed=7)
+    ref = _seq("ref", prompt, 6, temp=1.0, seed=3)
+    sync.admit(ref)
+    while not ref.finished:
+        sync.run_step()
+
+    inst = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                    gamma_max=0, prefill_chunk=8, base_seed=7)
+    seq = _seq("r0", prompt, 6, temp=1.0, seed=3)
+    inst.admit(seq)
+    inst.run_step()                               # chunk of 8
+    assert not seq.generated
+    out = inst.run_step()                         # tail 5 + fused decode
+    assert inst.tail_fused_rows == 1
+    assert len(seq.generated) == 1 and out
+    while not seq.finished:
+        inst.run_step()
+    assert seq.generated == ref.generated
+    assert inst.prefill_tokens == len(prompt) - 1

@@ -97,12 +97,15 @@ def _run_sync_ref(cfg, params, steps, prompt, n, temp, seed, drafts_ref=None):
     return seq.generated
 
 
-@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-370m"])
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-370m",
+                                  "zamba2-1.2b"])
 @pytest.mark.parametrize("spec", [False, True])
 def test_mixed_step_token_exact_vs_sync(arch, spec, tiny_params_cache):
-    """Batched multi-slot prefill fused with decode must reproduce the
-    sequential seed path bit-for-bit — including a migration whose pool
-    miss re-prefills the whole context mid-generation."""
+    """The donated/fused device-resident step (on-device accept/commit,
+    in-jit SSM replay, tail-chunk fusion) must reproduce the sequential
+    seed path bit-for-bit across transformer, SSM and hybrid archs —
+    including a migration whose pool miss re-prefills the whole context
+    mid-generation."""
     cfg, params = tiny_params_cache(arch)
     steps = StepFunctions(cfg)
     prompts = [list(range(2, 2 + 20 + 3 * i)) for i in range(3)]
