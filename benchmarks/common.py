@@ -190,7 +190,126 @@ def bench_engine_rollout(n_requests: int = 16, n_instances: int = 2,
     }
 
 
+def bench_engine_migration(n_requests: int = 12, n_instances: int = 2,
+                           max_slots: int = 2, prompt_len: int = 32,
+                           max_new_tokens: int = 24, chunk_size: int = 8,
+                           prefill_chunk: int = 16, seed: int = 5) -> dict:
+    """Migration-heavy real-engine rollout (tiny model): small chunks
+    force every request through several pool round-trips.  Runs the
+    PR 2 per-slot migration path and the batched+overlapped path on
+    identical workloads and reports migration device calls per migrated
+    slot, bytes moved, host migration stall seconds and the fraction of
+    exports dispatched while a step was in flight (overlap window).
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.core.request import make_groups
+    from repro.core.rollout import SeerRollout
+
+    cfg = get_tiny_config("granite-3-8b")
+    from repro.models import init_params
+    params, _ = init_params(cfg, jax.random.PRNGKey(1))
+    group_size = 2
+    # staggered prompt lengths so slots do NOT hit chunk boundaries in
+    # lockstep: releases then interleave with live steps (the export
+    # overlap window) and requeued chunks land on whichever instance
+    # frees up first (cross-instance migrations)
+    plens = [prompt_len + 7 * g for g in range(n_requests // group_size)]
+    prompts = [[(11 * g + j) % (cfg.vocab_size - 2) + 1
+                for j in range(plens[g])]
+               for g in range(n_requests // group_size)]
+
+    def one(prefill_mode: str, migration_mode: Optional[str]) -> dict:
+        # seer scheduling spreads resumed chunks across instances
+        # (cross-instance migrations), unlike fifo's submit-order
+        # ping-back to the home instance
+        ro = SeerRollout(
+            cfg, params, n_instances=n_instances, max_slots=max_slots,
+            cache_len=max(plens) + max_new_tokens + 32,
+            chunk_size=chunk_size, prefill_chunk=prefill_chunk,
+            prefill_mode=prefill_mode, migration_mode=migration_mode,
+            policy="seer", spec_decode=False, base_seed=7)
+        # warm-up on the full workload compiles every step + migration
+        # batch shape so the timed pass measures steady-state cost, not
+        # XLA compile time
+        ro.run(make_groups(prompts, group_size=group_size,
+                           max_new_tokens=max_new_tokens, seed=seed))
+        mig_calls0 = ro.steps.migration_calls
+        pool0 = dict(ro.pool.stats())
+        for inst in ro.instances:
+            inst.slots_exported = inst.slots_imported = 0
+            inst.export_overlapped_slots = 0
+            inst.migration_bytes_out = inst.migration_bytes_in = 0
+            inst.migration_host_seconds = 0.0
+            inst.steps_run = 0
+        groups = make_groups(prompts, group_size=group_size,
+                             max_new_tokens=max_new_tokens, seed=seed)
+        t0 = time.perf_counter()
+        res = ro.run(groups)
+        wall = time.perf_counter() - t0
+        steps_run = sum(i.steps_run for i in ro.instances)
+        exported = sum(i.slots_exported for i in ro.instances)
+        imported = sum(i.slots_imported for i in ro.instances)
+        overlapped = sum(i.export_overlapped_slots for i in ro.instances)
+        pool = ro.pool.stats()
+        return {
+            "migrations": res.stats.migrations,
+            "chunks": res.stats.chunks,
+            "engine_steps": steps_run,
+            "migrations_per_step":
+                res.stats.migrations / max(steps_run, 1),
+            "slots_exported": exported,
+            "slots_imported": imported,
+            "migration_device_calls":
+                ro.steps.migration_calls - mig_calls0,
+            "device_calls_per_migrated_slot":
+                (ro.steps.migration_calls - mig_calls0)
+                / max(exported + imported, 1),
+            "export_overlap_fraction": overlapped / max(exported, 1),
+            "pool_bytes_moved_mb":
+                (pool["bytes_moved_gb"] - pool0["bytes_moved_gb"]) * 1024,
+            "migration_stall_seconds":
+                sum(i.migration_host_seconds for i in ro.instances),
+            "tokens_per_sec": res.stats.tokens / max(wall, 1e-9),
+            "wall_seconds": wall,
+            "responses": res.responses(),
+        }
+
+    sync = one("sync", None)
+    perslot = one("batched", "perslot")
+    batched = one("batched", "batched")
+    resp = {k: m.pop("responses") for k, m in
+            (("sync", sync), ("perslot", perslot), ("batched", batched))}
+    return {
+        "workload": {
+            "n_requests": n_requests, "n_instances": n_instances,
+            "max_slots": max_slots, "prompt_len": prompt_len,
+            "max_new_tokens": max_new_tokens, "chunk_size": chunk_size,
+            "prefill_chunk": prefill_chunk,
+        },
+        "sync": sync,
+        "perslot": perslot,
+        "batched": batched,
+        "token_exact":
+            resp["sync"] == resp["perslot"] == resp["batched"],
+        "device_call_ratio":
+            perslot["device_calls_per_migrated_slot"]
+            / max(batched["device_calls_per_migrated_slot"], 1e-9),
+    }
+
+
 _ENGINE_ROLLOUT_CACHE: Optional[dict] = None
+_ENGINE_MIGRATION_CACHE: Optional[dict] = None
+
+
+def ensure_engine_migration_record() -> dict:
+    """Run the migration micro-benchmark once per process and write it
+    to BENCH_rollout.json's 'engine_migration' section."""
+    global _ENGINE_MIGRATION_CACHE
+    if _ENGINE_MIGRATION_CACHE is None:
+        _ENGINE_MIGRATION_CACHE = bench_engine_migration()
+        update_bench_rollout("engine_migration", _ENGINE_MIGRATION_CACHE)
+    return _ENGINE_MIGRATION_CACHE
 
 
 def ensure_engine_rollout_record() -> dict:

@@ -12,7 +12,8 @@ from __future__ import annotations
 from repro.configs import get_config
 from repro.core.sdmodel import H800
 
-from benchmarks.common import DEPLOY, SPECS, ensure_engine_rollout_record, \
+from benchmarks.common import DEPLOY, SPECS, \
+    ensure_engine_migration_record, ensure_engine_rollout_record, \
     run_sim, save_result, table, update_bench_rollout, workload
 
 TRAIN_MFU = 0.35                  # Megatron-style large-model training MFU
@@ -53,6 +54,7 @@ def run(workloads=("moonlight", "qwen2-vl-72b", "kimi-k2"), seed=0):
     # engine micro-bench must not take the simulator results down with it.
     try:
         ensure_engine_rollout_record()
+        ensure_engine_migration_record()
     except Exception as e:  # noqa: BLE001 - report-and-continue CLI
         print(f"[phase_split] engine rollout bench failed: {e}", flush=True)
     update_bench_rollout("phase_split", {

@@ -12,6 +12,14 @@ against the committed baseline in ``results/bench/BENCH_rollout.json``:
 * tokens/s must stay within ``--min-tokens-ratio`` of the baseline
   (loose by default: wall-clock on shared CI boxes is noisy).
 
+It also runs the migration-heavy micro-benchmark and diffs the
+``engine_migration`` section: batched migration must stay token-exact
+vs the sync and per-slot paths, issue fewer device calls per migrated
+slot than the per-slot (PR 2) baseline measured in the same run, keep
+that figure at or under the committed baseline, spend less host time
+stalled on migration than the per-slot path, and dispatch a nonzero
+fraction of exports inside the overlap window.
+
 Exit status 0 iff every check passes — invoked from the verify skill so
 perf regressions fail tier-1 review, not just eyeballs.
 
@@ -28,12 +36,12 @@ import os
 import sys
 
 
-def _engine_section(path: str) -> dict:
+def _section(path: str, name: str) -> dict:
     with open(path) as f:
         doc = json.load(f)
-    if "engine" not in doc:
-        raise SystemExit(f"{path}: no 'engine' section")
-    return doc["engine"]
+    if name not in doc:
+        raise SystemExit(f"{path}: no {name!r} section")
+    return doc[name]
 
 
 def main(argv=None) -> int:
@@ -44,22 +52,34 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh", default=None,
                     help="path to a freshly produced BENCH_rollout.json; "
                          "omitted -> run the engine micro-benchmark now")
-    ap.add_argument("--min-tokens-ratio", type=float, default=0.5,
+    ap.add_argument("--min-tokens-ratio", type=float, default=0.35,
                     help="fresh batched tokens/s must be >= this fraction "
-                         "of the committed baseline")
+                         "of the committed baseline (identical code "
+                         "measures up to ~2.5x apart on a shared box "
+                         "depending on load; the gate catches "
+                         "order-of-magnitude regressions, the launch "
+                         "counters catch the rest deterministically)")
     ap.add_argument("--fwd-slack", type=int, default=0,
                     help="allowed extra forward launches vs baseline")
+    ap.add_argument("--mig-stall-ratio", type=float, default=1.0,
+                    help="fresh batched migration stall seconds must be "
+                         "<= this fraction of the same run's per-slot "
+                         "path")
     args = ap.parse_args(argv)
 
-    base = _engine_section(args.baseline)
+    base = _section(args.baseline, "engine")
+    base_mig = _section(args.baseline, "engine_migration")
     if args.fresh:
-        fresh = _engine_section(args.fresh)
+        fresh = _section(args.fresh, "engine")
+        fresh_mig = _section(args.fresh, "engine_migration")
     else:
         # the benchmarks package lives at the repo root, one level up
         sys.path.insert(0, os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
-        from benchmarks.common import bench_engine_rollout
+        from benchmarks.common import (bench_engine_migration,
+                                       bench_engine_rollout)
         fresh = bench_engine_rollout()
+        fresh_mig = bench_engine_migration()
 
     if fresh.get("workload") != base.get("workload"):
         print("[check_bench] FAIL workload mismatch: fresh "
@@ -88,6 +108,7 @@ def main(argv=None) -> int:
          f"{fb['tokens_per_sec']:.1f} >= {args.min_tokens_ratio} * "
          f"{bb['tokens_per_sec']:.1f}"),
     ]
+    checks += _migration_checks(fresh_mig, base_mig, args)
     ok = True
     for name, passed, detail in checks:
         status = "ok  " if passed else "FAIL"
@@ -97,6 +118,44 @@ def main(argv=None) -> int:
         print("[check_bench] rollout hot-path perf regressed vs "
               f"{args.baseline}")
     return 0 if ok else 1
+
+
+def _migration_checks(fresh: dict, base: dict, args) -> list:
+    """Gates on the migration-heavy micro-benchmark.
+
+    The launch/stall comparisons run against the *same-run* per-slot
+    path (apples-to-apples on this box); the committed baseline guards
+    the batched path's launch count across PRs."""
+    if fresh.get("workload") != base.get("workload"):
+        return [("migration_workload", False,
+                 f"fresh {fresh.get('workload')} vs baseline "
+                 f"{base.get('workload')} — numbers are not comparable")]
+    fb, fp = fresh["batched"], fresh["perslot"]
+    bb = base["batched"]
+    return [
+        ("migration_token_exact", fresh.get("token_exact") is True,
+         "batched vs perslot vs sync token-exact: "
+         f"{fresh.get('token_exact')}"),
+        ("migration_calls_per_slot",
+         fb["device_calls_per_migrated_slot"]
+         < fp["device_calls_per_migrated_slot"],
+         f"batched {fb['device_calls_per_migrated_slot']:.2f} < "
+         f"perslot {fp['device_calls_per_migrated_slot']:.2f}"),
+        ("migration_calls_vs_baseline",
+         fb["device_calls_per_migrated_slot"]
+         <= bb["device_calls_per_migrated_slot"] + 1e-9,
+         f"{fb['device_calls_per_migrated_slot']:.2f} <= "
+         f"{bb['device_calls_per_migrated_slot']:.2f}"),
+        ("migration_stall_seconds",
+         fb["migration_stall_seconds"]
+         <= args.mig_stall_ratio * fp["migration_stall_seconds"],
+         f"batched {fb['migration_stall_seconds']:.4f}s <= "
+         f"{args.mig_stall_ratio} * perslot "
+         f"{fp['migration_stall_seconds']:.4f}s"),
+        ("export_overlap_fraction",
+         fb["export_overlap_fraction"] > 0.0,
+         f"{fb['export_overlap_fraction']:.2f} > 0"),
+    ]
 
 
 def _donation_supported() -> bool:

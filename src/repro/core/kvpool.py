@@ -36,6 +36,11 @@ class PoolCosts:
             t += nbytes / self.net_bw
         return t
 
+    def put_seconds(self, nbytes: int) -> float:
+        """Device->host export transfer at put time (the DMA leg; the
+        writing node's DRAM is always the first tier)."""
+        return nbytes / self.dram_bw
+
 
 @dataclass
 class PoolEntry:
@@ -62,8 +67,26 @@ class GlobalKVPool:
         self.evictions = 0
         self.bytes_moved = 0
         self.transfer_seconds = 0.0
+        # directional split of bytes_moved (puts = device->host exports,
+        # gets = host->device fetches)
+        self.bytes_put = 0
+        self.bytes_fetched = 0
 
     def put(self, blob: KVBlob, node: str = "n0") -> None:
+        self._insert(blob, node)
+        self._evict_to_ssd()
+
+    def put_batch(self, blobs, node: str = "n0") -> None:
+        """Insert several blobs (one instance's batched export), then
+        run eviction once over the whole batch — a mid-batch eviction
+        pass could demote an earlier blob of the same batch before its
+        peers even landed, despite it being the newest data in the
+        pool."""
+        for blob in blobs:
+            self._insert(blob, node)
+        self._evict_to_ssd()
+
+    def _insert(self, blob: KVBlob, node: str) -> None:
         old = self._entries.pop(blob.req_id, None)
         if old and old.tier == "dram":
             self.dram_used -= old.nbytes
@@ -71,7 +94,13 @@ class GlobalKVPool:
         self._entries[blob.req_id] = entry
         self.dram_used += blob.nbytes
         self.puts += 1
-        self._evict_to_ssd()
+        # the export itself moves bytes (device->host): charge it here,
+        # not only at get time — puts were free while gets paid, so
+        # migration cost was undercounted in engine stats and the
+        # simulator
+        self.transfer_seconds += self.costs.put_seconds(blob.nbytes)
+        self.bytes_moved += blob.nbytes
+        self.bytes_put += blob.nbytes
 
     def _evict_to_ssd(self) -> None:
         while self.dram_used > self.dram_capacity:
@@ -94,6 +123,7 @@ class GlobalKVPool:
         self.transfer_seconds += self.costs.fetch_seconds(
             entry.nbytes, entry.tier, cross)
         self.bytes_moved += entry.nbytes
+        self.bytes_fetched += entry.nbytes
         # promote back to DRAM on the fetching node.  Recency must be
         # bumped BEFORE eviction runs: the just-fetched entry was the LRU
         # head, so evicting first picked it as its own victim — counted as
@@ -118,5 +148,7 @@ class GlobalKVPool:
             "evictions": self.evictions,
             "dram_used_gb": self.dram_used / (1 << 30),
             "bytes_moved_gb": self.bytes_moved / (1 << 30),
+            "bytes_put_gb": self.bytes_put / (1 << 30),
+            "bytes_fetched_gb": self.bytes_fetched / (1 << 30),
             "transfer_seconds": self.transfer_seconds,
         }

@@ -76,6 +76,7 @@ class SeerRollout:
                  prefill_chunk: int = 64,
                  prefill_mode: str = "batched",
                  prefill_budget: Optional[int] = None,
+                 migration_mode: Optional[str] = None,
                  policy: str = "seer", spec_decode: bool = True,
                  multipath_top_k: int = 1,
                  gamma_max: int = 8, lam: float = 2.0,
@@ -90,11 +91,13 @@ class SeerRollout:
         self.mba_cfg = MBAConfig(gamma_max=min(gamma_max, 8), lam=lam)
         self.oracle_lengths = oracle_lengths
         self.steps = StepFunctions(cfg)
+        fwd = ForwardCostModel(cfg, TPU_V5E)
         self.instances = [
             Instance(cfg, params, self.steps, max_slots=max_slots,
                      cache_len=cache_len, prefill_chunk=prefill_chunk,
                      prefill_mode=prefill_mode,
                      prefill_budget=prefill_budget,
+                     migration_mode=migration_mode, cost_model=fwd,
                      gamma_max=gamma_max, instance_id=f"inst{i}",
                      base_seed=base_seed)
             for i in range(n_instances)
@@ -107,7 +110,6 @@ class SeerRollout:
             for inst in self.instances
         }
         self.ctx = ContextManager(max_gen_length=cache_len)
-        fwd = ForwardCostModel(cfg, TPU_V5E)
         self.sd_model = SDThroughputModel(fwd)
         # req_id -> (instance, slot, chunk_tokens_left)
         self._placements: Dict[str, tuple] = {}
@@ -161,19 +163,48 @@ class SeerRollout:
         self._placements[r.req_id] = (inst, slot, seq, chunk)
         self.clients[instance_id].register_group(r.group_id)
 
-    def _release(self, r: RolloutRequest, stats: RolloutStats,
-                 export: bool) -> None:
-        inst, slot, seq, _ = self._placements.pop(r.req_id)
-        # sync engine state back to the rollout request
+    def _sync_back(self, r: RolloutRequest, seq: EngineSeq) -> None:
         r.generated = list(seq.generated)
         r.logprobs = list(seq.logprobs)
         r.last_token = seq.last_token
         r.next_pos = seq.next_pos
+
+    def _release(self, r: RolloutRequest, stats: RolloutStats,
+                 export: bool) -> None:
+        """Immediate (per-slot) release — finished requests, and the
+        whole path when the instance runs ``migration_mode="perslot"``."""
+        inst, slot, seq, _ = self._placements.pop(r.req_id)
+        self._sync_back(r, seq)
         blob = inst.release(slot, export=export)
         if export and blob is not None:
             self.pool.put(blob, node=inst.instance_id)
         stats.chunks += 1
         r.chunks_run += 1
+
+    def _begin_release(self, r: RolloutRequest, stats: RolloutStats
+                       ) -> None:
+        """Chunk exhausted: release the seq from stepping now, defer the
+        KV export to the next tick's :meth:`_flush_releases` — the
+        batched gather is dispatched right after the next step so blob
+        materialization overlaps device compute.  The request is
+        requeued only once its blob is in the pool."""
+        inst, slot, seq, _ = self._placements.pop(r.req_id)
+        self._sync_back(r, seq)
+        inst.release_async(slot)
+        stats.chunks += 1
+        r.chunks_run += 1
+
+    def _flush_releases(self, inst: Instance, sched: Scheduler) -> int:
+        """Export the instance's draining slots (one batched gather),
+        put the blobs in the pool and hand the requests back to the
+        scheduler.  Returns the number of slots freed."""
+        blobs = inst.flush_exports()
+        if not blobs:
+            return 0
+        self.pool.put_batch(list(blobs.values()), node=inst.instance_id)
+        for req_id in blobs:
+            sched.requeue(self._reqs[req_id])
+        return len(blobs)
 
     # -- drafts --------------------------------------------------------------------
 
@@ -236,22 +267,12 @@ class SeerRollout:
             r.t_submitted = t0
 
         while not sched.all_finished:
-            # 1) fill free capacity
-            placed = True
-            while placed:
-                placed = False
-                views = [v for v in self._views() if v.free_slots > 0]
-                if not views:
-                    break
-                r = sched.pick_request()
-                if r is None:
-                    break
-                iid = sched.select_instance(views, r)
-                if iid is None:
-                    sched.requeue(r)   # no instance can host it this cycle
-                    break
+            # 1) fill free capacity — one batched scheduling cycle;
+            # same-instance arrivals share one batched KV import
+            # (flushed by the instance at its next dispatch)
+            for r, iid in sched.plan_admissions(
+                    [v for v in self._views() if v.free_slots > 0]):
                 self._admit(sched, r, iid, stats)
-                placed = True
 
             # 2) step every instance — dispatch all device work first
             # (JAX async dispatch), then commit results, so instance
@@ -260,14 +281,23 @@ class SeerRollout:
             # Drafts for this tick therefore see the CST as of the
             # previous tick, which cannot change sampled outputs (the
             # losslessness guarantee: drafts affect only acceptance).
+            # Right after each dispatch, flush the instance's deferred
+            # KV exports (chunks released last tick): the batched
+            # gather is enqueued behind the step it overlaps, the host
+            # moves on, and the freed slots admit next cycle.
             any_active = False
+            freed = 0
             tickets = []
             for inst in self.instances:
-                if not inst.active_slots():
+                ticket, drafts = None, {}
+                if inst.active_slots():
+                    drafts = self._collect_drafts(inst)
+                    ticket = inst.dispatch_step(drafts)
+                freed += self._flush_releases(inst, sched)
+                if ticket is None:
                     continue
                 any_active = True
-                drafts = self._collect_drafts(inst)
-                tickets.append((inst, drafts, inst.dispatch_step(drafts)))
+                tickets.append((inst, drafts, ticket))
             for inst, drafts, ticket in tickets:
                 out = inst.commit_step(ticket)
                 stats.steps += 1
@@ -300,11 +330,15 @@ class SeerRollout:
                         r.finish(time.monotonic())
                         sched.on_finished(r)
                     elif consumed >= chunk:
-                        self._release(r, stats, export=True)
-                        sched.requeue(r)
+                        if inst.migration_mode == "batched":
+                            self._begin_release(r, stats)
+                        else:
+                            self._release(r, stats, export=True)
+                            sched.requeue(r)
 
-            if not any_active and not sched.all_finished:
-                # nothing running and nothing placeable -> capacity deadlock
+            if not any_active and not freed and not sched.all_finished:
+                # nothing running, nothing freed and nothing placeable
+                # -> capacity deadlock
                 raise RuntimeError(
                     "rollout stalled: no instance can hold the next chunk")
             if progress_every and stats.steps % progress_every == 0:

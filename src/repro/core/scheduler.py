@@ -18,6 +18,7 @@ instance that can hold the chunk's worst-case footprint.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple
@@ -224,6 +225,38 @@ class Scheduler:
             if best_free is None or effective_free > best_free:
                 best, best_free = iv.instance_id, effective_free
         return best
+
+    def plan_admissions(self, instances: Sequence[InstanceView]
+                        ) -> List[Tuple[RolloutRequest, str]]:
+        """Batch of (request, instance) decisions for one scheduling
+        cycle, grouped so same-instance migrations land together — the
+        engine imports all of an instance's arriving KV blobs in one
+        batched scatter instead of one per admission.  Views are
+        decremented locally as requests are planned (free slots, KV
+        head-room net of the chunk's worst-case footprint), mirroring
+        the one-at-a-time loop this replaces."""
+        views = {v.instance_id: dataclasses.replace(v)
+                 for v in instances}
+        plan: List[Tuple[RolloutRequest, str]] = []
+        while True:
+            open_views = [v for v in views.values() if v.free_slots > 0]
+            if not open_views:
+                break
+            r = self.pick_request()
+            if r is None:
+                break
+            iid = self.select_instance(open_views, r)
+            if iid is None:
+                self.requeue(r)   # no instance can host it this cycle
+                break
+            v = views[iid]
+            v.free_slots -= 1
+            v.active_requests += 1
+            v.kv_free_tokens -= len(r.prompt) + r.gen_len \
+                + self.chunk_tokens(r)
+            plan.append((r, iid))
+        plan.sort(key=lambda p: p[1])
+        return plan
 
     # -- lifecycle callbacks -----------------------------------------------------
 

@@ -118,6 +118,25 @@ class ForwardCostModel:
     def prefill_time(self, n_tokens: int, mean_ctx: float = 0.0) -> float:
         return self.forward_time(1, n_tokens, mean_ctx or n_tokens / 2)
 
+    def migration_stall(self, n_blobs: int, total_bytes: float, bw: float,
+                        *, batched: bool = True,
+                        overlap_frac: float = 0.0) -> float:
+        """Stall seconds charged for moving ``n_blobs`` KV blobs
+        (``total_bytes`` total) through the global pool at ``bw``.
+
+        The batched engine path gathers/scatters every migrating slot
+        in one dispatch (one fixed launch overhead per batch, not per
+        blob) and enqueues the export behind the next step so
+        ``overlap_frac`` of the wire time hides under device compute;
+        the per-slot path pays a launch per blob and serializes the
+        transfer on the step stream (no overlap)."""
+        if n_blobs <= 0 or total_bytes <= 0:
+            return 0.0
+        launches = self.hw.launch_overhead * \
+            (1.0 if batched else float(n_blobs))
+        wire = total_bytes / max(bw, 1.0)
+        return (1.0 - min(max(overlap_frac, 0.0), 1.0)) * wire + launches
+
     def mixed_step_time(self, batch: int, tokens_per_req: int,
                         prefill_tokens: float, mean_ctx: float,
                         prefill_ctx: Optional[float] = None) -> float:

@@ -165,6 +165,12 @@ class SimInstance:
         # admission its own mean context, not the aggregated backlog's
         self.prefill_backlog = 0.0
         self.prefill_backlog_ctxsum = 0.0
+        # KV blobs moved through the global pool since the last segment
+        # (imports on admission + exports on chunk release): stall is
+        # charged once per segment via the batched/overlapped migration
+        # model, mirroring the engine's one-gather-per-batch dispatch
+        self.mig_blobs = 0
+        self.mig_bytes = 0.0
         self.tokens_out = 0.0
         self.preemptions = 0
 
@@ -199,6 +205,13 @@ class SimConfig:
     over_issue: float = 2.0         # partial-rollout over-issue factor
     partial_defer_frac: float = 0.0  # set >0 in partial mode automatically
     pool_net_bw: float = 25e9       # KV pool fetch bandwidth (bytes/s)
+    # batched+overlapped KV migration (the engine's batched path): one
+    # launch per migration batch and ``migration_overlap`` of the wire
+    # time hidden under device compute.  batched_migration=False +
+    # migration_overlap=0.0 models the PR 2 per-slot moves (one launch
+    # per blob, serialized on the step stream).
+    batched_migration: bool = True
+    migration_overlap: float = 0.75
     streamrl_buckets: int = 4
     seed: int = 0
     # engines accept/commit on device (the engine tier's fused step);
@@ -301,12 +314,31 @@ class ClusterSimulator:
             MBAConfig(gamma_max=st.gamma_max, lam=self.sim.mba_lam))
         return g_h, g_l
 
+    def _drain_migration(self, inst: SimInstance) -> float:
+        """Charge the instance's accrued migration transfers (batched,
+        overlap-discounted) and reset the counters."""
+        if not inst.mig_blobs:
+            return 0.0
+        stall = self.fwd.migration_stall(
+            inst.mig_blobs, inst.mig_bytes, self.sim.pool_net_bw,
+            batched=self.sim.batched_migration,
+            overlap_frac=self.sim.migration_overlap)
+        self._seg_stats["mig_time"] += stall
+        self._seg_stats["mig_bytes"] += inst.mig_bytes
+        inst.mig_blobs = 0
+        inst.mig_bytes = 0.0
+        return stall
+
     def _segment(self, inst: SimInstance, ctxmgr: ContextManager,
                  group_refs: Dict[str, int]) -> Tuple[float, int]:
         """Compute (duration_seconds, tokens_per_request) for the next
         segment on this instance.  Returns (0, 0) if idle."""
         B = len(inst.running)
         if B == 0:
+            # an instance whose last chunk just exported still owes the
+            # transfer: account it now (and carry it as overhead in case
+            # the instance runs again) instead of dropping it
+            inst.overhead += self._drain_migration(inst)
             return 0.0, 0
         seqs = list(inst.running.values())
         n_event = min(min(s.chunk_left, s.total_left) for s in seqs)
@@ -363,6 +395,10 @@ class ClusterSimulator:
                 - self.fwd.forward_time(B, tpr, mean_ctx)
             inst.prefill_backlog = 0.0
             inst.prefill_backlog_ctxsum = 0.0
+        # migrations since the last segment: one batched transfer,
+        # overlap_frac of the wire time hidden under this segment's
+        # compute (the engine dispatches the gather behind the step)
+        dur += self._drain_migration(inst)
         self._seg_stats["steps"] += steps * B
         self._seg_stats["drafted"] += steps * B * gamma_mean
         self._seg_stats["accepted"] += steps * B * (tok_per_step - 1.0)
@@ -392,11 +428,11 @@ class ClusterSimulator:
         self._assign_static(groups, instances, true_len)
 
         group_refs: Dict[str, int] = {}     # completed requests per group
-        self._seg_stats = {"steps": 0.0, "drafted": 0.0, "accepted": 0.0}
+        self._seg_stats = {"steps": 0.0, "drafted": 0.0, "accepted": 0.0,
+                           "mig_time": 0.0, "mig_bytes": 0.0}
         completion: Dict[str, float] = {}
         inst_of: Dict[str, int] = {}
         migrations = 0
-        pool_time = 0.0
         now = 0.0
         finished = 0
         # event heap: (time, seq#, instance index)
@@ -437,17 +473,23 @@ class ClusterSimulator:
                             group_refs.get(s.req.group_id, 0) + 1
                         finished += 1
                     elif s.chunk_left <= 0:
-                        # chunk exhausted -> back to the global buffer
+                        # chunk exhausted -> back to the global buffer;
+                        # the KV blob export (put) moves bytes too —
+                        # charged with the batched/overlapped model at
+                        # this instance's next segment
                         del inst.running[rid]
                         sched.requeue(s.req)
                         s.req.instance_id = inst.iid
+                        if sim.mode == "divided":
+                            inst.mig_blobs += 1
+                            inst.mig_bytes += s.ctx * \
+                                self.kv_bytes_per_token
                 # KV-pressure preemption (non-divided modes only)
                 if sim.mode in ("group", "request", "streamrl", "partial") \
                         and inst.kv_free() < len(inst.running):
                     self._preempt(inst)
-            mig, pt = self._fill(inst, sched, instances, now, true_len)
-            migrations += mig
-            pool_time += pt
+            migrations += self._fill(inst, sched, instances, now,
+                                     true_len)
             dur, n = self._segment(inst, ctxmgr, group_refs)
             dur += inst.overhead
             inst.overhead = 0.0
@@ -496,7 +538,8 @@ class ClusterSimulator:
             instance_finish_spread=spread,
             extras={
                 "mean_acc_len": 1.0 + self._seg_stats["accepted"] / steps,
-                "pool_transfer_time": pool_time,
+                "pool_transfer_time": self._seg_stats["mig_time"],
+                "migration_bytes": self._seg_stats["mig_bytes"],
                 "busy_frac": busy / max(t_end * len(instances), 1e-9),
             })
 
@@ -553,11 +596,13 @@ class ClusterSimulator:
 
     def _fill(self, inst: SimInstance, sched: Scheduler,
               instances: List[SimInstance], now: float,
-              true_len: Dict[str, int]) -> Tuple[int, float]:
-        """Admit work onto ``inst``.  Returns (migrations, pool_seconds)."""
+              true_len: Dict[str, int]) -> int:
+        """Admit work onto ``inst``.  Returns cross-instance migrations;
+        their transfer stall lands on the target instance's
+        ``mig_blobs``/``mig_bytes`` and is charged at its next
+        segment."""
         sim = self.sim
         migrations = 0
-        pool_time = 0.0
         if sim.mode == "divided":
             while inst.free_slots() > 0:
                 r = sched.pick_request()
@@ -577,11 +622,9 @@ class ClusterSimulator:
                         break
                     ti = next(i for i in instances if i.iid == target)
                     migrations += self._admit(ti, r, sched, true_len,
-                                              now)[0]
+                                              now)
                     continue
-                m, pt = self._admit(inst, r, sched, true_len, now)
-                migrations += m
-                pool_time += pt
+                migrations += self._admit(inst, r, sched, true_len, now)
         else:
             # instance-local queue (resume preempted first)
             while inst.free_slots() > 0 and \
@@ -603,22 +646,24 @@ class ClusterSimulator:
                 if r.finished:
                     continue
                 self._admit(inst, r, sched, true_len, now, local=True)
-        return migrations, pool_time
+        return migrations
 
     def _admit(self, inst: SimInstance, r: RolloutRequest,
                sched: Scheduler, true_len: Dict[str, int], now: float,
-               local: bool = False) -> Tuple[int, float]:
+               local: bool = False) -> int:
         ctx0 = len(r.prompt) + r.gen_len
         chunk = sched.chunk_tokens(r) if not local \
             else r.max_new_tokens
         migrated = 0
-        pool_time = 0.0
         if r.gen_len > 0 and r.instance_id and r.instance_id != inst.iid:
             migrated = 1
             r.migrations += 1
-            # KV pool fetch (divided rollout): bytes/bw, no re-prefill
-            pool_time = ctx0 * self.kv_bytes_per_token / self.sim.pool_net_bw
-            inst.overhead += pool_time
+            # KV pool fetch (divided rollout): no re-prefill; the blob
+            # import is batched with the instance's other arrivals and
+            # overlapped with compute — stall charged at the next
+            # segment via ForwardCostModel.migration_stall
+            inst.mig_blobs += 1
+            inst.mig_bytes += ctx0 * self.kv_bytes_per_token
         if r.gen_len == 0:
             if self.sim.mode == "divided":
                 # batched prefill: admission queues the prompt; its cost
@@ -635,7 +680,7 @@ class ClusterSimulator:
         inst.running[r.req_id] = SimSeq(
             req=r, true_len=min(true_len[r.req_id], r.max_new_tokens),
             ctx=float(ctx0), chunk_left=chunk)
-        return migrated, pool_time
+        return migrated
 
     def _preempt(self, inst: SimInstance) -> None:
         """Evict youngest requests until ~12% KV head-room is restored."""

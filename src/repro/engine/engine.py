@@ -46,6 +46,38 @@ Device-resident step contract (the hot path)
   Between a dispatch and its commit the instance must not admit or
   release slots (enforced).
 
+KV migration (divided rollout's chunk moves)
+--------------------------------------------
+
+``migration_mode="batched"`` (default) makes blob movement through the
+global pool a batched, compute-overlapped subsystem:
+
+* **Batched export.**  ``release_async`` only *marks* a slot draining;
+  ``flush_exports`` materialises every draining slot's blob in one
+  jitted gather (``StepFunctions.export_batch``) that touches each
+  cache leaf once regardless of how many slots migrate.  Each blob is
+  trimmed (inside the same jit) to its own live prefix bucketed to a
+  power-of-two ``prefill_chunk`` multiple, so compiled shapes stay
+  log-bounded; entries past the slot's own ``next_pos`` carry
+  ``slot_pos == -1``, are never attended, and are excluded from
+  ``nbytes`` — pool accounting carries no dead bytes.
+* **Overlapped export.**  The gather is enqueued *after* the next
+  step's dispatch: the fused step never writes a draining slot's rows
+  (they are masked out of the batch), and in-place donation preserves
+  them, so the export legally reads the post-step cache while the host
+  does commit bookkeeping.  ``export_overlapped_slots`` counts slots
+  whose gather was dispatched with a step ticket in flight.
+* **Batched import.**  ``admit`` with a blob only *queues* the import;
+  ``dispatch_step`` flushes all pending imports in one jitted
+  pad+scatter per source extent (``StepFunctions.import_batch``) before
+  building the step batch, so K migrated arrivals cost one cache write
+  per leaf, not K.
+* **Invariants.**  A draining slot stays unavailable for admission
+  until its export is flushed; a blob whose position extent exceeds the
+  target cache raises (live positions are never silently truncated);
+  ``migration_mode="perslot"`` keeps the PR 2 one-``jnp.take``-per-leaf
+  path as the launch-count baseline and equivalence oracle.
+
 Step functions are compiled once per (config, T) and shared by every
 instance of that model (the paper colocates many instances per model).
 ``prefill_mode="sync"`` keeps the original admit-time python loop plus
@@ -105,6 +137,16 @@ class StepFunctions:
         self.invocations = 0
         self.invocations_by_kind: Dict[str, int] = {}
         self.host_syncs = 0
+        # device dispatches issued for KV migration (jitted batch calls
+        # on the batched path; one per leaf op on the per-slot path) —
+        # the launch-count currency of batched migration
+        self.migration_calls = 0
+        self.migration_calls_by_kind: Dict[str, int] = {}
+
+    def count_migration(self, kind: str, n: int = 1) -> None:
+        self.migration_calls += n
+        self.migration_calls_by_kind[kind] = \
+            self.migration_calls_by_kind.get(kind, 0) + n
 
     def _counted(self, fn, kind: str):
         def wrapper(*args):
@@ -227,6 +269,84 @@ class StepFunctions:
         self._step_cache[key] = counted
         return counted
 
+    def export_batch(self, lives: Tuple[int, ...]):
+        """Jitted multi-slot KV gather: ``(cache, slots(n,)) -> [blob
+        leaf dict] * n``.
+
+        Each cache leaf is read by exactly one gather no matter how many
+        slots migrate; blob ``i``'s position-indexed leaves are then
+        trimmed (inside the same jit — still one dispatch) to
+        ``lives[i]``, capped at the leaf's own extent (ring caches are
+        shorter).  Outputs are fresh buffers, never aliases of the
+        (donated) instance cache.  Compiled once per ``lives`` tuple;
+        callers bucket each live extent (powers of two) and pass the
+        tuple in canonical non-decreasing order so the key space is the
+        multiset of buckets, keeping compiled variants bounded."""
+        key = ("export", lives)
+        if key in self._step_cache:
+            return self._step_cache[key]
+
+        @jax.jit
+        def fn(cache, slots):
+            gathered = {}
+            for k, v in cache.items():
+                sax = _slot_slice(k)
+                gathered[k] = jnp.moveaxis(
+                    jnp.take(v, slots, axis=sax), sax, 0)
+            out = []
+            for i, live in enumerate(lives):
+                leaves = {}
+                for k, g in gathered.items():
+                    row = g[i]
+                    ax = _pos_axis(k)
+                    if ax is not None:
+                        row = jax.lax.slice_in_dim(
+                            row, 0, min(live, row.shape[ax]), axis=ax)
+                    leaves[k] = row
+                out.append(leaves)
+            return out
+
+        self._step_cache[key] = fn
+        return fn
+
+    @property
+    def import_batch(self):
+        """Jitted multi-slot KV scatter: ``(cache, slots(n,), [blob leaf
+        dict] * n) -> new_cache``.
+
+        Blobs are stacked, padded back to the cache's position extent
+        (``slot_pos`` with -1 so dead entries stay invalid, K/V with
+        zeros) and written with one scatter per leaf — K migrated
+        arrivals cost one cache write per leaf, not K.  The cache is
+        donated, matching the step path's in-place contract.  Shared
+        across batch sizes/extents (jit recompiles per shape)."""
+        key = "import_batch"
+        if key in self._step_cache:
+            return self._step_cache[key]
+
+        def raw(cache, slots, blobs):
+            new = dict(cache)
+            for k in cache:
+                sax = _slot_slice(k)
+                src = jnp.stack([b[k] for b in blobs])
+                pax = _pos_axis(k)
+                if pax is not None:
+                    pad = cache[k].shape[pax + 1] - src.shape[pax + 1]
+                    if pad > 0:
+                        widths = [(0, 0)] * src.ndim
+                        widths[pax + 1] = (0, pad)
+                        fill = -1 if k == "slot_pos" else 0
+                        src = jnp.pad(src, widths, constant_values=fill)
+                idx = [slice(None)] * cache[k].ndim
+                idx[sax] = slots
+                new[k] = cache[k].at[tuple(idx)].set(
+                    jnp.moveaxis(src, 0, sax).astype(cache[k].dtype))
+            return new
+
+        fn = jax.jit(raw, donate_argnums=(0,))
+        self._step_cache[key] = fn
+        return fn
+
     @property
     def rollback(self):
         key = "rollback"
@@ -290,9 +410,12 @@ class KVBlob:
     """Exported per-request cache state (what the global pool stores).
 
     Position-indexed leaves (k/v/slot_pos) are trimmed to the live
-    prefix ``[0, min(next_pos, cache_len))`` — ``nbytes`` is the real
-    footprint, and migrations move no dead bytes.  Recurrent leaves
-    (ssm/conv) have no position axis and ship whole.
+    prefix ``[0, min(next_pos, cache_len))`` — batched exports round
+    the array extent up to a bucketed shape (entries past ``next_pos``
+    carry ``slot_pos == -1``, never attended), but ``nbytes`` always
+    counts the live prefix only, so pool accounting and migration
+    byte counters move no dead bytes.  Recurrent leaves (ssm/conv)
+    have no position axis and ship whole.
     """
     req_id: str
     arrays: dict                  # cache leaves sliced at the slot
@@ -314,6 +437,22 @@ def _pos_axis(key: str) -> Optional[int]:
     """Axis of the cache-position dim in a per-slot blob leaf, or None
     for leaves without one (recurrent state, cross-attention memory)."""
     return {"k": 1, "v": 1, "slot_pos": 0}.get(key)
+
+
+def _live_nbytes(leaves: dict, next_pos: int) -> int:
+    """Byte footprint of a blob counting only the live prefix
+    ``[0, next_pos)`` along each position axis — batched-export leaves
+    may be padded past it to a bucketed extent, but the padding
+    (``slot_pos == -1``, never attended) is dead weight the pool must
+    not account."""
+    total = 0
+    for k, v in leaves.items():
+        n = v.size
+        ax = _pos_axis(k)
+        if ax is not None and v.shape[ax]:
+            n = n // v.shape[ax] * min(next_pos, v.shape[ax])
+        total += n * v.dtype.itemsize
+    return total
 
 
 @dataclass
@@ -342,10 +481,18 @@ class Instance:
                  prefill_chunk: int = 64, gamma_max: int = 8,
                  prefill_mode: str = "batched",
                  prefill_budget: Optional[int] = None,
+                 migration_mode: Optional[str] = None,
+                 cost_model=None, prefill_latency_factor: float = 2.0,
                  instance_id: str = "inst0", base_seed: int = 0,
                  modality_embeds=None):
         if prefill_mode not in ("batched", "sync"):
             raise ValueError(f"prefill_mode={prefill_mode!r}")
+        if migration_mode is None:
+            # the sync reference path keeps the PR 2 per-slot moves
+            migration_mode = "perslot" if prefill_mode == "sync" \
+                else "batched"
+        if migration_mode not in ("batched", "perslot"):
+            raise ValueError(f"migration_mode={migration_mode!r}")
         self.cfg = cfg
         self.params = params
         self.steps = steps
@@ -354,11 +501,16 @@ class Instance:
         self.prefill_chunk = prefill_chunk
         self.gamma_max = gamma_max
         self.prefill_mode = prefill_mode
-        # Sarathi-style cap on prefill tokens admitted into one mixed step
-        # (bounds decode-row latency); default: no throttle beyond one
-        # chunk per slot
-        self.prefill_budget = prefill_budget \
-            if prefill_budget is not None else max_slots * prefill_chunk
+        self.migration_mode = migration_mode
+        # Sarathi-style cap on prefill tokens admitted into one mixed
+        # step (bounds decode-row latency).  None + a cost model =
+        # adaptive: _prefill_plan caps the *modeled mixed-step latency*
+        # at ``prefill_latency_factor`` x the decode-only step instead
+        # of capping tokens; None without a cost model = one chunk per
+        # slot (no throttle).
+        self.prefill_budget = prefill_budget
+        self.cost_model = cost_model
+        self.prefill_latency_factor = prefill_latency_factor
         self.instance_id = instance_id
         self.base_key = jax.random.PRNGKey(base_seed)
         self.cache = init_cache(cfg, max_slots, cache_len)
@@ -371,12 +523,25 @@ class Instance:
             self.cache["cross_k"], self.cache["cross_v"] = ck, cv
         self.slots: List[Optional[EngineSeq]] = [None] * max_slots
         self._inflight: Optional[StepTicket] = None
+        # KV migration state: draining slots hold a released-but-not-yet
+        # -exported seq (rows masked out of steps, unavailable to admit);
+        # pending imports are admitted blobs not yet scattered into the
+        # cache (flushed in one batched call at the next dispatch)
+        self._draining: Dict[int, EngineSeq] = {}
+        self._pending_imports: List[Tuple[int, KVBlob]] = []
         # stats
         self.tokens_generated = 0
         self.steps_run = 0
         self.prefill_tokens = 0
         self.admits = 0
         self.admit_seconds = 0.0
+        # migration accounting
+        self.slots_exported = 0
+        self.slots_imported = 0
+        self.export_overlapped_slots = 0
+        self.migration_bytes_out = 0
+        self.migration_bytes_in = 0
+        self.migration_host_seconds = 0.0
         # row-occupancy accounting: every forward scores max_slots rows;
         # wasted rows = rows carrying neither decode nor prefill work
         self.row_slots_total = 0
@@ -390,16 +555,24 @@ class Instance:
         return sum(s is None for s in self.slots)
 
     def active_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s is not None]
+        """Slots carrying step work (draining slots are excluded: their
+        seq is released, they only await the batched KV export)."""
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and i not in self._draining]
+
+    def draining_slots(self) -> List[int]:
+        return sorted(self._draining)
 
     def decode_slots(self) -> List[int]:
         """Slots holding a pending token (prefill complete)."""
         return [i for i, s in enumerate(self.slots)
-                if s is not None and not s.prefilling]
+                if s is not None and not s.prefilling
+                and i not in self._draining]
 
     def prefilling_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots)
-                if s is not None and s.prefilling]
+                if s is not None and s.prefilling
+                and i not in self._draining]
 
     def queued_prefill_tokens(self) -> int:
         return sum(len(s.prefill_queue)
@@ -431,7 +604,18 @@ class Instance:
         seq.prefill_queue = []
         seq.prefill_pos = 0
         if blob is not None and blob.next_pos == seq.next_pos:
-            self._import_kv(slot, blob)
+            self._check_blob_fits(blob)
+            self.slots_imported += 1
+            self.migration_bytes_in += blob.nbytes
+            if self.migration_mode == "batched" \
+                    and self.prefill_mode == "batched":
+                # queue the import; dispatch_step scatters every pending
+                # blob in one batched call per source extent
+                self._pending_imports.append((slot, blob))
+            else:
+                tm = time.perf_counter()
+                self._import_kv(slot, blob)
+                self.migration_host_seconds += time.perf_counter() - tm
         elif seq.next_pos > 0:
             # no blob (pool miss): re-prefill everything up to next_pos
             tokens = (seq.prompt + seq.generated)[:seq.next_pos]
@@ -450,18 +634,126 @@ class Instance:
         return slot
 
     def release(self, slot: int, export: bool = True) -> Optional[KVBlob]:
+        """Immediate release: export (per-slot path) and free the slot.
+
+        The batched alternative for migrating slots is
+        :meth:`release_async` + :meth:`flush_exports`."""
         if self._inflight is not None:
             raise RuntimeError("release() while a step ticket is in flight")
+        if slot in self._draining:
+            raise RuntimeError(f"slot {slot} is already draining")
+        self._flush_imports()
         seq = self.slots[slot]
+        self._check_exportable(slot, seq, export)
+        blob = None
+        if export and seq:
+            t0 = time.perf_counter()
+            blob = self._export_kv(slot, seq)
+            self.slots_exported += 1
+            self.migration_bytes_out += blob.nbytes
+            self.migration_host_seconds += time.perf_counter() - t0
+        self.slots[slot] = None
+        return blob
+
+    def release_async(self, slot: int) -> None:
+        """Mark a slot draining: its seq is released from stepping, but
+        the KV export is deferred to the next :meth:`flush_exports` —
+        dispatched right after the next step so the gather overlaps
+        device compute.  The slot stays unavailable to ``admit`` until
+        the export is flushed."""
+        if self._inflight is not None:
+            raise RuntimeError(
+                "release_async() while a step ticket is in flight")
+        if self.migration_mode != "batched":
+            raise RuntimeError("release_async() requires "
+                               "migration_mode='batched'; use release()")
+        seq = self.slots[slot]
+        if seq is None or slot in self._draining:
+            raise RuntimeError(f"slot {slot} holds no releasable seq")
+        self._check_exportable(slot, seq, export=True)
+        self._draining[slot] = seq
+
+    def flush_exports(self) -> Dict[str, KVBlob]:
+        """Materialise every draining slot's blob and free the slots.
+
+        One jitted gather for the whole batch (each cache leaf touched
+        once); each blob is trimmed inside the jit to its own live
+        prefix, bucketed to a power-of-two ``prefill_chunk`` multiple so
+        compiled shapes stay log-bounded.  ``nbytes`` counts the exact
+        live prefix — the sub-bucket padding (``slot_pos == -1``, never
+        attended) is not accounted, so pool accounting still carries no
+        dead bytes.  Legal while a step ticket is in flight — the step
+        never writes draining rows, so the gather reads them unchanged
+        from the post-step cache; that is the overlap window."""
+        if not self._draining:
+            return {}
+        t0 = time.perf_counter()
+        if self._inflight is None:
+            self._flush_imports()
+        slots = self.draining_slots()
+        seqs = [self._draining[i] for i in slots]
+        overlapped = self._inflight is not None
+        out: Dict[str, KVBlob] = {}
+        extents = [v.shape[_pos_axis(k) + 1] for k, v in
+                   self.cache.items() if _pos_axis(k) is not None]
+        max_ext = max(extents) if extents else 0
+        lives = []
+        for s in seqs:
+            live = min(s.next_pos, max_ext)
+            b = max(self.prefill_chunk, 1)
+            while b < live:
+                b <<= 1
+            lives.append(min(b, max_ext) if max_ext else 0)
+        # canonical order (by bucketed extent, then slot) so the compile
+        # key is a multiset of buckets, not an ordered tuple — (16, 32)
+        # and (32, 16) batches share one compiled gather
+        order = sorted(range(len(slots)), key=lambda j: (lives[j],
+                                                         slots[j]))
+        slots = [slots[j] for j in order]
+        seqs = [seqs[j] for j in order]
+        fn = self.steps.export_batch(tuple(lives[j] for j in order))
+        leaf_dicts = fn(self.cache, jnp.asarray(slots, jnp.int32))
+        self.steps.count_migration(f"export:{len(slots)}")
+        for seq, leaves in zip(seqs, leaf_dicts):
+            out[seq.req_id] = KVBlob(seq.req_id, leaves, seq.next_pos,
+                                     _live_nbytes(leaves, seq.next_pos))
+        for i in slots:
+            self.slots[i] = None
+        self._draining.clear()
+        n = len(slots)
+        self.slots_exported += n
+        self.export_overlapped_slots += n if overlapped else 0
+        self.migration_bytes_out += sum(b.nbytes for b in out.values())
+        self.migration_host_seconds += time.perf_counter() - t0
+        return out
+
+    def _check_exportable(self, slot: int, seq: Optional[EngineSeq],
+                          export: bool) -> None:
         if export and seq is not None and seq.prefilling:
             # a blob must cover [0, next_pos); half-done queued prefill
-            # doesn't — callers release mid-prefill only without export
+            # doesn't — callers release mid-prefill only without export,
+            # or step until the queue drains and then export
             raise RuntimeError(
                 f"slot {slot} ({seq.req_id}) still has queued prefill; "
                 "cannot export its KV blob")
-        blob = self._export_kv(slot, seq) if export and seq else None
-        self.slots[slot] = None
-        return blob
+
+    def _check_blob_fits(self, blob: KVBlob) -> None:
+        """A blob whose position extent exceeds the target cache would
+        silently lose live positions on import (wrapped-ring or
+        longer-context source) — refuse loudly; a caller that owns
+        mixed-geometry instances must catch this and re-admit the seq
+        without the blob (pool-miss re-prefill)."""
+        for k, src in blob.arrays.items():
+            pax = _pos_axis(k)
+            if pax is None or k not in self.cache:
+                continue
+            tgt = self.cache[k].shape[pax + 1]
+            if src.shape[pax] > tgt:
+                raise ValueError(
+                    f"KV blob {blob.req_id!r}: leaf {k!r} covers "
+                    f"{src.shape[pax]} positions but the target cache "
+                    f"holds {tgt}; importing would drop live positions "
+                    "— re-prefill instead of importing this blob")
 
     # -- KV migration -----------------------------------------------------------
 
@@ -474,17 +766,20 @@ class Instance:
         nbytes = 0
         for k, v in self.cache.items():
             sl = jnp.take(v, slot, axis=_slot_slice(k))
+            self.steps.count_migration("export_perslot")
             ax = _pos_axis(k)
             if ax is not None:
                 # ring caches wrap at the buffer size; the live region is
                 # [0, next_pos) until the ring fills, then the whole ring
                 live = min(seq.next_pos, sl.shape[ax])
                 sl = jax.lax.slice_in_dim(sl, 0, live, axis=ax)
+                self.steps.count_migration("export_perslot")
             arrays[k] = sl
             nbytes += sl.size * sl.dtype.itemsize
         return KVBlob(seq.req_id, arrays, seq.next_pos, nbytes)
 
     def _import_kv(self, slot: int, blob: KVBlob) -> None:
+        self._check_blob_fits(blob)
         for k in self.cache:
             ax = _slot_slice(k)
             src = blob.arrays[k]
@@ -493,16 +788,41 @@ class Instance:
             pax = _pos_axis(k)
             if pax is not None and src.shape[pax] != tshape[pax]:
                 # trimmed blob: pad dead positions back (slot_pos with -1
-                # so they stay invalid, K/V with zeros — never attended)
+                # so they stay invalid, K/V with zeros — never attended).
+                # A source *longer* than the target was rejected above —
+                # truncating it would drop live positions.
                 pad = tshape[pax] - src.shape[pax]
                 widths = [(0, 0)] * src.ndim
-                widths[pax] = (0, max(pad, 0))
+                widths[pax] = (0, pad)
                 fill = -1 if k == "slot_pos" else 0
-                src = jnp.pad(src, widths, constant_values=fill) if pad > 0 \
-                    else jax.lax.slice_in_dim(src, 0, tshape[pax], axis=pax)
+                src = jnp.pad(src, widths, constant_values=fill)
+                self.steps.count_migration("import_perslot")
             idx = [slice(None)] * self.cache[k].ndim
             idx[ax] = slot
             self.cache[k] = self.cache[k].at[tuple(idx)].set(src)
+            self.steps.count_migration("import_perslot")
+
+    def _flush_imports(self) -> None:
+        """Scatter every pending admitted blob into the cache: one
+        batched jitted call per distinct source position extent (blobs
+        from one export batch share theirs), each cache leaf written
+        once per call."""
+        if not self._pending_imports:
+            return
+        t0 = time.perf_counter()
+        pending, self._pending_imports = self._pending_imports, []
+        by_extent: Dict[tuple, List[Tuple[int, KVBlob]]] = {}
+        for slot, blob in pending:
+            ext = tuple(sorted(
+                (k, v.shape[_pos_axis(k)]) for k, v in blob.arrays.items()
+                if _pos_axis(k) is not None))
+            by_extent.setdefault(ext, []).append((slot, blob))
+        for group in by_extent.values():
+            slots = jnp.asarray([s for s, _ in group], jnp.int32)
+            blobs = [b.arrays for _, b in group]
+            self.cache = self.steps.import_batch(self.cache, slots, blobs)
+            self.steps.count_migration(f"import:{len(group)}")
+        self.migration_host_seconds += time.perf_counter() - t0
 
     def _clear_slot_cache(self, slot: int) -> None:
         if "slot_pos" in self.cache:
@@ -548,17 +868,51 @@ class Instance:
 
     # -- the mixed prefill / decode / verify step ---------------------------------
 
+    def _resolve_prefill_budget(self) -> int:
+        """Per-step prefill token budget.  Explicit int -> fixed cap;
+        None + cost model -> adaptive (largest chunk-multiple whose
+        modeled mixed-step latency stays within
+        ``prefill_latency_factor`` x the decode-only step — caps
+        latency, not tokens); None without a model -> one chunk per
+        slot."""
+        if self.prefill_budget is not None:
+            return self.prefill_budget
+        cap_tokens = self.max_slots * self.prefill_chunk
+        cm = self.cost_model
+        decode = self.decode_slots() if cm is not None else []
+        if cm is None or not decode:
+            # nothing decoding -> no latency to protect; drain freely
+            return cap_tokens
+        B = len(decode)
+        mean_ctx = sum(min(self.slots[i].next_pos, self.cache_len)
+                       for i in decode) / B
+        cap = self.prefill_latency_factor * cm.step_time(B, 1, mean_ctx)
+        budget = self.prefill_chunk       # always make chunk progress
+        while budget + self.prefill_chunk <= cap_tokens:
+            nxt = budget + self.prefill_chunk
+            if cm.mixed_step_time(B, 1, nxt, mean_ctx) > cap:
+                break
+            budget = nxt
+        return budget
+
     def _prefill_plan(self) -> Dict[int, int]:
         """slot -> number of queued prefill tokens to pack this step,
-        bounded per-row by ``prefill_chunk`` and per-step by
-        ``prefill_budget`` (Sarathi-style).  Slots are served shortest
-        remaining prefill first (ties by slot index) so nearly-ready
-        slots reach decode — and release their queue budget — sooner."""
+        bounded per-row by ``prefill_chunk`` and per-step by the
+        resolved prefill budget (Sarathi-style).  Slots whose *group*
+        has no decode-active member on this instance come first
+        (decode-starved group priority: their group's DGDS context and
+        speculation stall until a member decodes), then shortest
+        remaining prefill (ties by slot index) so nearly-ready slots
+        reach decode — and release their queue budget — sooner."""
         plan: Dict[int, int] = {}
         # at least one token per step, or prefilling slots starve forever
-        budget = max(self.prefill_budget, 1)
-        order = sorted(self.prefilling_slots(),
-                       key=lambda i: (len(self.slots[i].prefill_queue), i))
+        budget = max(self._resolve_prefill_budget(), 1)
+        decode_groups = {self.slots[i].group_id
+                         for i in self.decode_slots()}
+        order = sorted(
+            self.prefilling_slots(),
+            key=lambda i: (self.slots[i].group_id in decode_groups,
+                           len(self.slots[i].prefill_queue), i))
         for i in order:
             if budget <= 0:
                 break
@@ -601,6 +955,7 @@ class Instance:
         drafts = drafts or {}
         if self.prefill_mode == "sync":
             return _SyncTicket(self._run_step_sync(drafts))
+        self._flush_imports()
         active = self.active_slots()
         if not active:
             return None

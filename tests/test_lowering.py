@@ -14,12 +14,21 @@ TRAIN = InputShape("t", 64, 4, "train")
 PREFILL = InputShape("p", 64, 4, "prefill")
 DECODE = InputShape("d", 64, 4, "decode")
 
+# MoE expert-parallel lowering uses jax.shard_map, which some container
+# jax builds lack — skip (not fail) there so tier-1 stays green signal
+# while the tests still run where shard_map exists
+needs_shard_map = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="this jax build has no jax.shard_map (MoE ep path)")
+
 
 def small_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-@pytest.mark.parametrize("arch", ["granite-3-8b", "mixtral-8x7b",
+@pytest.mark.parametrize("arch", ["granite-3-8b",
+                                  pytest.param("mixtral-8x7b",
+                                               marks=needs_shard_map),
                                   "mamba2-370m", "zamba2-1.2b",
                                   "whisper-tiny", "llama-3.2-vision-11b"])
 @pytest.mark.parametrize("shape", [TRAIN, PREFILL, DECODE],

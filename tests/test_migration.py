@@ -1,0 +1,337 @@
+"""Batched, overlapped KV migration: release-mid-prefill semantics,
+batched export/import round-trip token-exactness vs the per-slot path,
+export overlap with an in-flight step, import-truncation refusal, pool
+eviction racing a batched multi-slot put, and the prefill-plan policy
+terms (decode-starved group priority, adaptive budget)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.kvpool import GlobalKVPool
+from repro.core.sdmodel import ForwardCostModel, HardwareSpec
+from repro.engine import EngineSeq, Instance, KVBlob, StepFunctions
+
+MIG_ARCHS = ["granite-3-8b", "mamba2-370m", "zamba2-1.2b"]
+
+
+def _seq(rid, prompt, n, temp=0.0, seed=0, group="g0"):
+    return EngineSeq(rid, group, list(prompt), seed=seed, temperature=temp,
+                     max_new_tokens=n)
+
+
+def _run_to_completion(inst, seqs):
+    i = 0
+    while any(not s.finished for s in seqs):
+        inst.run_step()
+        i += 1
+        assert i < 2000
+
+
+# ---------------- release-mid-prefill semantics --------------------------------
+
+
+def test_release_mid_prefill_raises_then_exports_after_drain(
+        tiny_params_cache):
+    """A blob must cover [0, next_pos): releasing (sync or async) while
+    prefill is still queued raises; once the queue drains, the deferred
+    release exports a blob that resumes token-exact."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    prompt = list(range(2, 30))
+
+    ref_inst = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                        gamma_max=0, prefill_chunk=8, base_seed=7)
+    ref = _seq("ref", prompt, 10, seed=3)
+    ref_inst.admit(ref)
+    _run_to_completion(ref_inst, [ref])
+
+    a = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, instance_id="a",
+                 base_seed=7)
+    seq = _seq("r0", prompt, 10, seed=3)
+    slot = a.admit(seq)
+    assert seq.prefilling
+    with pytest.raises(RuntimeError, match="queued prefill"):
+        a.release(slot, export=True)
+    with pytest.raises(RuntimeError, match="queued prefill"):
+        a.release_async(slot)
+    # ...but the queue can be stepped dry and then exported
+    i = 0
+    while seq.prefilling:
+        a.run_step()
+        i += 1
+        assert i < 100
+    a.release_async(slot)
+    blob = a.flush_exports()[seq.req_id]
+    assert blob.next_pos == seq.next_pos
+
+    b = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, instance_id="b",
+                 base_seed=7)
+    b.admit(seq, blob)
+    assert b.queued_prefill_tokens() == 0   # blob hit: no re-prefill
+    _run_to_completion(b, [seq])
+    assert seq.generated == ref.generated
+
+
+# ---------------- batched round-trip vs per-slot path --------------------------
+
+
+@pytest.mark.parametrize("arch", MIG_ARCHS)
+def test_batched_migration_roundtrip_token_exact(arch, tiny_params_cache):
+    """Multi-slot batched export -> pool-style hand-off -> multi-slot
+    batched import must be token-exact vs both the per-slot (PR 2) path
+    and a no-migration run, on transformer, SSM and hybrid archs — and
+    must issue far fewer migration device calls per migrated slot."""
+    cfg, params = tiny_params_cache(arch)
+    prompts = [list(range(2, 2 + 10 + 3 * i)) for i in range(3)]
+    n_new = 10
+
+    def run(migration_mode):
+        steps = StepFunctions(cfg)     # fresh migration counters
+        a = Instance(cfg, params, steps, max_slots=4, cache_len=128,
+                     gamma_max=0, prefill_chunk=8, instance_id="a",
+                     migration_mode=migration_mode, base_seed=7)
+        b = Instance(cfg, params, steps, max_slots=4, cache_len=128,
+                     gamma_max=0, prefill_chunk=8, instance_id="b",
+                     migration_mode=migration_mode, base_seed=7)
+        seqs = [_seq(f"r{i}", p, n_new, seed=3 + i)
+                for i, p in enumerate(prompts)]
+        for s in seqs:
+            a.admit(s)
+        # decode a few tokens on A, then migrate every slot to B at once
+        for _ in range(6):
+            a.run_step()
+        while any(s.prefilling for s in seqs):
+            a.run_step()
+        if migration_mode == "batched":
+            for i in range(3):
+                a.release_async(i)
+            blobs = a.flush_exports()
+        else:
+            blobs = {s.req_id: a.release(i, export=True)
+                     for i, s in enumerate(seqs)}
+        for s in seqs:
+            b.admit(s, blobs[s.req_id])
+        assert b.prefill_tokens == 0        # blob hits: no re-prefill
+        _run_to_completion(b, seqs)
+        calls = steps.migration_calls
+        moved = sum(i.slots_exported + i.slots_imported for i in (a, b))
+        return [list(s.generated) for s in seqs], calls / max(moved, 1)
+
+    # no-migration reference
+    steps = StepFunctions(cfg)
+    ref_inst = Instance(cfg, params, steps, max_slots=4, cache_len=128,
+                        gamma_max=0, prefill_chunk=8, base_seed=7)
+    refs = [_seq(f"r{i}", p, n_new, seed=3 + i)
+            for i, p in enumerate(prompts)]
+    for r in refs:
+        ref_inst.admit(r)
+    _run_to_completion(ref_inst, refs)
+
+    out_b, calls_per_slot_b = run("batched")
+    out_p, calls_per_slot_p = run("perslot")
+    assert out_b == out_p == [list(r.generated) for r in refs]
+    # the whole batch exports in one gather and imports in one scatter
+    assert calls_per_slot_b < calls_per_slot_p
+
+
+def test_batched_export_single_gather_and_import_single_scatter(
+        tiny_params_cache):
+    """Launch accounting: 3 migrating slots -> one export call and one
+    import call, not one per slot per leaf."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    a = Instance(cfg, params, steps, max_slots=4, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, instance_id="a",
+                 base_seed=7)
+    b = Instance(cfg, params, steps, max_slots=4, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, instance_id="b",
+                 base_seed=7)
+    seqs = [_seq(f"r{i}", range(2, 14), 6, seed=i) for i in range(3)]
+    for s in seqs:
+        a.admit(s)
+    while any(s.prefilling for s in seqs):
+        a.run_step()
+    for i in range(3):
+        a.release_async(i)
+    blobs = a.flush_exports()
+    export_kinds = [k for k in steps.migration_calls_by_kind
+                    if k.startswith("export:")]
+    assert export_kinds and \
+        sum(steps.migration_calls_by_kind[k] for k in export_kinds) == 1
+    for s in seqs:
+        b.admit(s, blobs[s.req_id])
+    b.run_step()                            # flushes the pending imports
+    import_kinds = {k: v for k, v in steps.migration_calls_by_kind.items()
+                    if k.startswith("import:")}
+    assert import_kinds == {"import:3": 1}  # same extent -> one scatter
+
+
+def test_flush_exports_overlaps_inflight_step(tiny_params_cache):
+    """flush_exports may run with a step ticket in flight (the overlap
+    window): the step never writes draining rows, so the gather reads
+    them unchanged — and the blob still resumes token-exact."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    a = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, instance_id="a",
+                 base_seed=7)
+    s0 = _seq("r0", range(2, 12), 8, seed=3)
+    s1 = _seq("r1", range(3, 17), 8, seed=4)
+    a.admit(s0)
+    a.admit(s1)
+    while s0.prefilling or s1.prefilling:
+        a.run_step()
+    ref_inst = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                        gamma_max=0, prefill_chunk=8, base_seed=7)
+    ref0 = _seq("r0", range(2, 12), 8, seed=3)
+    ref_inst.admit(ref0)
+    _run_to_completion(ref_inst, [ref0])
+
+    a.release_async(0)
+    ticket = a.dispatch_step()              # s1 still decoding
+    blobs = a.flush_exports()               # overlapped with the step
+    assert a.export_overlapped_slots == 1
+    a.commit_step(ticket)
+    b = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, instance_id="b",
+                 base_seed=7)
+    b.admit(s0, blobs["r0"])
+    _run_to_completion(b, [s0])
+    assert s0.generated == ref0.generated
+    _run_to_completion(a, [s1])
+
+
+# ---------------- import truncation ---------------------------------------------
+
+
+def test_import_longer_blob_raises_not_truncates(tiny_params_cache):
+    """A blob whose position extent exceeds the target cache must raise
+    a clear error instead of silently dropping live positions."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    a = Instance(cfg, params, steps, max_slots=2, cache_len=96,
+                 gamma_max=0, prefill_chunk=8, base_seed=7)
+    seq = _seq("r0", range(2, 50), 16, seed=1)
+    slot = a.admit(seq)
+    i = 0
+    while len(seq.generated) < 10:
+        a.run_step()
+        i += 1
+        assert i < 200
+    blob = a.release(slot, export=True)
+    assert blob.next_pos > 32
+    small = Instance(cfg, params, steps, max_slots=2, cache_len=32,
+                     gamma_max=0, prefill_chunk=8, base_seed=7)
+    with pytest.raises(ValueError, match="drop live positions"):
+        small.admit(seq, blob)
+
+
+# ---------------- pool: batched put vs eviction ---------------------------------
+
+
+def _blob(rid, nbytes):
+    return KVBlob(rid, {}, 1, nbytes)
+
+
+def test_put_batch_evicts_once_and_keeps_accounting_exact():
+    """A multi-slot put that overflows DRAM must evict only older
+    entries (never a same-batch peer mid-insert) and keep byte
+    accounting exact."""
+    pool = GlobalKVPool(dram_capacity=150)
+    pool.put(_blob("old", 60), "n0")
+    pool.put_batch([_blob("m0", 60), _blob("m1", 60), _blob("m2", 60)],
+                   "n1")
+    # LRU: "old" spills first, then the batch's own oldest entries —
+    # insertion order within the batch — until DRAM fits
+    assert pool._entries["old"].tier == "ssd"
+    assert pool._entries["m0"].tier == "ssd"
+    assert pool._entries["m1"].tier == "dram"
+    assert pool._entries["m2"].tier == "dram"
+    dram = [e for e in pool._entries.values() if e.tier == "dram"]
+    assert pool.dram_used == sum(e.nbytes for e in dram) == 120
+    assert pool.dram_used <= pool.dram_capacity
+    assert pool.puts == 4
+    # everything is still retrievable (ssd tier pays the extra leg)
+    for rid in ("old", "m0", "m1", "m2"):
+        assert pool.get(rid, "n1") is not None
+    assert pool.misses == 0
+
+
+def test_pool_put_charges_export_transfer():
+    """Regression: puts were free while gets paid — the device->host
+    export leg must be accounted at put time."""
+    pool = GlobalKVPool()
+    pool.put(_blob("a", 1 << 20), "n0")
+    assert pool.bytes_moved == 1 << 20
+    assert pool.bytes_put == 1 << 20
+    assert pool.transfer_seconds == \
+        pytest.approx(pool.costs.put_seconds(1 << 20))
+    t0 = pool.transfer_seconds
+    pool.get("a", "n0")
+    assert pool.bytes_fetched == 1 << 20
+    assert pool.transfer_seconds - t0 == \
+        pytest.approx(pool.costs.fetch_seconds(1 << 20, "dram", False))
+
+
+# ---------------- prefill plan policy terms --------------------------------------
+
+
+def test_prefill_plan_prioritizes_decode_starved_group(tiny_params_cache):
+    """A prefilling slot whose group has no decode-active member on the
+    instance outranks shorter queues from decode-served groups."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    inst = Instance(cfg, params, steps, max_slots=3, cache_len=256,
+                    gamma_max=0, prefill_chunk=8, prefill_budget=8,
+                    base_seed=7)
+    sa = _seq("a0", [2, 3, 4, 5], 8, group="gA")
+    inst.admit(sa)
+    while sa.prefilling:
+        inst.run_step()                     # gA now decode-active
+    inst.admit(_seq("a1", range(1, 7), 2, group="gA"))    # 5 queued
+    inst.admit(_seq("b0", range(1, 26), 2, group="gB"))   # 24 queued
+    plan = inst._prefill_plan()
+    # budget 8: the decode-starved gB slot wins despite its longer queue
+    assert plan == {2: 8}
+
+
+def test_adaptive_prefill_budget_caps_mixed_step_latency(
+        tiny_params_cache):
+    """prefill_budget=None + a cost model derives the budget from the
+    modeled mixed-step latency: a slow device throttles to one chunk, a
+    fast one drains freely; without decode rows there is no latency to
+    protect."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    slow = ForwardCostModel(cfg, HardwareSpec(
+        "slow", peak_flops=1e7, hbm_bw=1e7, link_bw=1e7,
+        launch_overhead=0.0))
+    fast = ForwardCostModel(cfg, HardwareSpec(
+        "fast", peak_flops=1e18, hbm_bw=1e18, link_bw=1e18))
+
+    def build(cm):
+        inst = Instance(cfg, params, steps, max_slots=4, cache_len=256,
+                        gamma_max=0, prefill_chunk=8, cost_model=cm,
+                        base_seed=7)
+        s = _seq("d0", [2, 3, 4, 5], 8)
+        inst.admit(s)
+        while s.prefilling:
+            inst.run_step()                 # one decode row to protect
+        for i in range(3):
+            inst.admit(_seq(f"p{i}", range(1, 40), 2, seed=i))
+        return inst
+
+    inst = build(slow)
+    assert inst._resolve_prefill_budget() == inst.prefill_chunk
+    inst = build(fast)
+    assert inst._resolve_prefill_budget() == \
+        inst.max_slots * inst.prefill_chunk
+    # no decode rows -> drain freely regardless of the model
+    idle = Instance(cfg, params, steps, max_slots=4, cache_len=256,
+                    gamma_max=0, prefill_chunk=8, cost_model=slow,
+                    base_seed=7)
+    idle.admit(_seq("p", range(1, 40), 2))
+    assert idle._resolve_prefill_budget() == \
+        idle.max_slots * idle.prefill_chunk

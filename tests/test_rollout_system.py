@@ -33,6 +33,8 @@ def test_outputs_invariant_to_system_config(tiny_params_cache):
         dict(prefill_budget=16),                         # throttled prefill
         dict(chunk_size=8),                              # many chunks
         dict(n_instances=3, max_slots=1, chunk_size=8),  # migrations
+        dict(n_instances=3, max_slots=1, chunk_size=8,   # PR 2 per-slot
+             migration_mode="perslot"),                  # migration path
         dict(policy="seer", spec_decode=True, chunk_size=16),
         dict(policy="seer", spec_decode=True, multipath_top_k=2),
         dict(policy="seer", spec_decode=True, chunk_size=16,
