@@ -223,11 +223,16 @@ def bench_engine_migration(n_requests: int = 12, n_instances: int = 2,
         # seer scheduling spreads resumed chunks across instances
         # (cross-instance migrations), unlike fifo's submit-order
         # ping-back to the home instance
+        # admit-into-draining and in-place renewal are pinned off: this
+        # bench measures the PR 3 batched+overlapped export window and
+        # migration volume; the takeover/renewal paths are measured by
+        # bench_engine_topology
         ro = SeerRollout(
             cfg, params, n_instances=n_instances, max_slots=max_slots,
             cache_len=max(plens) + max_new_tokens + 32,
             chunk_size=chunk_size, prefill_chunk=prefill_chunk,
             prefill_mode=prefill_mode, migration_mode=migration_mode,
+            admit_into_draining=False, final_chunk_inplace=False,
             policy="seer", spec_decode=False, base_seed=7)
         # warm-up on the full workload compiles every step + migration
         # batch shape so the timed pass measures steady-state cost, not
@@ -298,8 +303,121 @@ def bench_engine_migration(n_requests: int = 12, n_instances: int = 2,
     }
 
 
+def bench_engine_topology(n_requests: int = 12, n_instances: int = 4,
+                          n_nodes: int = 2, max_slots: int = 1,
+                          prompt_len: int = 24, max_new_tokens: int = 20,
+                          chunk_size: int = 6, prefill_chunk: int = 8,
+                          seed: int = 5) -> dict:
+    """Cross-node topology micro-benchmark (tiny model): 2 nodes x 2
+    instances, small chunks, so resumed chunks constantly choose
+    between a same-node and a cross-node placement.  Runs the sync
+    oracle, topology-blind batched placement and topology-aware batched
+    placement on identical workloads; reports cross-node fabric bytes
+    and fetches, modeled pool transfer seconds, in-place final-chunk
+    renewals (eviction-aware export) and token-exactness across all
+    three paths.
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.core.request import make_groups
+    from repro.core.rollout import SeerRollout
+    from repro.engine import StepFunctions
+
+    cfg = get_tiny_config("granite-3-8b")
+    from repro.models import init_params
+    params, _ = init_params(cfg, jax.random.PRNGKey(1))
+    group_size = 2
+    # staggered prompt lengths: releases interleave with live steps and
+    # requeued chunks must pick an instance while their home node is
+    # sometimes busy — the placement decision the bench measures
+    plens = [prompt_len + 5 * g for g in range(n_requests // group_size)]
+    prompts = [[(11 * g + j) % (cfg.vocab_size - 2) + 1
+                for j in range(plens[g])]
+               for g in range(n_requests // group_size)]
+    steps = StepFunctions(cfg)     # shared: compiles amortize over runs
+
+    def one(prefill_mode: str, topology_aware: bool) -> dict:
+        ro = SeerRollout(
+            cfg, params, n_instances=n_instances, max_slots=max_slots,
+            cache_len=max(plens) + max_new_tokens + 32,
+            chunk_size=chunk_size, prefill_chunk=prefill_chunk,
+            prefill_mode=prefill_mode, n_nodes=n_nodes,
+            topology_aware=topology_aware, final_chunk_inplace=True,
+            policy="seer", spec_decode=False, base_seed=7, steps=steps)
+        groups = make_groups(prompts, group_size=group_size,
+                             max_new_tokens=max_new_tokens, seed=seed)
+        # warm-up compiles the step/migration shapes
+        ro.run(make_groups(prompts, group_size=group_size,
+                           max_new_tokens=max_new_tokens, seed=seed))
+        pool0 = dict(ro.pool.stats())
+        # instance counters are lifetime totals: snapshot after warm-up
+        # so the record reflects the timed run only
+        takeovers0 = sum(i.takeover_admits for i in ro.instances)
+        exported0 = sum(i.slots_exported for i in ro.instances)
+        overlapped0 = sum(i.export_overlapped_slots for i in ro.instances)
+        t0 = time.perf_counter()
+        res = ro.run(groups)
+        wall = time.perf_counter() - t0
+        pool = ro.pool.stats()
+        exported = sum(i.slots_exported for i in ro.instances) - exported0
+        overlapped = sum(i.export_overlapped_slots
+                         for i in ro.instances) - overlapped0
+        return {
+            "migrations": res.stats.migrations,
+            "chunks": res.stats.chunks,
+            "inplace_renewals": res.stats.inplace_renewals,
+            "takeover_admits":
+                sum(i.takeover_admits for i in ro.instances) - takeovers0,
+            "cross_node_bytes":
+                pool["cross_node_bytes"] - pool0["cross_node_bytes"],
+            "cross_node_fetches":
+                pool["cross_node_fetches"] - pool0["cross_node_fetches"],
+            "pool_bytes_moved_mb":
+                (pool["bytes_moved_gb"] - pool0["bytes_moved_gb"]) * 1024,
+            "pool_transfer_seconds":
+                pool["transfer_seconds"] - pool0["transfer_seconds"],
+            "export_overlap_fraction": overlapped / max(exported, 1),
+            "tokens_per_sec": res.stats.tokens / max(wall, 1e-9),
+            "wall_seconds": wall,
+            "responses": res.responses(),
+        }
+
+    sync = one("sync", False)
+    blind = one("batched", False)
+    aware = one("batched", True)
+    resp = {k: m.pop("responses") for k, m in
+            (("sync", sync), ("blind", blind), ("aware", aware))}
+    return {
+        "workload": {
+            "n_requests": n_requests, "n_instances": n_instances,
+            "n_nodes": n_nodes, "max_slots": max_slots,
+            "prompt_len": prompt_len, "max_new_tokens": max_new_tokens,
+            "chunk_size": chunk_size, "prefill_chunk": prefill_chunk,
+        },
+        "sync": sync,
+        "blind": blind,
+        "aware": aware,
+        "token_exact":
+            resp["sync"] == resp["blind"] == resp["aware"],
+        "cross_node_bytes_ratio":
+            blind["cross_node_bytes"]
+            / max(aware["cross_node_bytes"], 1),
+    }
+
+
 _ENGINE_ROLLOUT_CACHE: Optional[dict] = None
 _ENGINE_MIGRATION_CACHE: Optional[dict] = None
+_ENGINE_TOPOLOGY_CACHE: Optional[dict] = None
+
+
+def ensure_engine_topology_record() -> dict:
+    """Run the topology micro-benchmark once per process and write it
+    to BENCH_rollout.json's 'engine_topology' section."""
+    global _ENGINE_TOPOLOGY_CACHE
+    if _ENGINE_TOPOLOGY_CACHE is None:
+        _ENGINE_TOPOLOGY_CACHE = bench_engine_topology()
+        update_bench_rollout("engine_topology", _ENGINE_TOPOLOGY_CACHE)
+    return _ENGINE_TOPOLOGY_CACHE
 
 
 def ensure_engine_migration_record() -> dict:

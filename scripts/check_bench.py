@@ -20,6 +20,14 @@ that figure at or under the committed baseline, spend less host time
 stalled on migration than the per-slot path, and dispatch a nonzero
 fraction of exports inside the overlap window.
 
+And the cross-node topology micro-benchmark (``engine_topology``
+section): all divided-mode paths must stay token-exact vs the sync
+oracle, cross-node migration must actually be charged on the 2-node
+layout (cross_node_bytes > 0 under topology-blind placement), and
+topology-aware placement must move strictly fewer fabric bytes than
+topology-blind placement (and no more than the committed baseline,
+with slack).
+
 Exit status 0 iff every check passes — invoked from the verify skill so
 perf regressions fail tier-1 review, not just eyeballs.
 
@@ -61,6 +69,9 @@ def main(argv=None) -> int:
                          "counters catch the rest deterministically)")
     ap.add_argument("--fwd-slack", type=int, default=0,
                     help="allowed extra forward launches vs baseline")
+    ap.add_argument("--cross-bytes-slack", type=float, default=1.25,
+                    help="fresh topology-aware cross-node bytes must be "
+                         "<= this multiple of the committed baseline")
     ap.add_argument("--mig-stall-ratio", type=float, default=1.0,
                     help="fresh batched migration stall seconds must be "
                          "<= this fraction of the same run's per-slot "
@@ -69,17 +80,21 @@ def main(argv=None) -> int:
 
     base = _section(args.baseline, "engine")
     base_mig = _section(args.baseline, "engine_migration")
+    base_topo = _section(args.baseline, "engine_topology")
     if args.fresh:
         fresh = _section(args.fresh, "engine")
         fresh_mig = _section(args.fresh, "engine_migration")
+        fresh_topo = _section(args.fresh, "engine_topology")
     else:
         # the benchmarks package lives at the repo root, one level up
         sys.path.insert(0, os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
         from benchmarks.common import (bench_engine_migration,
-                                       bench_engine_rollout)
+                                       bench_engine_rollout,
+                                       bench_engine_topology)
         fresh = bench_engine_rollout()
         fresh_mig = bench_engine_migration()
+        fresh_topo = bench_engine_topology()
 
     if fresh.get("workload") != base.get("workload"):
         print("[check_bench] FAIL workload mismatch: fresh "
@@ -109,6 +124,7 @@ def main(argv=None) -> int:
          f"{bb['tokens_per_sec']:.1f}"),
     ]
     checks += _migration_checks(fresh_mig, base_mig, args)
+    checks += _topology_checks(fresh_topo, base_topo, args)
     ok = True
     for name, passed, detail in checks:
         status = "ok  " if passed else "FAIL"
@@ -155,6 +171,38 @@ def _migration_checks(fresh: dict, base: dict, args) -> list:
         ("export_overlap_fraction",
          fb["export_overlap_fraction"] > 0.0,
          f"{fb['export_overlap_fraction']:.2f} > 0"),
+    ]
+
+
+def _topology_checks(fresh: dict, base: dict, args) -> list:
+    """Gates on the cross-node topology micro-benchmark.
+
+    Blind-vs-aware comparisons run within the same fresh run (identical
+    box and workload); the committed baseline bounds the aware path's
+    fabric traffic across PRs (scheduling is deterministic, so a real
+    regression shows up as a byte-count jump, not noise)."""
+    if fresh.get("workload") != base.get("workload"):
+        return [("topology_workload", False,
+                 f"fresh {fresh.get('workload')} vs baseline "
+                 f"{base.get('workload')} — numbers are not comparable")]
+    fa, fb = fresh["aware"], fresh["blind"]
+    ba = base["aware"]
+    return [
+        ("topology_token_exact", fresh.get("token_exact") is True,
+         "aware vs blind vs sync token-exact: "
+         f"{fresh.get('token_exact')}"),
+        ("cross_node_charged", fb["cross_node_bytes"] > 0,
+         f"blind cross_node_bytes {fb['cross_node_bytes']} > 0 "
+         "(2-node layout actually pays the fabric)"),
+        ("topology_aware_reduces_cross_bytes",
+         fa["cross_node_bytes"] < fb["cross_node_bytes"],
+         f"aware {fa['cross_node_bytes']} < blind "
+         f"{fb['cross_node_bytes']}"),
+        ("cross_bytes_vs_baseline",
+         fa["cross_node_bytes"]
+         <= args.cross_bytes_slack * ba["cross_node_bytes"],
+         f"aware {fa['cross_node_bytes']} <= {args.cross_bytes_slack} * "
+         f"baseline {ba['cross_node_bytes']}"),
     ]
 
 

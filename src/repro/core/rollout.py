@@ -47,6 +47,9 @@ class RolloutStats:
     migrations: int = 0
     pool_hits: int = 0
     pool_misses: int = 0
+    # final chunks renewed in place (eviction-aware export: no release,
+    # no pool round-trip for a request about to finish)
+    inplace_renewals: int = 0
     wall_seconds: float = 0.0
 
     @property
@@ -77,12 +80,16 @@ class SeerRollout:
                  prefill_mode: str = "batched",
                  prefill_budget: Optional[int] = None,
                  migration_mode: Optional[str] = None,
+                 n_nodes: int = 1, topology_aware: bool = True,
+                 final_chunk_inplace: bool = False,
+                 admit_into_draining: Optional[bool] = None,
                  policy: str = "seer", spec_decode: bool = True,
                  multipath_top_k: int = 1,
                  gamma_max: int = 8, lam: float = 2.0,
                  fetch_interval: int = 1, cst_depth: int = 12,
                  pool_dram_gb: float = 4.0, base_seed: int = 0,
-                 oracle_lengths: Optional[Dict[str, int]] = None):
+                 oracle_lengths: Optional[Dict[str, int]] = None,
+                 steps: Optional[StepFunctions] = None):
         self.cfg = cfg
         self.chunk_size = chunk_size
         self.policy = policy
@@ -90,8 +97,20 @@ class SeerRollout:
         self.multipath_top_k = multipath_top_k
         self.mba_cfg = MBAConfig(gamma_max=min(gamma_max, 8), lam=lam)
         self.oracle_lengths = oracle_lengths
-        self.steps = StepFunctions(cfg)
+        # placements ranked by modeled blob-transfer cost (prefer the
+        # node already holding the KV blob) vs pure load balance
+        self.topology_aware = topology_aware
+        # eviction-aware export: a request whose remaining budget fits
+        # one chunk renews in place instead of round-tripping the pool.
+        # Opt-in: renewal is SFS-biased (near-finished requests keep
+        # slots longer work could take), so it trades scheduling
+        # fidelity for pool churn — worth it when migration dominates
+        self.final_chunk_inplace = final_chunk_inplace
+        # callers may pass a shared StepFunctions so several rollouts of
+        # the same config reuse compiled step/migration shapes
+        self.steps = steps if steps is not None else StepFunctions(cfg)
         fwd = ForwardCostModel(cfg, TPU_V5E)
+        n_nodes = max(1, min(n_nodes, n_instances))
         self.instances = [
             Instance(cfg, params, self.steps, max_slots=max_slots,
                      cache_len=cache_len, prefill_chunk=prefill_chunk,
@@ -99,6 +118,8 @@ class SeerRollout:
                      prefill_budget=prefill_budget,
                      migration_mode=migration_mode, cost_model=fwd,
                      gamma_max=gamma_max, instance_id=f"inst{i}",
+                     node=f"n{i * n_nodes // n_instances}",
+                     admit_into_draining=admit_into_draining,
                      base_seed=base_seed)
             for i in range(n_instances)
         ]
@@ -125,9 +146,23 @@ class SeerRollout:
                 kv_free_tokens=inst.kv_capacity_tokens()
                 - inst.kv_used_tokens(),
                 active_requests=len(inst.active_slots()),
-                queued_prefill_tokens=inst.queued_prefill_tokens())
+                queued_prefill_tokens=inst.queued_prefill_tokens(),
+                node=inst.node)
             for inst in self.instances
         ]
+
+    def _fetch_cost(self, r: RolloutRequest, node: str) -> float:
+        """Modeled seconds to bring ``r``'s KV blob to ``node`` — the
+        scheduler's topology-ranking oracle (0 for fresh requests)."""
+        return self.pool.peek_fetch_cost(r.req_id, node)
+
+    def measured_export_overlap(self) -> float:
+        """Fraction of exported slots whose gather was dispatched while
+        a step was in flight — feeds ``SimConfig.migration_overlap`` so
+        divided-mode simulator timings track the engine."""
+        exported = sum(i.slots_exported for i in self.instances)
+        overlapped = sum(i.export_overlapped_slots for i in self.instances)
+        return overlapped / max(exported, 1)
 
     def _inst(self, instance_id: str) -> Instance:
         return next(i for i in self.instances
@@ -146,7 +181,7 @@ class SeerRollout:
         seq.next_pos = r.next_pos
         blob = None
         if r.next_pos > 0:
-            blob = self.pool.get(r.req_id, node=instance_id)
+            blob = self.pool.get(r.req_id, node=inst.node)
             if blob is not None:
                 stats.pool_hits += 1
             else:
@@ -177,7 +212,7 @@ class SeerRollout:
         self._sync_back(r, seq)
         blob = inst.release(slot, export=export)
         if export and blob is not None:
-            self.pool.put(blob, node=inst.instance_id)
+            self.pool.put(blob, node=inst.node)
         stats.chunks += 1
         r.chunks_run += 1
 
@@ -201,7 +236,7 @@ class SeerRollout:
         blobs = inst.flush_exports()
         if not blobs:
             return 0
-        self.pool.put_batch(list(blobs.values()), node=inst.instance_id)
+        self.pool.put_batch(list(blobs.values()), node=inst.node)
         for req_id in blobs:
             sched.requeue(self._reqs[req_id])
         return len(blobs)
@@ -261,7 +296,9 @@ class SeerRollout:
         stats = RolloutStats()
         sched = Scheduler(list(groups), self.ctx, policy=self.policy,
                           chunk_size=self.chunk_size,
-                          oracle_lengths=self.oracle_lengths)
+                          oracle_lengths=self.oracle_lengths,
+                          fetch_cost=(self._fetch_cost
+                                      if self.topology_aware else None))
         self._reqs = {r.req_id: r for g in groups for r in g.requests}
         for r in self._reqs.values():
             r.t_submitted = t0
@@ -290,7 +327,7 @@ class SeerRollout:
             tickets = []
             for inst in self.instances:
                 ticket, drafts = None, {}
-                if inst.active_slots():
+                if inst.active_slots() or inst.pending_takeovers():
                     drafts = self._collect_drafts(inst)
                     ticket = inst.dispatch_step(drafts)
                 freed += self._flush_releases(inst, sched)
@@ -330,7 +367,20 @@ class SeerRollout:
                         r.finish(time.monotonic())
                         sched.on_finished(r)
                     elif consumed >= chunk:
-                        if inst.migration_mode == "batched":
+                        remaining = r.max_new_tokens - len(seq.generated)
+                        if self.final_chunk_inplace and \
+                                0 < remaining <= self.chunk_size:
+                            # eviction-aware export: the request fits its
+                            # final chunk budget — renew in place, skip
+                            # the pool round-trip (the blob would be
+                            # fetched once and dropped)
+                            self._sync_back(r, seq)
+                            self._placements[r.req_id] = \
+                                (inst, slot, seq, remaining)
+                            stats.chunks += 1
+                            stats.inplace_renewals += 1
+                            r.chunks_run += 1
+                        elif inst.migration_mode == "batched":
                             self._begin_release(r, stats)
                         else:
                             self._release(r, stats, export=True)

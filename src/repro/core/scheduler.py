@@ -21,7 +21,8 @@ from __future__ import annotations
 import dataclasses
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple)
 
 from repro.core.context import ContextManager
 from repro.core.request import Group, ReqState, RolloutRequest
@@ -38,6 +39,9 @@ class InstanceView:
     # accounting already covers their footprint, but each queued token is
     # a step of compute the instance owes before its decode rows speed up
     queued_prefill_tokens: int = 0
+    # which host the instance lives on: placements on the node already
+    # holding a request's KV blob skip the inter-node fabric hop
+    node: str = "n0"
 
 
 class Scheduler:
@@ -51,10 +55,16 @@ class Scheduler:
     def __init__(self, groups: Sequence[Group], ctx: ContextManager, *,
                  policy: str = "seer", chunk_size: int = 512,
                  starvation_every: int = 16,
-                 oracle_lengths: Optional[Dict[str, int]] = None):
+                 oracle_lengths: Optional[Dict[str, int]] = None,
+                 fetch_cost: Optional[
+                     Callable[[RolloutRequest, str], float]] = None):
         self.policy = policy
         self.chunk_size = chunk_size
         self.ctx = ctx
+        # (request, node) -> modeled seconds to bring the request's KV
+        # blob to that node (0 when it has none).  None = topology-blind
+        # placement (pure load balance)
+        self.fetch_cost = fetch_cost
         self.groups = {g.group_id: g for g in groups}
         self._starvation_every = starvation_every
         self._decisions = 0
@@ -207,34 +217,52 @@ class Scheduler:
 
     def select_instance(self, instances: Sequence[InstanceView],
                         r: RolloutRequest) -> Optional[str]:
-        """Least-loaded instance with room for the chunk's footprint.
+        """Cheapest-to-reach, then least-loaded instance with room for
+        the chunk's footprint.
 
-        Load is KV head-room net of queued prefill: a pool miss dumps the
+        With a ``fetch_cost`` oracle the primary key is the modeled
+        transfer cost of bringing the request's KV blob to the
+        candidate's node — the node already holding the blob wins over a
+        cross-node hop (ICI-vs-PCIe asymmetry), and fresh requests
+        (cost 0 everywhere) fall through to pure load balance.  Load is
+        KV head-room net of queued prefill: a pool miss dumps the
         request's whole context back onto the prefill queue, so an
         instance with a deep backlog is busier than its KV occupancy
         alone suggests (the admission itself is still immediate — queued
         prefill rides along with mixed steps)."""
         need = len(r.prompt) + r.gen_len + self.chunk_tokens(r)
-        best, best_free = None, None
+        best, best_key = None, None
         for iv in instances:
             if iv.free_slots <= 0:
                 continue
             if iv.kv_free_tokens < need:
                 continue
+            cost = self.fetch_cost(r, iv.node) if self.fetch_cost else 0.0
             effective_free = iv.kv_free_tokens - iv.queued_prefill_tokens
-            if best_free is None or effective_free > best_free:
-                best, best_free = iv.instance_id, effective_free
+            # an overloaded instance (prefill backlog >= KV head-room)
+            # never wins on locality alone — a tiny blob-transfer saving
+            # must not serialize the chunk behind a deep queue while a
+            # less-loaded peer sits idle.  Under saturation (every
+            # candidate overloaded) load stays primary and locality
+            # demotes to the tie-break.
+            if effective_free > 0:
+                key = (1, -cost, effective_free)
+            else:
+                key = (0, effective_free, -cost)
+            if best_key is None or key > best_key:
+                best, best_key = iv.instance_id, key
         return best
 
     def plan_admissions(self, instances: Sequence[InstanceView]
                         ) -> List[Tuple[RolloutRequest, str]]:
         """Batch of (request, instance) decisions for one scheduling
-        cycle, grouped so same-instance migrations land together — the
-        engine imports all of an instance's arriving KV blobs in one
-        batched scatter instead of one per admission.  Views are
-        decremented locally as requests are planned (free slots, KV
-        head-room net of the chunk's worst-case footprint), mirroring
-        the one-at-a-time loop this replaces."""
+        cycle, grouped so same-node (and within a node, same-instance)
+        migrations land together — the engine imports all of an
+        instance's arriving KV blobs in one batched scatter instead of
+        one per admission, and a node's arrivals batch their fabric
+        transfers.  Views are decremented locally as requests are
+        planned (free slots, KV head-room net of the chunk's worst-case
+        footprint), mirroring the one-at-a-time loop this replaces."""
         views = {v.instance_id: dataclasses.replace(v)
                  for v in instances}
         plan: List[Tuple[RolloutRequest, str]] = []
@@ -255,7 +283,7 @@ class Scheduler:
             v.kv_free_tokens -= len(r.prompt) + r.gen_len \
                 + self.chunk_tokens(r)
             plan.append((r, iid))
-        plan.sort(key=lambda p: p[1])
+        plan.sort(key=lambda p: (views[p[1]].node, p[1]))
         return plan
 
     # -- lifecycle callbacks -----------------------------------------------------

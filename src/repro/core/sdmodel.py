@@ -119,14 +119,20 @@ class ForwardCostModel:
         return self.forward_time(1, n_tokens, mean_ctx or n_tokens / 2)
 
     def migration_stall(self, n_blobs: int, total_bytes: float, bw: float,
-                        *, batched: bool = True,
+                        *, cross_bytes: float = 0.0,
+                        cross_bw: Optional[float] = None,
+                        batched: bool = True,
                         overlap_frac: float = 0.0) -> float:
         """Stall seconds charged for moving ``n_blobs`` KV blobs
         (``total_bytes`` total) through the global pool at ``bw``.
 
-        The batched engine path gathers/scatters every migrating slot
-        in one dispatch (one fixed launch overhead per batch, not per
-        blob) and enqueues the export behind the next step so
+        ``cross_bytes`` of the total additionally crossed the inter-node
+        fabric and pay a second wire leg at ``cross_bw`` (defaults to
+        ``bw``) — mirroring :class:`~repro.core.kvpool.PoolCosts`, where
+        a cross-node fetch stacks the network hop on top of the host
+        leg.  The batched engine path gathers/scatters every migrating
+        slot in one dispatch (one fixed launch overhead per batch, not
+        per blob) and enqueues the export behind the next step so
         ``overlap_frac`` of the wire time hides under device compute;
         the per-slot path pays a launch per blob and serializes the
         transfer on the step stream (no overlap)."""
@@ -135,6 +141,9 @@ class ForwardCostModel:
         launches = self.hw.launch_overhead * \
             (1.0 if batched else float(n_blobs))
         wire = total_bytes / max(bw, 1.0)
+        if cross_bytes > 0:
+            wire += cross_bytes / max(cross_bw if cross_bw is not None
+                                      else bw, 1.0)
         return (1.0 - min(max(overlap_frac, 0.0), 1.0)) * wire + launches
 
     def mixed_step_time(self, batch: int, tokens_per_req: int,

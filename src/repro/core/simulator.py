@@ -149,8 +149,10 @@ class SimSeq:
 
 
 class SimInstance:
-    def __init__(self, iid: str, kv_capacity: int, max_slots: int):
+    def __init__(self, iid: str, kv_capacity: int, max_slots: int,
+                 node: str = "n0"):
         self.iid = iid
+        self.node = node
         self.kv_capacity = kv_capacity
         self.max_slots = max_slots
         self.running: Dict[str, SimSeq] = {}
@@ -171,6 +173,9 @@ class SimInstance:
         # model, mirroring the engine's one-gather-per-batch dispatch
         self.mig_blobs = 0
         self.mig_bytes = 0.0
+        # subset of mig_bytes that crossed the inter-node fabric
+        # (fetches whose blob lived on another node's tiers)
+        self.mig_cross_bytes = 0.0
         self.tokens_out = 0.0
         self.preemptions = 0
 
@@ -205,6 +210,20 @@ class SimConfig:
     over_issue: float = 2.0         # partial-rollout over-issue factor
     partial_defer_frac: float = 0.0  # set >0 in partial mode automatically
     pool_net_bw: float = 25e9       # KV pool fetch bandwidth (bytes/s)
+    # topology: instances are spread over ``nodes`` hosts (contiguous
+    # blocks); a fetch whose blob lives on another node pays a second
+    # wire leg at ``pool_cross_bw`` (the inter-node fabric hop), and the
+    # topology-aware scheduler ranks placements to avoid it
+    nodes: int = 1
+    pool_cross_bw: float = 12e9
+    topology_aware: bool = True
+    # eviction-aware export: a request whose remaining length fits one
+    # chunk renews in place instead of round-tripping the pool (mirrors
+    # SeerRollout.final_chunk_inplace).  Off by default: renewal is
+    # SFS-biased — near-finished requests hoard slots that LFS-style
+    # policies would hand to longer requests — so it trades tail
+    # latency for pool churn; enable when migration cost dominates.
+    final_chunk_inplace: bool = False
     # batched+overlapped KV migration (the engine's batched path): one
     # launch per migration batch and ``migration_overlap`` of the wire
     # time hidden under device compute.  batched_migration=False +
@@ -218,6 +237,15 @@ class SimConfig:
     # set False to model a host-accept loop paying a blocking
     # device->host sync per step (HardwareSpec.host_sync_overhead)
     fused_accept: bool = True
+
+    def with_measured_overlap(self, fraction: float) -> "SimConfig":
+        """Calibrate ``migration_overlap`` from an engine's measured
+        export-overlap fraction
+        (:meth:`~repro.core.rollout.SeerRollout.measured_export_overlap`)
+        so divided-mode sim migration stalls track the engine."""
+        import dataclasses as _dc
+        return _dc.replace(
+            self, migration_overlap=min(max(float(fraction), 0.0), 1.0))
 
 
 @dataclass
@@ -321,12 +349,17 @@ class ClusterSimulator:
             return 0.0
         stall = self.fwd.migration_stall(
             inst.mig_blobs, inst.mig_bytes, self.sim.pool_net_bw,
+            cross_bytes=inst.mig_cross_bytes,
+            cross_bw=self.sim.pool_cross_bw,
             batched=self.sim.batched_migration,
             overlap_frac=self.sim.migration_overlap)
         self._seg_stats["mig_time"] += stall
         self._seg_stats["mig_bytes"] += inst.mig_bytes
+        self._seg_stats["mig_cross_bytes"] += inst.mig_cross_bytes
+        self._seg_stats["mig_batches"] += 1
         inst.mig_blobs = 0
         inst.mig_bytes = 0.0
+        inst.mig_cross_bytes = 0.0
         return stall
 
     def _segment(self, inst: SimInstance, ctxmgr: ContextManager,
@@ -420,16 +453,24 @@ class ClusterSimulator:
         policy = sim.policy if sim.mode == "divided" else "fifo"
         chunk = sim.chunk_size if sim.mode == "divided" \
             else self.spec.max_gen_length
+        n_inst = self.spec.n_instances
+        nodes = max(1, min(sim.nodes, n_inst))
+        instances = [SimInstance(f"i{k}", self.kv_capacity, sim.max_slots,
+                                 node=f"n{k * nodes // n_inst}")
+                     for k in range(n_inst)]
+        self._node_of = {i.iid: i.node for i in instances}
+        fetch_cost = self._make_fetch_cost() \
+            if (sim.mode == "divided" and sim.topology_aware) else None
         sched = Scheduler(groups, ctxmgr, policy=policy, chunk_size=chunk,
                           oracle_lengths=(true_len if policy in
-                                          ("lfs", "sfs") else None))
-        instances = [SimInstance(f"i{k}", self.kv_capacity, sim.max_slots)
-                     for k in range(self.spec.n_instances)]
+                                          ("lfs", "sfs") else None),
+                          fetch_cost=fetch_cost)
         self._assign_static(groups, instances, true_len)
 
         group_refs: Dict[str, int] = {}     # completed requests per group
         self._seg_stats = {"steps": 0.0, "drafted": 0.0, "accepted": 0.0,
-                           "mig_time": 0.0, "mig_bytes": 0.0}
+                           "mig_time": 0.0, "mig_bytes": 0.0,
+                           "mig_cross_bytes": 0.0, "mig_batches": 0.0}
         completion: Dict[str, float] = {}
         inst_of: Dict[str, int] = {}
         migrations = 0
@@ -473,6 +514,15 @@ class ClusterSimulator:
                             group_refs.get(s.req.group_id, 0) + 1
                         finished += 1
                     elif s.chunk_left <= 0:
+                        if sim.final_chunk_inplace and \
+                                sim.mode == "divided" and \
+                                0 < s.total_left <= sim.chunk_size:
+                            # eviction-aware export: the request fits
+                            # its final chunk budget — renew in place,
+                            # skip the pool round-trip (mirrors
+                            # SeerRollout.final_chunk_inplace)
+                            s.chunk_left = s.total_left
+                            continue
                         # chunk exhausted -> back to the global buffer;
                         # the KV blob export (put) moves bytes too —
                         # charged with the batched/overlapped model at
@@ -540,10 +590,28 @@ class ClusterSimulator:
                 "mean_acc_len": 1.0 + self._seg_stats["accepted"] / steps,
                 "pool_transfer_time": self._seg_stats["mig_time"],
                 "migration_bytes": self._seg_stats["mig_bytes"],
+                "migration_cross_bytes":
+                    self._seg_stats["mig_cross_bytes"],
+                "migration_batches": self._seg_stats["mig_batches"],
                 "busy_frac": busy / max(t_end * len(instances), 1e-9),
             })
 
     # -- placement -----------------------------------------------------------------
+
+    def _make_fetch_cost(self):
+        """(request, node) -> modeled seconds to bring its KV blob to
+        that node — the scheduler's topology-ranking oracle.  The blob
+        lives on the node of the instance that ran the last chunk; a
+        cross-node placement pays the extra fabric leg."""
+        def fetch_cost(r: RolloutRequest, node: str) -> float:
+            if r.gen_len <= 0 or r.instance_id is None:
+                return 0.0
+            nbytes = (len(r.prompt) + r.gen_len) * self.kv_bytes_per_token
+            t = nbytes / max(self.sim.pool_net_bw, 1.0)
+            if self._node_of.get(r.instance_id, node) != node:
+                t += nbytes / max(self.sim.pool_cross_bw, 1.0)
+            return t
+        return fetch_cost
 
     def _assign_static(self, groups: List[Group],
                        instances: List[SimInstance],
@@ -612,7 +680,8 @@ class ClusterSimulator:
                                       int(i.kv_free()),
                                       active_requests=len(i.running),
                                       queued_prefill_tokens=int(
-                                          i.prefill_backlog))
+                                          i.prefill_backlog),
+                                      node=i.node)
                          for i in instances]
                 target = sched.select_instance(views, r)
                 if target != inst.iid:
@@ -661,9 +730,14 @@ class ClusterSimulator:
             # KV pool fetch (divided rollout): no re-prefill; the blob
             # import is batched with the instance's other arrivals and
             # overlapped with compute — stall charged at the next
-            # segment via ForwardCostModel.migration_stall
+            # segment via ForwardCostModel.migration_stall.  A blob
+            # homed on another node additionally pays the inter-node
+            # fabric leg (cross bytes at pool_cross_bw).
+            nbytes = ctx0 * self.kv_bytes_per_token
             inst.mig_blobs += 1
-            inst.mig_bytes += ctx0 * self.kv_bytes_per_token
+            inst.mig_bytes += nbytes
+            if self._node_of.get(r.instance_id, inst.node) != inst.node:
+                inst.mig_cross_bytes += nbytes
         if r.gen_len == 0:
             if self.sim.mode == "divided":
                 # batched prefill: admission queues the prompt; its cost

@@ -72,11 +72,20 @@ global pool a batched, compute-overlapped subsystem:
   pad+scatter per source extent (``StepFunctions.import_batch``) before
   building the step batch, so K migrated arrivals cost one cache write
   per leaf, not K.
-* **Invariants.**  A draining slot stays unavailable for admission
-  until its export is flushed; a blob whose position extent exceeds the
-  target cache raises (live positions are never silently truncated);
-  ``migration_mode="perslot"`` keeps the PR 2 one-``jnp.take``-per-leaf
-  path as the launch-count baseline and equivalence oracle.
+* **Admit-into-draining.**  With ``admit_into_draining`` (default on
+  the batched path) a draining slot counts as admittable one tick
+  early: ``admit`` stashes the newcomer as a *takeover* whose cache
+  writes (clear / blob import) are deferred, and the next
+  ``dispatch_step`` snapshots (exports) the draining rows first, then
+  applies the clears and imports, then steps — the new seq runs in the
+  very step that frees its slot.  Early-gathered blobs wait in an
+  export buffer and are returned by the next ``flush_exports``.
+* **Invariants.**  A blob whose position extent exceeds the target
+  cache raises (live positions are never silently truncated); a
+  taken-over slot's pending import never lands before its draining
+  rows are snapshotted; ``migration_mode="perslot"`` keeps the PR 2
+  one-``jnp.take``-per-leaf path as the launch-count baseline and
+  equivalence oracle.
 
 Step functions are compiled once per (config, T) and shared by every
 instance of that model (the paper colocates many instances per model).
@@ -483,7 +492,9 @@ class Instance:
                  prefill_budget: Optional[int] = None,
                  migration_mode: Optional[str] = None,
                  cost_model=None, prefill_latency_factor: float = 2.0,
-                 instance_id: str = "inst0", base_seed: int = 0,
+                 instance_id: str = "inst0", node: str = "n0",
+                 admit_into_draining: Optional[bool] = None,
+                 base_seed: int = 0,
                  modality_embeds=None):
         if prefill_mode not in ("batched", "sync"):
             raise ValueError(f"prefill_mode={prefill_mode!r}")
@@ -512,6 +523,25 @@ class Instance:
         self.cost_model = cost_model
         self.prefill_latency_factor = prefill_latency_factor
         self.instance_id = instance_id
+        # which host this instance lives on: the KV pool charges
+        # cross-node fetches the inter-node fabric hop, and the
+        # scheduler ranks placements by that cost
+        self.node = node
+        if admit_into_draining is None:
+            admit_into_draining = (migration_mode == "batched"
+                                   and prefill_mode == "batched")
+        elif admit_into_draining and (migration_mode != "batched"
+                                      or prefill_mode != "batched"):
+            # takeovers defer the newcomer's cache writes to the next
+            # batched dispatch; the sync/per-slot paths would write the
+            # slot before its draining rows are snapshotted
+            raise ValueError(
+                "admit_into_draining requires prefill_mode='batched' "
+                "and migration_mode='batched'")
+        # admit-into-draining: a draining slot counts as admittable one
+        # tick early; the new seq's import/clear is deferred until the
+        # next dispatch snapshots (exports) the draining rows first
+        self.admit_into_draining = admit_into_draining
         self.base_key = jax.random.PRNGKey(base_seed)
         self.cache = init_cache(cfg, max_slots, cache_len)
         if cfg.arch_type in ("vlm", "audio"):
@@ -529,6 +559,14 @@ class Instance:
         # cache (flushed in one batched call at the next dispatch)
         self._draining: Dict[int, EngineSeq] = {}
         self._pending_imports: List[Tuple[int, KVBlob]] = []
+        # admit-into-draining state: slot -> the NEW seq admitted into a
+        # still-draining slot (its cache writes are deferred until the
+        # draining rows are exported); blobs gathered early (at
+        # dispatch, to unblock a takeover) wait here for the next
+        # ``flush_exports`` call to hand them to the pool
+        self._takeovers: Dict[int, EngineSeq] = {}
+        self._pending_clears: List[int] = []
+        self._export_buffer: Dict[str, KVBlob] = {}
         # stats
         self.tokens_generated = 0
         self.steps_run = 0
@@ -538,6 +576,7 @@ class Instance:
         # migration accounting
         self.slots_exported = 0
         self.slots_imported = 0
+        self.takeover_admits = 0
         self.export_overlapped_slots = 0
         self.migration_bytes_out = 0
         self.migration_bytes_in = 0
@@ -552,7 +591,16 @@ class Instance:
     # -- capacity ------------------------------------------------------------
 
     def free_slots(self) -> int:
-        return sum(s is None for s in self.slots)
+        free = sum(s is None for s in self.slots)
+        if self.admit_into_draining:
+            # a draining slot is admittable one tick early: the next
+            # dispatch snapshots its rows before the newcomer's import
+            free += sum(1 for i in self._draining
+                        if i not in self._takeovers)
+        return free
+
+    def pending_takeovers(self) -> List[int]:
+        return sorted(self._takeovers)
 
     def active_slots(self) -> List[int]:
         """Slots carrying step work (draining slots are excluded: their
@@ -598,9 +646,26 @@ class Instance:
         if self._inflight is not None:
             raise RuntimeError("admit() while a step ticket is in flight")
         t0 = time.perf_counter()
-        slot = self.slots.index(None)
+        takeover = False
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if free:
+            slot = free[0]
+        else:
+            cands = [i for i in self.draining_slots()
+                     if i not in self._takeovers]
+            if not (self.admit_into_draining and cands):
+                raise ValueError("no admittable slot")
+            # admit into a draining slot: the old seq is safe in
+            # _draining; every cache write (clear / blob import) is
+            # deferred until the next dispatch exports the old rows
+            slot, takeover = cands[0], True
+            self._takeovers[slot] = seq
+            self.takeover_admits += 1
         self.slots[slot] = seq
-        self._clear_slot_cache(slot)
+        if takeover:
+            self._pending_clears.append(slot)
+        else:
+            self._clear_slot_cache(slot)
         seq.prefill_queue = []
         seq.prefill_pos = 0
         if blob is not None and blob.next_pos == seq.next_pos:
@@ -642,7 +707,9 @@ class Instance:
             raise RuntimeError("release() while a step ticket is in flight")
         if slot in self._draining:
             raise RuntimeError(f"slot {slot} is already draining")
-        self._flush_imports()
+        # takeover imports must not land before their draining rows are
+        # snapshotted; everything else flushes now
+        self._flush_imports(exclude=set(self._takeovers))
         seq = self.slots[slot]
         self._check_exportable(slot, seq, export)
         blob = None
@@ -684,13 +751,32 @@ class Instance:
         attended) is not accounted, so pool accounting still carries no
         dead bytes.  Legal while a step ticket is in flight — the step
         never writes draining rows, so the gather reads them unchanged
-        from the post-step cache; that is the overlap window."""
-        if not self._draining:
+        from the post-step cache; that is the overlap window.
+
+        Blobs a dispatch already snapshotted early (to unblock an
+        admit-into-draining takeover) are returned here too — callers
+        see one export stream regardless of when the gather ran."""
+        out = dict(self._export_buffer)
+        self._export_buffer.clear()
+        out.update(self._gather_exports())
+        return out
+
+    def _gather_exports(self, only: Optional[set] = None
+                        ) -> Dict[str, KVBlob]:
+        """Gather draining slots (all, or just ``only``) in one jitted
+        call.  Dispatch passes the taken-over subset so the remaining
+        draining slots keep their overlap window (flushed behind the
+        step as usual)."""
+        slots = [i for i in self.draining_slots()
+                 if only is None or i in only]
+        if not slots:
             return {}
         t0 = time.perf_counter()
         if self._inflight is None:
-            self._flush_imports()
-        slots = self.draining_slots()
+            # blobs queued for *other* slots must land before the gather
+            # reads the cache; imports aimed at taken-over slots wait
+            # until the draining rows are snapshotted
+            self._flush_imports(exclude=set(self._takeovers))
         seqs = [self._draining[i] for i in slots]
         overlapped = self._inflight is not None
         out: Dict[str, KVBlob] = {}
@@ -718,8 +804,10 @@ class Instance:
             out[seq.req_id] = KVBlob(seq.req_id, leaves, seq.next_pos,
                                      _live_nbytes(leaves, seq.next_pos))
         for i in slots:
-            self.slots[i] = None
-        self._draining.clear()
+            if i not in self._takeovers:
+                self.slots[i] = None     # taken-over slots hold a new seq
+            self._draining.pop(i, None)
+            self._takeovers.pop(i, None)
         n = len(slots)
         self.slots_exported += n
         self.export_overlapped_slots += n if overlapped else 0
@@ -802,15 +890,22 @@ class Instance:
             self.cache[k] = self.cache[k].at[tuple(idx)].set(src)
             self.steps.count_migration("import_perslot")
 
-    def _flush_imports(self) -> None:
+    def _flush_imports(self, exclude: Optional[set] = None) -> None:
         """Scatter every pending admitted blob into the cache: one
         batched jitted call per distinct source position extent (blobs
         from one export batch share theirs), each cache leaf written
-        once per call."""
+        once per call.  Imports for slots in ``exclude`` stay pending
+        (their draining rows have not been snapshotted yet)."""
         if not self._pending_imports:
             return
         t0 = time.perf_counter()
         pending, self._pending_imports = self._pending_imports, []
+        if exclude:
+            held = [(s, b) for s, b in pending if s in exclude]
+            pending = [(s, b) for s, b in pending if s not in exclude]
+            self._pending_imports.extend(held)
+            if not pending:
+                return
         by_extent: Dict[tuple, List[Tuple[int, KVBlob]]] = {}
         for slot, blob in pending:
             ext = tuple(sorted(
@@ -955,6 +1050,16 @@ class Instance:
         drafts = drafts or {}
         if self.prefill_mode == "sync":
             return _SyncTicket(self._run_step_sync(drafts))
+        if self._takeovers:
+            # snapshot ONLY the taken-over slots' draining rows so their
+            # clears/imports (and this very step) may write them — the
+            # admitted seq steps this tick instead of next; the other
+            # draining slots keep their overlapped flush window
+            self._export_buffer.update(
+                self._gather_exports(set(self._takeovers)))
+        for slot in self._pending_clears:
+            self._clear_slot_cache(slot)
+        self._pending_clears.clear()
         self._flush_imports()
         active = self.active_slots()
         if not active:

@@ -1,0 +1,246 @@
+"""Property tests for the tiered, topology-aware GlobalKVPool.
+
+A pure-python reference model (independent LRU + per-node capacity
+bookkeeping) is driven in lockstep with the pool through randomized
+put/put_batch/get/drop schedules; after every operation the pool's
+observable state must match the model and the accounting invariants
+must hold:
+
+* total bytes conserved — live entry bytes equal the model's, per-node
+  DRAM/SSD usage equals the sum of resident entries;
+* per-node capacity never exceeded (DRAM always; SSD when bounded);
+* LRU eviction order — tier placement matches the reference LRU;
+* ``put_batch`` ≡ the same sequence of ``put``s in all accounting.
+"""
+import pytest
+
+from repro.core.kvpool import GlobalKVPool, PoolCosts
+from repro.engine.engine import KVBlob
+
+from _propcheck import given, settings, st
+
+NODES = ["n0", "n1", "n2"]
+RIDS = [f"r{i}" for i in range(8)]
+DRAM_CAP = 200
+SSD_CAP = 150
+
+
+def _blob(rid, nbytes):
+    return KVBlob(rid, {}, 1, nbytes)
+
+
+class RefPool:
+    """Independent model: recency-ordered (rid, size, tier, node)."""
+
+    def __init__(self, dram_cap=DRAM_CAP, ssd_cap=SSD_CAP):
+        self.dram_cap = dram_cap
+        self.ssd_cap = ssd_cap
+        self.entries = {}            # rid -> [size, tier, node]
+        self.order = []              # recency, oldest first
+
+    def _used(self, tier, node):
+        return sum(e[0] for e in self.entries.values()
+                   if e[1] == tier and e[2] == node)
+
+    def _evict(self, node):
+        while self._used("dram", node) > self.dram_cap:
+            victim = next(r for r in self.order
+                          if self.entries[r][1] == "dram"
+                          and self.entries[r][2] == node)
+            self.entries[victim][1] = "ssd"
+        if self.ssd_cap is None:
+            return
+        while self._used("ssd", node) > self.ssd_cap:
+            victim = next(r for r in self.order
+                          if self.entries[r][1] == "ssd"
+                          and self.entries[r][2] == node)
+            self.entries[victim][1] = "remote"
+
+    def _insert(self, rid, size, node):
+        if rid in self.entries:
+            self.order.remove(rid)
+        self.entries[rid] = [size, "dram", node]
+        self.order.append(rid)
+
+    def put(self, rid, size, node):
+        self._insert(rid, size, node)
+        self._evict(node)
+
+    def put_batch(self, items, node):
+        for rid, size in items:
+            self._insert(rid, size, node)
+        self._evict(node)
+
+    def get(self, rid, node):
+        if rid not in self.entries:
+            return False
+        self.order.remove(rid)
+        self.order.append(rid)
+        self.entries[rid][1] = "dram"
+        self.entries[rid][2] = node
+        self._evict(node)
+        return True
+
+    def drop(self, rid):
+        if rid in self.entries:
+            del self.entries[rid]
+            self.order.remove(rid)
+
+
+def _check_against_model(pool, ref):
+    # tier/home placement matches the reference LRU model exactly
+    got = {rid: (e.nbytes, e.tier, e.home_node)
+           for rid, e in pool._entries.items()}
+    want = {rid: tuple(e) for rid, e in ref.entries.items()}
+    assert got == want
+    assert list(pool._entries) == ref.order      # recency (LRU) order
+    # bytes conserved: per-node usage equals the sum of resident entries
+    for node in NODES:
+        assert pool.node_dram_used(node) == ref._used("dram", node)
+        assert pool.node_ssd_used(node) == ref._used("ssd", node)
+        # per-node capacity never exceeded
+        assert pool.node_dram_used(node) <= pool.dram_capacity
+        if pool.ssd_capacity is not None:
+            assert pool.node_ssd_used(node) <= pool.ssd_capacity
+    assert pool.dram_used == sum(pool.node_dram_used(n) for n in NODES)
+    # directional byte split always sums to the total moved
+    assert pool.bytes_moved == pool.bytes_put + pool.bytes_fetched
+
+
+def _op_strategy(data):
+    kind = data.draw(st.sampled_from(["put", "put_batch", "get", "drop"]))
+    node = data.draw(st.sampled_from(NODES))
+    if kind == "put":
+        return (kind, data.draw(st.sampled_from(RIDS)),
+                data.draw(st.integers(1, 120)), node)
+    if kind == "put_batch":
+        rids = sorted({data.draw(st.sampled_from(RIDS))
+                       for _ in range(data.draw(st.integers(1, 4)))})
+        return (kind, [(r, data.draw(st.integers(1, 120))) for r in rids],
+                node)
+    return (kind, data.draw(st.sampled_from(RIDS)), node)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_pool_matches_reference_model(data):
+    """Lockstep schedule: tiers, LRU order, per-node bytes and capacity
+    bounds all match an independent reference after every op."""
+    pool = GlobalKVPool(dram_capacity=DRAM_CAP, ssd_capacity=SSD_CAP)
+    ref = RefPool()
+    for _ in range(data.draw(st.integers(5, 40))):
+        op = _op_strategy(data)
+        if op[0] == "put":
+            _, rid, size, node = op
+            pool.put(_blob(rid, size), node)
+            ref.put(rid, size, node)
+        elif op[0] == "put_batch":
+            _, items, node = op
+            pool.put_batch([_blob(r, s) for r, s in items], node)
+            ref.put_batch(items, node)
+        elif op[0] == "get":
+            _, rid, node = op
+            hit = pool.get(rid, node) is not None
+            assert hit == ref.get(rid, node)
+        else:
+            _, rid, node = op
+            pool.drop(rid)
+            ref.drop(rid)
+        _check_against_model(pool, ref)
+    # dropping everything returns the pool to empty accounting
+    for rid in RIDS:
+        pool.drop(rid)
+        ref.drop(rid)
+    _check_against_model(pool, ref)
+    assert pool.dram_used == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_put_batch_equivalent_to_sequential_puts(data):
+    """One batched put and the same blobs put one by one must agree in
+    every piece of accounting: tiers, per-unit usage, counters and
+    modeled transfer seconds.  Scoped to batches of rids not already in
+    the pool: re-putting a resident rid is deliberately weaker under
+    put_batch (the atomic insert never transiently overflows against an
+    old copy the batch itself replaces, so sequential puts may evict a
+    victim the batch keeps — see
+    test_put_batch_evicts_once_and_keeps_accounting_exact)."""
+    seq_pool = GlobalKVPool(dram_capacity=DRAM_CAP, ssd_capacity=SSD_CAP)
+    bat_pool = GlobalKVPool(dram_capacity=DRAM_CAP, ssd_capacity=SSD_CAP)
+    # shared random pre-state over one half of the rid space
+    for _ in range(data.draw(st.integers(0, 6))):
+        rid = data.draw(st.sampled_from(RIDS[:4]))
+        size = data.draw(st.integers(1, 120))
+        node = data.draw(st.sampled_from(NODES))
+        seq_pool.put(_blob(rid, size), node)
+        bat_pool.put(_blob(rid, size), node)
+    node = data.draw(st.sampled_from(NODES))
+    rids = sorted({data.draw(st.sampled_from(RIDS[4:]))
+                   for _ in range(data.draw(st.integers(1, 5)))})
+    items = [(r, data.draw(st.integers(1, 120))) for r in rids]
+    for rid, size in items:
+        seq_pool.put(_blob(rid, size), node)
+    bat_pool.put_batch([_blob(r, s) for r, s in items], node)
+    assert {r: (e.nbytes, e.tier, e.home_node)
+            for r, e in seq_pool._entries.items()} == \
+           {r: (e.nbytes, e.tier, e.home_node)
+            for r, e in bat_pool._entries.items()}
+    assert list(seq_pool._entries) == list(bat_pool._entries)  # recency
+    for n in NODES:
+        assert seq_pool.node_dram_used(n) == bat_pool.node_dram_used(n)
+        assert seq_pool.node_ssd_used(n) == bat_pool.node_ssd_used(n)
+    for attr in ("puts", "evictions", "remote_spills", "bytes_moved",
+                 "bytes_put", "bytes_fetched"):
+        assert getattr(seq_pool, attr) == getattr(bat_pool, attr), attr
+    assert seq_pool.transfer_seconds == \
+        pytest.approx(bat_pool.transfer_seconds)
+
+
+def test_lru_eviction_order_is_least_recent_first():
+    """Eviction demotes the least-recently-used entry of the node, and
+    a get refreshes recency."""
+    pool = GlobalKVPool(dram_capacity=100)
+    pool.put(_blob("a", 40), "n0")
+    pool.put(_blob("b", 40), "n0")
+    assert pool.get("a", "n0") is not None      # a now most recent
+    pool.put(_blob("c", 40), "n0")              # overflow: b is LRU
+    assert pool._entries["b"].tier == "ssd"
+    assert pool._entries["a"].tier == "dram"
+    assert pool._entries["c"].tier == "dram"
+    assert pool.evictions == 1
+
+
+def test_ssd_overflow_spills_to_remote_and_stays_fetchable():
+    """Per-node SSD budget: overflow demotes LRU SSD entries to the
+    remote tier; fetches still hit and pay the remote legs."""
+    pool = GlobalKVPool(dram_capacity=50, ssd_capacity=50)
+    for i, rid in enumerate(("a", "b", "c")):
+        pool.put(_blob(rid, 50), "n0")
+    # a: dram->ssd->remote, b: dram->ssd, c: dram
+    assert pool._entries["a"].tier == "remote"
+    assert pool._entries["b"].tier == "ssd"
+    assert pool._entries["c"].tier == "dram"
+    assert pool.remote_spills == 1
+    t0 = pool.transfer_seconds
+    assert pool.get("a", "n0") is not None
+    assert pool.misses == 0
+    assert pool.transfer_seconds - t0 == \
+        pytest.approx(pool.costs.fetch_seconds(50, "remote", False))
+
+
+def test_fetch_cost_asymmetry_cross_node_and_tiers():
+    """Modeled path costs: cross-node > same-node (ICI vs PCIe+fabric),
+    and deeper tiers stack their legs."""
+    c = PoolCosts()
+    n = 1 << 20
+    assert c.fetch_seconds(n, "dram", True) > c.fetch_seconds(n, "dram",
+                                                              False)
+    assert c.fetch_seconds(n, "ssd", False) > c.fetch_seconds(n, "dram",
+                                                              False)
+    assert c.fetch_seconds(n, "remote", False) > c.fetch_seconds(n, "ssd",
+                                                                 False)
+    # same-node fetches ride the fast intra-node interconnect
+    assert c.fetch_seconds(n, "dram", False) == pytest.approx(n / c.ici_bw)
+    assert c.fetch_seconds(n, "dram", True) == \
+        pytest.approx(n / c.dram_bw + n / c.net_bw)

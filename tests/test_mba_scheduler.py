@@ -158,6 +158,48 @@ def test_select_instance_kv_aware():
     assert s.chunk_tokens(r) == 32
 
 
+def test_select_instance_topology_aware():
+    """With a fetch-cost oracle, the node already holding the blob wins
+    over a less-loaded cross-node placement; fresh requests (cost 0
+    everywhere) fall back to load balance; an infeasible same-node
+    instance spills to the cross-node one."""
+    groups, ctx = _mk(1, 2, maxtok=64)
+    r0, r1 = groups[0].requests
+    r0.generated = [1] * 4                       # resumed: has a blob
+    blob_node = {r0.req_id: "nodeA"}
+
+    def cost(r, node):
+        if r.req_id not in blob_node:
+            return 0.0
+        return 0.1 if node == blob_node[r.req_id] else 1.0
+
+    s = Scheduler(groups, ctx, chunk_size=32, fetch_cost=cost)
+    views = [InstanceView("a", free_slots=1, kv_free_tokens=200,
+                          node="nodeA"),
+             InstanceView("b", free_slots=1, kv_free_tokens=900,
+                          node="nodeB")]
+    assert s.select_instance(views, r0) == "a"   # home node beats load
+    assert s.select_instance(views, r1) == "b"   # fresh: load balance
+    # same-node instance cannot hold the chunk -> cross-node fallback
+    views[0].kv_free_tokens = 10
+    assert s.select_instance(views, r0) == "b"
+    # topology-blind scheduler ranks purely by head-room
+    blind = Scheduler(groups, ctx, chunk_size=32)
+    views[0].kv_free_tokens = 200
+    assert blind.select_instance(views, r0) == "b"
+    # overloaded home instance (prefill backlog >= KV head-room) never
+    # wins on locality alone: the idle cross-node peer takes the chunk
+    views[0].queued_prefill_tokens = 200
+    assert s.select_instance(views, r0) == "b"
+    # under saturation (every candidate overloaded) load stays primary:
+    # the less-backlogged cross-node peer beats the buried home node
+    views[0].queued_prefill_tokens = 500         # a: effective -300
+    views[1].queued_prefill_tokens = 905         # b: effective -5
+    assert s.select_instance(views, r0) == "b"
+    views[1].queued_prefill_tokens = 2000        # b: effective -1100
+    assert s.select_instance(views, r0) == "a"   # a now least buried
+
+
 def test_starvation_safeguard():
     groups, ctx = _mk(n_groups=3, gsz=2, maxtok=50)
     s = Scheduler(groups, ctx, policy="seer", starvation_every=2)

@@ -2,12 +2,22 @@
 batched export/import round-trip token-exactness vs the per-slot path,
 export overlap with an in-flight step, import-truncation refusal, pool
 eviction racing a batched multi-slot put, and the prefill-plan policy
-terms (decode-starved group priority, adaptive budget)."""
+terms (decode-starved group priority, adaptive budget).
+
+Topology (PR 4): admit-into-draining takeovers, eviction-aware export
+(final-chunk in-place renewal), cross-node fetch charging, topology-
+aware placement, a fuzzed schedule suite that must stay token-exact vs
+the ``prefill_mode="sync"`` oracle, and sim<->engine migration-overlap
+calibration."""
+import random
+
 import jax
 import numpy as np
 import pytest
 
 from repro.core.kvpool import GlobalKVPool
+from repro.core.request import make_groups
+from repro.core.rollout import SeerRollout
 from repro.core.sdmodel import ForwardCostModel, HardwareSpec
 from repro.engine import EngineSeq, Instance, KVBlob, StepFunctions
 
@@ -236,27 +246,34 @@ def _blob(rid, nbytes):
 
 
 def test_put_batch_evicts_once_and_keeps_accounting_exact():
-    """A multi-slot put that overflows DRAM must evict only older
-    entries (never a same-batch peer mid-insert) and keep byte
-    accounting exact."""
+    """A multi-slot put that overflows a node's DRAM must evict only
+    older entries (never a same-batch peer mid-insert) and keep byte
+    accounting exact.  Capacity is per node: a peer node's working set
+    is untouched by the overflow."""
     pool = GlobalKVPool(dram_capacity=150)
+    pool.put(_blob("peer", 60), "n1")       # other node: must survive
     pool.put(_blob("old", 60), "n0")
     pool.put_batch([_blob("m0", 60), _blob("m1", 60), _blob("m2", 60)],
-                   "n1")
-    # LRU: "old" spills first, then the batch's own oldest entries —
-    # insertion order within the batch — until DRAM fits
+                   "n0")
+    # LRU on n0: "old" spills first, then the batch's own oldest
+    # entries — insertion order within the batch — until DRAM fits
+    assert pool._entries["peer"].tier == "dram"
     assert pool._entries["old"].tier == "ssd"
     assert pool._entries["m0"].tier == "ssd"
     assert pool._entries["m1"].tier == "dram"
     assert pool._entries["m2"].tier == "dram"
     dram = [e for e in pool._entries.values() if e.tier == "dram"]
-    assert pool.dram_used == sum(e.nbytes for e in dram) == 120
-    assert pool.dram_used <= pool.dram_capacity
-    assert pool.puts == 4
+    assert pool.dram_used == sum(e.nbytes for e in dram) == 180
+    assert pool.node_dram_used("n0") == 120 <= pool.dram_capacity
+    assert pool.node_dram_used("n1") == 60
+    assert pool.puts == 5
     # everything is still retrievable (ssd tier pays the extra leg)
-    for rid in ("old", "m0", "m1", "m2"):
-        assert pool.get(rid, "n1") is not None
+    for rid in ("peer", "old", "m0", "m1", "m2"):
+        assert pool.get(rid, "n0") is not None
     assert pool.misses == 0
+    # "peer" was fetched across nodes: the fabric leg must be charged
+    assert pool.cross_node_bytes == 60
+    assert pool.cross_node_fetches == 1
 
 
 def test_pool_put_charges_export_transfer():
@@ -335,3 +352,298 @@ def test_adaptive_prefill_budget_caps_mixed_step_latency(
     idle.admit(_seq("p", range(1, 40), 2))
     assert idle._resolve_prefill_budget() == \
         idle.max_slots * idle.prefill_chunk
+
+
+# ---------------- admit-into-draining -------------------------------------------
+
+
+def test_admit_into_draining_frees_slot_one_tick_earlier(
+        tiny_params_cache):
+    """A draining slot is admittable immediately after release_async;
+    the next dispatch snapshots the old rows before the newcomer's
+    import/clear, and both requests stay token-exact."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+
+    def ref_run(rid, prompt, seed):
+        inst = Instance(cfg, params, steps, max_slots=1, cache_len=128,
+                        gamma_max=0, prefill_chunk=8, base_seed=7)
+        s = _seq(rid, prompt, 8, seed=seed)
+        inst.admit(s)
+        _run_to_completion(inst, [s])
+        return list(s.generated)
+
+    ref0 = ref_run("r0", range(2, 12), 3)
+    ref1 = ref_run("r1", range(3, 17), 4)
+
+    a = Instance(cfg, params, steps, max_slots=1, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, instance_id="a",
+                 base_seed=7)
+    s0 = _seq("r0", range(2, 12), 8, seed=3)
+    a.admit(s0)
+    while s0.prefilling:
+        a.run_step()
+    for _ in range(3):
+        a.run_step()
+    a.release_async(0)
+    assert a.free_slots() == 1          # one tick earlier than flush
+    s1 = _seq("r1", range(3, 17), 8, seed=4)
+    slot = a.admit(s1)                  # takeover of the draining slot
+    assert slot == 0
+    assert a.pending_takeovers() == [0]
+    assert a.free_slots() == 0
+    a.run_step()                        # snapshots r0, steps r1's chunk
+    assert a.takeover_admits == 1
+    blobs = a.flush_exports()           # early-gathered blob surfaces
+    assert list(blobs) == ["r0"]
+    assert blobs["r0"].next_pos == s0.next_pos
+    # r0 resumes token-exact elsewhere; r1 finishes where it is
+    b = Instance(cfg, params, steps, max_slots=1, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, instance_id="b",
+                 base_seed=7)
+    b.admit(s0, blobs["r0"])
+    _run_to_completion(b, [s0])
+    _run_to_completion(a, [s1])
+    assert s0.generated == ref0
+    assert s1.generated == ref1
+
+
+def test_admit_into_draining_rejects_incompatible_modes(
+        tiny_params_cache):
+    """Takeovers defer cache writes to the next batched dispatch; the
+    sync/per-slot paths would corrupt the draining rows, so forcing the
+    flag with them must raise at construction."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    for kw in (dict(migration_mode="perslot"),
+               dict(prefill_mode="sync")):
+        with pytest.raises(ValueError, match="admit_into_draining"):
+            Instance(cfg, params, steps, max_slots=1, cache_len=64,
+                     admit_into_draining=True, **kw)
+
+
+def test_admit_into_draining_disabled_keeps_slot_busy(tiny_params_cache):
+    """With admit_into_draining=False a draining slot is unavailable
+    until its export is flushed (the PR 3 contract)."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    a = Instance(cfg, params, steps, max_slots=1, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, base_seed=7,
+                 admit_into_draining=False)
+    s0 = _seq("r0", range(2, 12), 8, seed=3)
+    a.admit(s0)
+    while s0.prefilling:
+        a.run_step()
+    a.release_async(0)
+    assert a.free_slots() == 0
+    with pytest.raises(ValueError, match="no admittable slot"):
+        a.admit(_seq("r1", range(3, 9), 4, seed=4))
+    a.flush_exports()
+    assert a.free_slots() == 1
+
+
+# ---------------- eviction-aware export (final-chunk in-place) ------------------
+
+
+def test_final_chunk_inplace_skips_pool_roundtrip(tiny_params_cache):
+    """A request whose remaining budget fits one chunk renews in place:
+    fewer pool puts, same tokens."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    prompts = [[2, 3, 4, 5], [5, 6, 7, 8]]
+
+    def run(inplace):
+        ro = SeerRollout(cfg, params, n_instances=1, max_slots=2,
+                         cache_len=96, chunk_size=8, prefill_chunk=8,
+                         policy="fifo", spec_decode=False, base_seed=7,
+                         final_chunk_inplace=inplace, steps=steps)
+        groups = make_groups(prompts, group_size=2, max_new_tokens=24,
+                             seed=5)
+        res = ro.run(groups)
+        return res, ro
+
+    res_off, ro_off = run(False)
+    res_on, ro_on = run(True)
+    assert res_on.responses() == res_off.responses()
+    # 24 tokens / chunk 8: the final boundary (remaining == 8) renews
+    assert res_on.stats.inplace_renewals > 0
+    assert ro_on.pool.puts < ro_off.pool.puts
+    # renewed requests still count their chunk boundaries
+    assert res_on.stats.chunks == res_off.stats.chunks
+
+
+# ---------------- cross-node fetch charging (latent-bug regression) --------------
+
+
+def test_two_node_rollout_charges_cross_node_fetches(tiny_params_cache):
+    """PoolCosts.fetch_seconds' cross_node path must actually be
+    exercised by a rollout whose instances span nodes, and the pool
+    must account the fabric bytes in stats()."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    prompts = [[(5 * g + j) % 17 + 2 for j in range(8 + 3 * g)]
+               for g in range(3)]
+    ro = SeerRollout(cfg, params, n_instances=2, max_slots=1,
+                     cache_len=96, chunk_size=6, prefill_chunk=8,
+                     n_nodes=2, topology_aware=False, policy="seer",
+                     spec_decode=False, base_seed=7, steps=steps)
+    assert {i.node for i in ro.instances} == {"n0", "n1"}
+    groups = make_groups(prompts, group_size=2, max_new_tokens=18, seed=5)
+    res = ro.run(groups)
+    assert res.stats.migrations > 0
+    st = res.pool_stats
+    assert st["cross_node_fetches"] > 0
+    assert st["cross_node_bytes"] > 0
+    # the fabric leg was charged, not just counted: moving the same
+    # bytes same-node would have cost strictly less
+    c = ro.pool.costs
+    n = st["cross_node_bytes"]
+    assert c.fetch_seconds(n, "dram", True) > \
+        c.fetch_seconds(n, "dram", False)
+
+
+def test_topology_aware_placement_reduces_cross_node_bytes(
+        tiny_params_cache):
+    """Two nodes x two instances: ranking placements by modeled
+    transfer cost must cut fabric traffic vs topology-blind load
+    balance, token-exactly."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    prompts = [[(7 * g + j) % 19 + 2 for j in range(8 + 2 * g)]
+               for g in range(4)]
+
+    def run(aware):
+        ro = SeerRollout(cfg, params, n_instances=4, max_slots=1,
+                         cache_len=96, chunk_size=6, prefill_chunk=8,
+                         n_nodes=2, topology_aware=aware, policy="seer",
+                         spec_decode=False, base_seed=7, steps=steps)
+        groups = make_groups(prompts, group_size=2, max_new_tokens=16,
+                             seed=5)
+        res = ro.run(groups)
+        return res.responses(), ro.pool.stats()
+
+    resp_blind, blind = run(False)
+    resp_aware, aware = run(True)
+    assert resp_aware == resp_blind
+    assert blind["cross_node_bytes"] > 0
+    assert aware["cross_node_bytes"] < blind["cross_node_bytes"]
+
+
+# ---------------- fuzz: randomized schedules vs the sync oracle ------------------
+
+
+def _fuzz_schedule(i, cfg, params, steps):
+    """One randomized release/admit/migration schedule across 2 nodes:
+    the batched engine (with takeovers and in-place renewal randomly
+    enabled) must match the prefill_mode="sync" oracle token-exactly."""
+    rnd = random.Random(1000 + i)
+    n_groups = rnd.randint(2, 4)
+    prompts = [[(7 * g + 3 * j) % (cfg.vocab_size - 2) + 1
+                for j in range(rnd.randint(6, 26))]
+               for g in range(n_groups)]
+    max_new = rnd.randint(5, 18)
+    kw = dict(n_instances=rnd.choice([2, 3]),
+              max_slots=rnd.choice([1, 2]),
+              cache_len=64, chunk_size=rnd.randint(4, 12),
+              prefill_chunk=8, n_nodes=2,
+              topology_aware=rnd.random() < 0.5,
+              final_chunk_inplace=rnd.random() < 0.5,
+              policy=rnd.choice(["fifo", "seer"]),
+              spec_decode=False, base_seed=7, steps=steps)
+    # make_groups scales the seed by ~1e6 per request; keep the product
+    # inside int32 (the engine's seed buffer dtype)
+    seed = rnd.randint(0, 1000)
+
+    def run(mode):
+        ro = SeerRollout(cfg, params, prefill_mode=mode, **kw)
+        groups = make_groups(prompts, group_size=2,
+                             max_new_tokens=max_new, seed=seed)
+        res = ro.run(groups)
+        return res.responses(), res.stats, ro
+
+    resp_b, stats_b, ro_b = run("batched")
+    resp_s, _, _ = run("sync")
+    assert resp_b == resp_s, f"schedule {i} diverged from sync oracle"
+    return stats_b, ro_b
+
+
+def test_fuzz_schedules_token_exact_vs_sync_quick(tiny_params_cache):
+    """Tier-1 slice of the fuzz suite (3 schedules; the full >=20 run
+    is marked slow)."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    takeovers = renewals = 0
+    for i in range(3):
+        stats, ro = _fuzz_schedule(i, cfg, params, steps)
+        takeovers += sum(inst.takeover_admits for inst in ro.instances)
+        renewals += stats.inplace_renewals
+    # the schedules genuinely traverse the new paths
+    assert takeovers + renewals > 0
+
+
+@pytest.mark.slow
+def test_fuzz_schedules_token_exact_vs_sync_full(tiny_params_cache):
+    """>=20 seeded randomized schedules across 2 nodes stay token-exact
+    vs the sync oracle, covering admit-into-draining takeovers and
+    eviction-aware (final-chunk in-place) export."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    takeovers = renewals = migrations = 0
+    for i in range(3, 23):
+        stats, ro = _fuzz_schedule(i, cfg, params, steps)
+        takeovers += sum(inst.takeover_admits for inst in ro.instances)
+        renewals += stats.inplace_renewals
+        migrations += stats.migrations
+    assert takeovers > 0, "no schedule exercised admit-into-draining"
+    assert renewals > 0, "no schedule exercised in-place renewal"
+    assert migrations > 0
+
+
+# ---------------- sim <-> engine migration-overlap calibration -------------------
+
+
+def test_sim_migration_overlap_calibrated_from_engine(tiny_params_cache):
+    """The engine's measured export-overlap fraction, fed through
+    SimConfig.with_measured_overlap, must land in divided-mode sim
+    timings exactly: pool_transfer_time == (1 - f) * wire + launches
+    (and strictly below the uncalibrated overlap=0 run)."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.core.simulator import ClusterSimulator, SimConfig
+    from repro.data.workload import MOONLIGHT, make_workload
+
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    prompts = [[(3 * g + j) % 17 + 2 for j in range(6 + 2 * g)]
+               for g in range(3)]
+    ro = SeerRollout(cfg, params, n_instances=2, max_slots=2,
+                     cache_len=96, chunk_size=6, prefill_chunk=8,
+                     policy="seer", spec_decode=False, base_seed=7,
+                     admit_into_draining=False, steps=steps)
+    ro.run(make_groups(prompts, group_size=2, max_new_tokens=18, seed=5))
+    f = ro.measured_export_overlap()
+    assert 0.2 < f <= 1.0               # the overlap window really opens
+
+    spec = dataclasses.replace(MOONLIGHT, n_requests=48, n_instances=2,
+                               max_gen_length=8192, mean_gen_length=2500)
+    wl = make_workload(spec, seed=0)
+    sim_cfg = SimConfig(mode="divided", policy="seer", chunk_size=1024,
+                        max_slots=16, chips_per_instance=1,
+                        kv_capacity_tokens=60_000, nodes=2)
+    sim_cal = sim_cfg.with_measured_overlap(f)
+    assert sim_cal.migration_overlap == pytest.approx(f)
+    sim_model = ClusterSimulator(get_config("yi-6b"), spec, sim_cal)
+    res = sim_model.run(wl)
+    ex = res.extras
+    assert ex["migration_bytes"] > 0
+    wire = ex["migration_bytes"] / sim_cal.pool_net_bw \
+        + ex["migration_cross_bytes"] / sim_cal.pool_cross_bw
+    expected = (1.0 - f) * wire \
+        + ex["migration_batches"] * sim_cal.hw.launch_overhead
+    assert ex["pool_transfer_time"] == pytest.approx(expected, rel=1e-6)
+    # calibration matters: the uncalibrated (overlap=0) run stalls more
+    res0 = ClusterSimulator(
+        get_config("yi-6b"), spec,
+        dataclasses.replace(sim_cal, migration_overlap=0.0)).run(wl)
+    assert ex["pool_transfer_time"] < \
+        res0.extras["pool_transfer_time"]
