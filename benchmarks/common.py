@@ -303,8 +303,8 @@ def bench_engine_migration(n_requests: int = 12, n_instances: int = 2,
     }
 
 
-def bench_engine_topology(n_requests: int = 12, n_instances: int = 4,
-                          n_nodes: int = 2, max_slots: int = 1,
+def bench_engine_topology(n_requests: int = 16, n_instances: int = 4,
+                          n_nodes: int = 2, max_slots: int = 2,
                           prompt_len: int = 24, max_new_tokens: int = 20,
                           chunk_size: int = 6, prefill_chunk: int = 8,
                           seed: int = 5) -> dict:
@@ -316,6 +316,12 @@ def bench_engine_topology(n_requests: int = 12, n_instances: int = 4,
     and fetches, modeled pool transfer seconds, in-place final-chunk
     renewals (eviction-aware export) and token-exactness across all
     three paths.
+
+    Two slots per instance matter: with a single slot the overlapped
+    scheduling tick (admissions ride behind the in-flight step and a
+    second pass fills just-flushed slots) almost always faces exactly
+    one open instance per decision, and topology-aware vs -blind
+    placement degenerate to the same choice.
     """
     import jax
     from repro.configs import get_tiny_config
@@ -337,12 +343,18 @@ def bench_engine_topology(n_requests: int = 12, n_instances: int = 4,
     steps = StepFunctions(cfg)     # shared: compiles amortize over runs
 
     def one(prefill_mode: str, topology_aware: bool) -> dict:
+        # placement-aware export is pinned off: it moves fabric bytes
+        # to the export leg (export_placed_remote_bytes), so leaving it
+        # on would let the aware-vs-blind cross_node_bytes comparison
+        # measure relabeled traffic instead of placement-ranking wins;
+        # the feature is measured by its own test and pool stats
         ro = SeerRollout(
             cfg, params, n_instances=n_instances, max_slots=max_slots,
             cache_len=max(plens) + max_new_tokens + 32,
             chunk_size=chunk_size, prefill_chunk=prefill_chunk,
             prefill_mode=prefill_mode, n_nodes=n_nodes,
-            topology_aware=topology_aware, final_chunk_inplace=True,
+            topology_aware=topology_aware,
+            placement_aware_export=False, final_chunk_inplace=True,
             policy="seer", spec_decode=False, base_seed=7, steps=steps)
         groups = make_groups(prompts, group_size=group_size,
                              max_new_tokens=max_new_tokens, seed=seed)
@@ -405,9 +417,133 @@ def bench_engine_topology(n_requests: int = 12, n_instances: int = 4,
     }
 
 
+def bench_engine_tree(n_groups: int = 3, group_size: int = 4,
+                      n_instances: int = 1, max_slots: int = 4,
+                      prompt_len: int = 12, max_new_tokens: int = 48,
+                      prefill_chunk: int = 8, top_k: int = 3,
+                      vocab: int = 12, cst_lookup_max: int = 2,
+                      seed: int = 5) -> dict:
+    """Tree-speculation micro-benchmark on the grouped CST workload.
+
+    Groups of ``group_size`` requests share a prompt at temperature 1.0
+    over a small vocabulary with a short CST lookup, so drafting
+    contexts collide across the group and the CST sees several
+    continuations per match — moderate trunk accuracy with real
+    rank-2/3 mass, the regime where verifying the side branches pays
+    (with a long unambiguous lookup the trunk is near-perfect and
+    linear already wins; the ROADMAP notes this explicitly).  A warm-up
+    iteration populates the DGDS CST with every member's stream
+    (cross-RL-step context reuse); the acceptance profile is then reset
+    at the iteration boundary (``reset_acceptance_profile`` — stale β
+    from the cold iteration would pin γ at 0) and the timed iteration
+    measures, at the SAME MBA draft-token budget γ per request:
+
+    * ``linear``   — best-path drafts, single-chain verify (the oracle),
+    * ``tree_top1``— tree mode restricted to one path: must be
+      token-exact with ``linear`` (the spec_mode switch is free),
+    * ``tree``     — multi-path drafts merged into token trees; side
+      branches rescue steps the trunk loses, raising accepted
+      tokens/forward with no extra forwards and no extra host syncs.
+    """
+    import dataclasses as _dc
+
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.core.request import make_groups
+    from repro.core.rollout import SeerRollout
+
+    cfg = _dc.replace(get_tiny_config("granite-3-8b"), vocab_size=vocab)
+    from repro.models import init_params
+    params, _ = init_params(cfg, jax.random.PRNGKey(1))
+    prompts = [[(13 * g + j) % (cfg.vocab_size - 2) + 1
+                for j in range(prompt_len)] for g in range(n_groups)]
+
+    def one(spec_mode: str, k: int) -> dict:
+        ro = SeerRollout(
+            cfg, params, n_instances=n_instances, max_slots=max_slots,
+            cache_len=prompt_len + max_new_tokens + 32,
+            chunk_size=1 << 20, prefill_chunk=prefill_chunk,
+            policy="seer", spec_decode=True, spec_mode=spec_mode,
+            multipath_top_k=k, cst_lookup_max=cst_lookup_max,
+            base_seed=7)
+        groups = make_groups(prompts, group_size=group_size,
+                             max_new_tokens=max_new_tokens,
+                             temperature=1.0, seed=seed)
+        # warm-up: compiles step shapes AND populates the grouped CST
+        # with every member's stream (the cross-RL-step context reuse
+        # the paper's DGDS is built for); the acceptance profile resets
+        # at the iteration boundary
+        ro.run(groups)
+        ro.reset_acceptance_profile()
+        groups = make_groups(prompts, group_size=group_size,
+                             max_new_tokens=max_new_tokens,
+                             temperature=1.0, seed=seed)
+        hs0 = ro.steps.host_syncs
+        steps0 = sum(i.steps_run for i in ro.instances)
+        nodes0 = sum(i.tree_nodes for i in ro.instances)
+        bnodes0 = sum(i.tree_branch_nodes for i in ro.instances)
+        t0 = time.perf_counter()
+        res = ro.run(groups)
+        wall = time.perf_counter() - t0
+        engine_steps = sum(i.steps_run for i in ro.instances) - steps0
+        return {
+            "engine_steps": engine_steps,
+            "drafted": res.stats.drafted,
+            "accepted": res.stats.accepted,
+            "mean_acceptance": res.stats.mean_acceptance,
+            "drafted_per_step": res.stats.drafted / max(engine_steps, 1),
+            "accepted_per_step":
+                res.stats.accepted / max(engine_steps, 1),
+            "tokens_per_step": res.stats.tokens / max(engine_steps, 1),
+            "tree_nodes":
+                sum(i.tree_nodes for i in ro.instances) - nodes0,
+            "tree_branch_nodes":
+                sum(i.tree_branch_nodes for i in ro.instances) - bnodes0,
+            "host_syncs_per_step":
+                (ro.steps.host_syncs - hs0) / max(engine_steps, 1),
+            "branch_beta": list(ro.ctx.branch_beta),
+            "tokens_per_sec": res.stats.tokens / max(wall, 1e-9),
+            "wall_seconds": wall,
+            "responses": res.responses(),
+        }
+
+    linear = one("linear", 1)
+    tree1 = one("tree", 1)
+    tree = one("tree", top_k)
+    resp = {k: m.pop("responses") for k, m in
+            (("linear", linear), ("tree_top1", tree1), ("tree", tree))}
+    return {
+        "workload": {
+            "n_groups": n_groups, "group_size": group_size,
+            "n_instances": n_instances, "max_slots": max_slots,
+            "prompt_len": prompt_len, "max_new_tokens": max_new_tokens,
+            "prefill_chunk": prefill_chunk, "top_k": top_k,
+        },
+        "linear": linear,
+        "tree_top1": tree1,
+        "tree": tree,
+        "token_exact":
+            resp["linear"] == resp["tree_top1"] == resp["tree"],
+        "accepted_per_step_ratio":
+            tree["accepted_per_step"]
+            / max(linear["accepted_per_step"], 1e-9),
+    }
+
+
 _ENGINE_ROLLOUT_CACHE: Optional[dict] = None
 _ENGINE_MIGRATION_CACHE: Optional[dict] = None
 _ENGINE_TOPOLOGY_CACHE: Optional[dict] = None
+_ENGINE_TREE_CACHE: Optional[dict] = None
+
+
+def ensure_engine_tree_record() -> dict:
+    """Run the tree-speculation micro-benchmark once per process and
+    write it to BENCH_rollout.json's 'engine_tree' section."""
+    global _ENGINE_TREE_CACHE
+    if _ENGINE_TREE_CACHE is None:
+        _ENGINE_TREE_CACHE = bench_engine_tree()
+        update_bench_rollout("engine_tree", _ENGINE_TREE_CACHE)
+    return _ENGINE_TREE_CACHE
 
 
 def ensure_engine_topology_record() -> dict:

@@ -4,14 +4,21 @@ All strategies run on the same divided+context scheduling substrate so the
 comparison isolates the decoding mechanism, mirroring the paper's ablation
 (single rollout iteration).  Strategies: none, SuffixDecoding (per-request
 CST, γ=16), Seer grouped CST (adaptive MBA, γ_max=8), grouped+multipath
-(k=4), dedicated 7B draft model (γ=3), MTP (γ=1).  Paper: grouped SD wins
-throughput everywhere (up to 1.3× over the best vanilla SD); grouped CST
-beats per-request CST acceptance by ~+0.22; the draft model has the best
-acceptance but the worst throughput (draft overhead).
+(k=4), grouped+tree (multi-path drafts verified as one token tree —
+equal draft budget, branch rescues), dedicated 7B draft model (γ=3),
+MTP (γ=1).  Paper: grouped SD wins throughput everywhere (up to 1.3×
+over the best vanilla SD); grouped CST beats per-request CST acceptance
+by ~+0.22; the draft model has the best acceptance but the worst
+throughput (draft overhead).
+
+The real-engine tree-verification micro-benchmark
+(``bench_engine_tree``) also runs here so BENCH_rollout.json carries
+its ``engine_tree`` section next to the simulated strategy sweep.
 """
 from __future__ import annotations
 
-from benchmarks.common import run_sim, save_result, table, workload
+from benchmarks.common import (ensure_engine_tree_record, run_sim,
+                               save_result, table, workload)
 
 STRATEGIES = [
     ("No SD", "none"),
@@ -20,6 +27,7 @@ STRATEGIES = [
     ("MTP", "mtp"),
     ("Grouped (Seer)", "grouped"),
     ("Grouped+multipath", "grouped+multipath"),
+    ("Grouped+tree", "grouped+tree"),
 ]
 
 
@@ -51,11 +59,19 @@ def run(workloads=("moonlight", "qwen2-vl-72b", "kimi-k2"), seed=0):
                 - res["Suffix (per-req CST)"].mean_acceptance_len,
             "paper_acc_gain": 0.22,
             "paper_max_speedup_over_vanilla": 1.3,
+            "tree_over_multipath":
+                res["Grouped+tree"].tokens_per_sec
+                / res["Grouped+multipath"].tokens_per_sec,
         }
     txt = table(rows, ["workload", "strategy", "norm_thpt", "acc_len"],
                 "Fig. 11 — SD strategies (throughput + acceptance)")
     save_result("sd_strategies", {"rows": rows, "record": record,
                                   "table": txt})
+    try:
+        ensure_engine_tree_record()
+    except Exception as e:  # noqa: BLE001 - report-and-continue CLI
+        print(f"[sd_strategies] engine tree bench failed: {e}",
+              flush=True)
     return record
 
 

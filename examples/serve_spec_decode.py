@@ -23,10 +23,12 @@ from repro.core.rollout import SeerRollout
 from repro.models import init_params
 
 
-def serve(cfg, params, groups_fn, *, spec: bool, top_k: int = 1):
+def serve(cfg, params, groups_fn, *, spec: bool, top_k: int = 1,
+          spec_mode: str = "linear"):
     rollout = SeerRollout(cfg, params, n_instances=2, max_slots=4,
                           cache_len=512, chunk_size=24, policy="seer",
-                          spec_decode=spec, multipath_top_k=top_k)
+                          spec_decode=spec, multipath_top_k=top_k,
+                          spec_mode=spec_mode)
     t0 = time.monotonic()
     res = rollout.run(groups_fn())
     wall = time.monotonic() - t0
@@ -40,6 +42,11 @@ def main(argv=None):
     ap.add_argument("--group-size", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=48)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--spec-mode", default="linear",
+                    choices=["linear", "tree"],
+                    help="'tree' verifies multi-path CST drafts as one "
+                         "token tree per step (pair with --top-k > 1)")
+    ap.add_argument("--top-k", type=int, default=1)
     args = ap.parse_args(argv)
 
     cfg = get_tiny_config(args.arch)
@@ -55,7 +62,8 @@ def main(argv=None):
                            stop_token=None, seed=42)
 
     plain, t_plain = serve(cfg, params, groups_fn, spec=False)
-    spec, t_spec = serve(cfg, params, groups_fn, spec=True)
+    spec, t_spec = serve(cfg, params, groups_fn, spec=True,
+                         top_k=args.top_k, spec_mode=args.spec_mode)
 
     # losslessness: identical sampling seeds => identical outputs, even at
     # temperature (rejection-sampling verify preserves the distribution)

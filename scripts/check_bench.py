@@ -28,6 +28,14 @@ topology-aware placement must move strictly fewer fabric bytes than
 topology-blind placement (and no more than the committed baseline,
 with slack).
 
+And the tree-speculation micro-benchmark (``engine_tree`` section):
+tree mode with a single path must run the exact same steps and commit
+the exact same tokens as the linear verify path; on the grouped CST
+workload, multi-path token trees must accept strictly more tokens per
+forward than linear at the same per-request draft budget, with
+branching nodes actually verified, <= 1 host sync per step, and the
+uplift ratio no worse than the committed baseline (with slack).
+
 Exit status 0 iff every check passes — invoked from the verify skill so
 perf regressions fail tier-1 review, not just eyeballs.
 
@@ -72,6 +80,10 @@ def main(argv=None) -> int:
     ap.add_argument("--cross-bytes-slack", type=float, default=1.25,
                     help="fresh topology-aware cross-node bytes must be "
                          "<= this multiple of the committed baseline")
+    ap.add_argument("--tree-ratio-slack", type=float, default=0.9,
+                    help="fresh tree accepted-per-step ratio (tree vs "
+                         "linear) must be >= this fraction of the "
+                         "committed baseline's ratio")
     ap.add_argument("--mig-stall-ratio", type=float, default=1.0,
                     help="fresh batched migration stall seconds must be "
                          "<= this fraction of the same run's per-slot "
@@ -81,20 +93,24 @@ def main(argv=None) -> int:
     base = _section(args.baseline, "engine")
     base_mig = _section(args.baseline, "engine_migration")
     base_topo = _section(args.baseline, "engine_topology")
+    base_tree = _section(args.baseline, "engine_tree")
     if args.fresh:
         fresh = _section(args.fresh, "engine")
         fresh_mig = _section(args.fresh, "engine_migration")
         fresh_topo = _section(args.fresh, "engine_topology")
+        fresh_tree = _section(args.fresh, "engine_tree")
     else:
         # the benchmarks package lives at the repo root, one level up
         sys.path.insert(0, os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
         from benchmarks.common import (bench_engine_migration,
                                        bench_engine_rollout,
-                                       bench_engine_topology)
+                                       bench_engine_topology,
+                                       bench_engine_tree)
         fresh = bench_engine_rollout()
         fresh_mig = bench_engine_migration()
         fresh_topo = bench_engine_topology()
+        fresh_tree = bench_engine_tree()
 
     if fresh.get("workload") != base.get("workload"):
         print("[check_bench] FAIL workload mismatch: fresh "
@@ -125,6 +141,7 @@ def main(argv=None) -> int:
     ]
     checks += _migration_checks(fresh_mig, base_mig, args)
     checks += _topology_checks(fresh_topo, base_topo, args)
+    checks += _tree_checks(fresh_tree, base_tree, args)
     ok = True
     for name, passed, detail in checks:
         status = "ok  " if passed else "FAIL"
@@ -203,6 +220,46 @@ def _topology_checks(fresh: dict, base: dict, args) -> list:
          <= args.cross_bytes_slack * ba["cross_node_bytes"],
          f"aware {fa['cross_node_bytes']} <= {args.cross_bytes_slack} * "
          f"baseline {ba['cross_node_bytes']}"),
+    ]
+
+
+def _tree_checks(fresh: dict, base: dict, args) -> list:
+    """Gates on the tree-speculation micro-benchmark.
+
+    The tree-vs-linear comparisons run within the same fresh run
+    (identical box, identical MBA draft budget per request); the
+    committed baseline bounds the accepted-per-step uplift across PRs
+    (the rollout is deterministic, so a regression shows up as a ratio
+    drop, not noise)."""
+    if fresh.get("workload") != base.get("workload"):
+        return [("tree_workload", False,
+                 f"fresh {fresh.get('workload')} vs baseline "
+                 f"{base.get('workload')} — numbers are not comparable")]
+    fl, f1, ft = fresh["linear"], fresh["tree_top1"], fresh["tree"]
+    return [
+        ("tree_token_exact", fresh.get("token_exact") is True,
+         "linear vs tree_top1 vs tree token-exact: "
+         f"{fresh.get('token_exact')}"),
+        ("tree_top1_identical_steps",
+         f1["engine_steps"] == fl["engine_steps"]
+         and f1["accepted"] == fl["accepted"],
+         f"tree_top1 ({f1['engine_steps']} steps, {f1['accepted']} acc)"
+         f" == linear ({fl['engine_steps']}, {fl['accepted']})"),
+        ("tree_accepts_more_per_step",
+         ft["accepted_per_step"] > fl["accepted_per_step"],
+         f"tree {ft['accepted_per_step']:.3f} > linear "
+         f"{fl['accepted_per_step']:.3f} (equal per-request budget)"),
+        ("tree_branches_verified", ft["tree_branch_nodes"] > 0,
+         f"branch nodes {ft['tree_branch_nodes']} > 0"),
+        ("tree_host_syncs_per_step",
+         ft.get("host_syncs_per_step", float("inf")) <= 1.0 + 1e-9,
+         f"{ft.get('host_syncs_per_step')} <= 1"),
+        ("tree_ratio_vs_baseline",
+         fresh["accepted_per_step_ratio"]
+         >= args.tree_ratio_slack * base["accepted_per_step_ratio"],
+         f"{fresh['accepted_per_step_ratio']:.3f} >= "
+         f"{args.tree_ratio_slack} * "
+         f"{base['accepted_per_step_ratio']:.3f}"),
     ]
 
 

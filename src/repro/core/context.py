@@ -31,7 +31,8 @@ class ContextManager:
     """Maintains L̂_g per group + online acceptance statistics for SD."""
 
     def __init__(self, max_gen_length: int, *, beta_positions: int = 32,
-                 beta_ewma: float = 0.05, beta_init: float = 0.6):
+                 beta_ewma: float = 0.05, beta_init: float = 0.6,
+                 branch_ranks: int = 4, branch_init: float = 0.3):
         self.max_gen_length = max_gen_length
         self._groups: Dict[str, GroupContext] = {}
         # β[i]: probability that draft position i is accepted (1-indexed in
@@ -42,6 +43,18 @@ class ContextManager:
         # per-position trial/accept counts for reporting
         self._trials = [0] * beta_positions
         self._accepts = [0] * beta_positions
+        # per-branch β for tree speculation: branch_beta[r] (r >= 1) is
+        # the EWMA probability that a verify step's accepted chain left
+        # the rank-0 trunk and followed the rank-r candidate path
+        # instead (a "rescue").  branch_beta[0] is the trunk's share.
+        # These weights are what the tree-mode MBA controller trades a
+        # deeper trunk against a second branch with: a rank with a
+        # near-zero rescue rate never earns draft tokens, so low branch
+        # diversity degrades tree mode gracefully back to linear.
+        self.branch_beta = [1.0] + \
+            [branch_init * (0.5 ** (r - 1)) for r in range(1, branch_ranks)]
+        self._branch_trials = [0] * branch_ranks
+        self._branch_wins = [0] * branch_ranks
 
     # -- group length context --------------------------------------------------
 
@@ -93,16 +106,58 @@ class ContextManager:
         for i in range(1, len(self.beta)):
             self.beta[i] = min(self.beta[i], self.beta[i - 1])
 
+    def record_tree_verification(self, winner_rank: Optional[int],
+                                 n_drafted: int, n_accepted: int,
+                                 n_ranks: int = 0) -> None:
+        """After a *tree* verify step, update per-branch β estimates.
+
+        ``winner_rank`` is the candidate-path rank the accepted chain
+        followed (:meth:`~repro.engine.token_tree.TokenTree.winner_rank`),
+        or None when nothing was accepted (counted as a trunk trial —
+        a miss is a failure of the trunk, not of a side branch).
+        ``n_ranks`` is how many candidate paths the tree actually
+        offered: only offered ranks update — a branch the budget never
+        funded keeps its optimistic prior, which is the controller's
+        exploration budget (otherwise unfunded branches would decay to
+        zero without ever being tried).  The per-position β update
+        reuses :meth:`record_verification` so the depth profile stays
+        shared between linear and tree mode.
+        """
+        if n_drafted > 0:
+            self.record_verification(n_drafted, n_accepted)
+        r_win = 0 if winner_rank is None else int(winner_rank)
+        w = self._beta_ewma
+        updated = False
+        for r in range(1, min(max(n_ranks, r_win + 1),
+                              len(self.branch_beta))):
+            hit = 1.0 if r == r_win else 0.0
+            self.branch_beta[r] = (1 - w) * self.branch_beta[r] + w * hit
+            self._branch_trials[r] += 1
+            self._branch_wins[r] += int(hit)
+            updated = True
+        if updated:
+            # renormalize the trunk share only against ranks that have
+            # actually been measured — a single-path verify must not
+            # debit the trunk for untouched optimistic priors
+            self.branch_beta[0] = max(
+                0.0, 1.0 - sum(self.branch_beta[1:]))
+
     @property
     def alpha(self) -> float:
         """Mean per-position acceptance rate (the paper's α = E[β])."""
         return self.beta[0]
 
     def beta_padded(self, n: int) -> List[float]:
-        """β[1..n] padded with geometric decay, plus a terminal 0."""
+        """β[1..n] padded with geometric decay, plus a terminal 0.
+
+        Returns ``n + 1`` entries: positions 1..n then an appended 0.0,
+        so MBA's marginal-benefit loop reads exactly 0 — never a decayed
+        tail — when it probes one position past γ_max.
+        """
         out = list(self.beta[:n])
         while len(out) < n:
             out.append(out[-1] * 0.85 if out else 0.5)
+        out.append(0.0)
         return out
 
     # -- reporting ---------------------------------------------------------------
@@ -114,4 +169,5 @@ class ContextManager:
             "groups_with_estimate": len(known),
             "alpha": self.alpha,
             "beta": list(self.beta[:8]),
+            "branch_beta": list(self.branch_beta),
         }

@@ -155,6 +155,30 @@ class SuffixTree:
             beams = nxt[:top_k]
         return [DraftPath(t, s) for s, t, _ in beams] or [DraftPath([], 0.0)]
 
+    def speculate_paths(self, pattern: Sequence[int],
+                        path_budgets: Sequence[int], *,
+                        lookup_max: int = 8, lookup_min: int = 1,
+                        min_score: float = 0.0) -> List[DraftPath]:
+        """Budgeted multi-path drafts for tree speculation.
+
+        ``path_budgets`` are per-rank depth budgets (trunk first) from
+        the tree-mode MBA controller
+        (:func:`repro.core.mba.mba_tree_paths`): the beam search runs at
+        width ``len(path_budgets)`` to the deepest budget, then rank r's
+        path is trimmed to its own budget — the trunk keeps its full
+        depth while side branches carry only the tokens their rescue
+        rate earned.  A single budget degenerates to the linear draft.
+        """
+        if not path_budgets:
+            return [DraftPath([], 0.0)]
+        paths = self.speculate_multipath(
+            pattern, max(path_budgets), top_k=len(path_budgets),
+            lookup_max=lookup_max, lookup_min=lookup_min,
+            min_score=min_score)
+        out = [DraftPath(p.tokens[:b], p.score)
+               for p, b in zip(paths, path_budgets)]
+        return [p for p in out if p.tokens] or [DraftPath([], 0.0)]
+
 
 class GroupCST:
     """Per-group CST aggregating all of the group's requests (+ the prompt)."""

@@ -31,6 +31,11 @@ class SpeculationArgs:
     pattern_lookup_min: int = 1
     top_k: int = 1
     min_score: float = 0.0
+    # tree speculation: per-rank depth budgets (trunk first) from the
+    # tree-mode MBA controller.  When set they override
+    # max_spec_tokens/top_k and the client drafts via speculate_paths —
+    # the caller merges the returned paths into a TokenTree.
+    path_budgets: Optional[Tuple[int, ...]] = None
 
 
 class DraftServer:
@@ -138,7 +143,12 @@ class DraftClient:
             if cst is None or a.max_spec_tokens <= 0:
                 out.append([DraftPath([], 0.0)])
                 continue
-            if a.top_k > 1:
+            if a.path_budgets is not None:
+                paths = cst.tree.speculate_paths(
+                    pat, a.path_budgets,
+                    lookup_max=a.pattern_lookup_max,
+                    lookup_min=a.pattern_lookup_min, min_score=a.min_score)
+            elif a.top_k > 1:
                 paths = cst.tree.speculate_multipath(
                     pat, a.max_spec_tokens, a.top_k,
                     lookup_max=a.pattern_lookup_max,

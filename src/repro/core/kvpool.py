@@ -109,6 +109,11 @@ class GlobalKVPool:
         # topology-aware scheduler minimises
         self.cross_node_bytes = 0
         self.cross_node_fetches = 0
+        # placement-aware export: blobs homed on a node other than the
+        # exporter (the predicted resume node), paying the fabric leg
+        # at export time instead of at fetch time
+        self.export_placed_remote = 0
+        self.export_placed_remote_bytes = 0
 
     # -- per-node accounting ---------------------------------------------------
 
@@ -130,33 +135,57 @@ class GlobalKVPool:
 
     # -- writes ----------------------------------------------------------------
 
-    def put(self, blob: KVBlob, node: str = "n0") -> None:
-        self._insert(blob, node)
-        self._evict(node)
+    def put(self, blob: KVBlob, node: str = "n0",
+            placed_node: Optional[str] = None) -> None:
+        """Insert one exported blob.  ``node`` is the exporting node
+        (whose device->host DMA leg is always charged);
+        ``placed_node``, when given, homes the blob elsewhere —
+        placement-aware export pays the fabric hop now, at export time,
+        so the expected resume fetch rides the cheap same-node path."""
+        self._insert(blob, node, placed_node)
+        self._evict(placed_node or node)
 
-    def put_batch(self, blobs: Iterable[KVBlob], node: str = "n0") -> None:
+    def put_batch(self, blobs: Iterable[KVBlob], node: str = "n0",
+                  placements: Optional[Dict[str, str]] = None) -> None:
         """Insert several blobs (one instance's batched export), then
         run eviction once over the whole batch — a mid-batch eviction
         pass could demote an earlier blob of the same batch before its
         peers even landed, despite it being the newest data in the
-        pool."""
+        pool.  ``placements`` (req_id -> node) optionally homes each
+        blob on the node its chunk is expected to resume on."""
+        placements = placements or {}
+        targets = {node}
         for blob in blobs:
-            self._insert(blob, node)
-        self._evict(node)
+            placed = placements.get(blob.req_id)
+            self._insert(blob, node, placed)
+            targets.add(placed or node)
+        for n in targets:
+            self._evict(n)
 
-    def _insert(self, blob: KVBlob, node: str) -> None:
+    def _insert(self, blob: KVBlob, node: str,
+                placed_node: Optional[str] = None) -> None:
         old = self._entries.pop(blob.req_id, None)
         if old is not None:
             self._deaccount(old)
-        entry = PoolEntry(blob, "dram", node, blob.nbytes)
+        home = placed_node if placed_node is not None else node
+        entry = PoolEntry(blob, "dram", home, blob.nbytes)
         self._entries[blob.req_id] = entry
-        self._node_dram[node] = self._node_dram.get(node, 0) + blob.nbytes
+        self._node_dram[home] = self._node_dram.get(home, 0) + blob.nbytes
         self.puts += 1
         # the export itself moves bytes (device->host): charge it here,
         # not only at get time — puts were free while gets paid, so
         # migration cost was undercounted in engine stats and the
         # simulator
-        self.transfer_seconds += self.costs.put_seconds(blob.nbytes)
+        t = self.costs.put_seconds(blob.nbytes)
+        if home != node:
+            # placement-aware export: the blob crosses the fabric to its
+            # predicted resume node at export time (batched, inside the
+            # overlap window) instead of at fetch time on the admission
+            # path
+            t += blob.nbytes / self.costs.net_bw
+            self.export_placed_remote += 1
+            self.export_placed_remote_bytes += blob.nbytes
+        self.transfer_seconds += t
         self.bytes_moved += blob.nbytes
         self.bytes_put += blob.nbytes
 
@@ -247,5 +276,7 @@ class GlobalKVPool:
             "bytes_fetched_gb": self.bytes_fetched / (1 << 30),
             "cross_node_bytes": self.cross_node_bytes,
             "cross_node_fetches": self.cross_node_fetches,
+            "export_placed_remote": self.export_placed_remote,
+            "export_placed_remote_bytes": self.export_placed_remote_bytes,
             "transfer_seconds": self.transfer_seconds,
         }

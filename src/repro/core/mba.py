@@ -32,6 +32,67 @@ from typing import Sequence, Tuple
 from repro.core.sdmodel import SDThroughputModel
 
 
+def mba_tree_paths(gamma_tokens: int, beta: Sequence[float],
+                   branch_beta: Sequence[float], max_paths: int,
+                   gamma_max: int) -> Tuple[int, ...]:
+    """Split one request's draft-token budget across tree paths.
+
+    Tree-mode extension of Algorithm 1's marginal-benefit principle:
+    the per-request budget ``gamma_tokens`` (the γ the linear policy
+    would spend on one chain) is allocated token-by-token to whichever
+    candidate path has the larger marginal expected-acceptance gain.
+    Extending path ``r`` from depth ``d`` to ``d+1`` is worth
+    ``w_r * beta[d]`` expected tokens, where ``w_r`` is the probability
+    the accepted chain follows branch ``r`` — 1.0 for the trunk by
+    construction of the per-branch β estimates
+    (:meth:`~repro.core.context.ContextManager.record_tree_verification`
+    normalises rescue ranks against the trunk), and the online rescue
+    rate ``branch_beta[r]`` for side branches.  A branch whose rescue
+    rate decays to ~0 never outbids the trunk's next position, so low
+    branch diversity collapses the allocation back to one chain —
+    exactly the regime where linear speculation already wins.
+
+    The trunk's marginal at depth d is the unconditional β[d] (all of
+    positions 1..d+1 must accept).  A side branch's marginal is
+    conditional: GIVEN the chain follows branch r (probability w_r),
+    its depth-d continuation tracks the normalised profile β[d]/β[1] —
+    so a branch's first token is worth w_r outright, and the controller
+    naturally moves the *tail* of a long trunk onto a second branch
+    once β has decayed below the rescue rate (deep trunk positions are
+    compound bets; a fresh branch is not).
+
+    Paths open in rank order (rank r can only receive tokens once rank
+    r-1 holds at least one), depths are capped at ``gamma_max``, and
+    the trunk always gets the first token.  Returns per-path depth
+    budgets, trunk first, side branches only when funded.
+    """
+    if gamma_tokens <= 0 or max_paths <= 0:
+        return ()
+    beta = list(beta) + [0.0] * max(0, gamma_max + 1 - len(beta))
+    b0 = max(beta[0], 1e-6)
+    weights = [1.0] + [
+        (branch_beta[r] if r < len(branch_beta) else 0.0)
+        for r in range(1, max_paths)]
+    depths = [0] * max_paths
+    depths[0] = 1
+    for _ in range(min(gamma_tokens, max_paths * gamma_max) - 1):
+        best_r, best_gain = -1, 0.0
+        for r in range(max_paths):
+            if depths[r] >= gamma_max:
+                continue
+            if r > 0 and depths[r - 1] == 0:
+                break                      # ranks open in order
+            d = min(depths[r], gamma_max)
+            gain = beta[d] if r == 0 else \
+                weights[r] * beta[d] / b0
+            if gain > best_gain:
+                best_r, best_gain = r, gain
+        if best_r < 0:
+            break
+        depths[best_r] += 1
+    return tuple(d for d in depths if d > 0)
+
+
 @dataclass(frozen=True)
 class MBAConfig:
     gamma_max: int = 8

@@ -10,7 +10,12 @@ synchronous rollout iteration:
 2. every engine tick, compute MBA draft budgets (γ_h, γ_l) from current
    high/low-priority batch sizes and online β estimates, pull drafts for
    each active request from the instance's DGDS client, and run the
-   fused decode/verify step;
+   fused decode/verify step; with ``spec_mode="tree"`` each request's
+   budget γ is further split across candidate paths by marginal benefit
+   (``mba_tree_paths``: trunk depth vs the online per-branch rescue
+   rates in ``ContextManager.branch_beta``), the paths are merged into
+   one token tree and verified in a single fused tree step at the same
+   draft-token budget;
 3. stream new tokens to the DGDS master (``update_cst``), update
    acceptance statistics, and when a request's *chunk* budget is exhausted
    release its slot, export the KV blob to the pool and requeue it.
@@ -30,11 +35,12 @@ from repro.configs.base import ModelConfig
 from repro.core.context import ContextManager
 from repro.core.dgds import DraftClient, DraftServer, SpeculationArgs
 from repro.core.kvpool import GlobalKVPool
-from repro.core.mba import MBAConfig, mba_speculation
+from repro.core.mba import MBAConfig, mba_speculation, mba_tree_paths
 from repro.core.request import Group, ReqState, RolloutRequest
 from repro.core.scheduler import InstanceView, Scheduler
 from repro.core.sdmodel import ForwardCostModel, SDThroughputModel, TPU_V5E
 from repro.engine.engine import EngineSeq, Instance, StepFunctions
+from repro.engine.token_tree import TokenTree, build_token_tree
 
 
 @dataclass
@@ -81,12 +87,15 @@ class SeerRollout:
                  prefill_budget: Optional[int] = None,
                  migration_mode: Optional[str] = None,
                  n_nodes: int = 1, topology_aware: bool = True,
+                 placement_aware_export: bool = True,
                  final_chunk_inplace: bool = False,
                  admit_into_draining: Optional[bool] = None,
                  policy: str = "seer", spec_decode: bool = True,
+                 spec_mode: str = "linear",
                  multipath_top_k: int = 1,
                  gamma_max: int = 8, lam: float = 2.0,
                  fetch_interval: int = 1, cst_depth: int = 12,
+                 cst_lookup_max: int = 8,
                  pool_dram_gb: float = 4.0, base_seed: int = 0,
                  oracle_lengths: Optional[Dict[str, int]] = None,
                  steps: Optional[StepFunctions] = None):
@@ -94,12 +103,34 @@ class SeerRollout:
         self.chunk_size = chunk_size
         self.policy = policy
         self.spec_decode = spec_decode
+        if spec_mode not in ("linear", "tree"):
+            raise ValueError(f"spec_mode={spec_mode!r}")
+        if spec_mode == "tree" and prefill_mode != "batched":
+            # match Instance: trees only exist on the fused device
+            # path; silently downgrading would make a tree-vs-linear
+            # comparison under the sync oracle measure nothing
+            raise ValueError("spec_mode='tree' requires "
+                             "prefill_mode='batched'")
+        # "tree": multi-path CST drafts are merged into token trees and
+        # verified in one fused step ("linear" stays the oracle).
+        # Branching within a step needs attention-only layers — SSM and
+        # hybrid scans are linear in the step's columns — so those
+        # archs degrade to single-path trees (same drafts as linear).
+        self.spec_mode = spec_mode
+        self.tree_branching = spec_mode == "tree" and \
+            cfg.arch_type not in ("ssm", "hybrid")
         self.multipath_top_k = multipath_top_k
         self.mba_cfg = MBAConfig(gamma_max=min(gamma_max, 8), lam=lam)
         self.oracle_lengths = oracle_lengths
         # placements ranked by modeled blob-transfer cost (prefer the
         # node already holding the KV blob) vs pure load balance
         self.topology_aware = topology_aware
+        # placement-aware export: released blobs land on the node the
+        # scheduler expects to resume the chunk on, not the releasing
+        # node (pays the fabric leg at export, inside the overlap
+        # window, instead of at fetch time on the admission path)
+        self.placement_aware_export = placement_aware_export \
+            and topology_aware
         # eviction-aware export: a request whose remaining budget fits
         # one chunk renews in place instead of round-tripping the pool.
         # Opt-in: renewal is SFS-biased (near-finished requests keep
@@ -116,7 +147,9 @@ class SeerRollout:
                      cache_len=cache_len, prefill_chunk=prefill_chunk,
                      prefill_mode=prefill_mode,
                      prefill_budget=prefill_budget,
-                     migration_mode=migration_mode, cost_model=fwd,
+                     migration_mode=migration_mode,
+                     spec_mode=spec_mode,
+                     cost_model=fwd,
                      gamma_max=gamma_max, instance_id=f"inst{i}",
                      node=f"n{i * n_nodes // n_instances}",
                      admit_into_draining=admit_into_draining,
@@ -130,6 +163,13 @@ class SeerRollout:
                                           fetch_interval=fetch_interval)
             for inst in self.instances
         }
+        # longest CST suffix match used for drafting.  Short lookups
+        # trade per-request precision for cross-request sharing: more
+        # contexts collide across the group, so the CST sees several
+        # continuations per match — the branch diversity tree mode
+        # feeds on (and the ambiguity linear mode suffers under)
+        self.cst_lookup_max = cst_lookup_max
+        self.cache_len = cache_len
         self.ctx = ContextManager(max_gen_length=cache_len)
         self.sd_model = SDThroughputModel(fwd)
         # req_id -> (instance, slot, chunk_tokens_left)
@@ -155,6 +195,16 @@ class SeerRollout:
         """Modeled seconds to bring ``r``'s KV blob to ``node`` — the
         scheduler's topology-ranking oracle (0 for fresh requests)."""
         return self.pool.peek_fetch_cost(r.req_id, node)
+
+    def reset_acceptance_profile(self) -> None:
+        """Start a fresh acceptance profile (β, per-branch β) for a new
+        RL iteration while the DGDS CSTs persist — the paper's online
+        context reuse across steps keeps drafting context, but the
+        policy model has moved, so stale acceptance statistics would
+        mis-drive MBA (a collapsed β from an earlier iteration can pin
+        γ at 0 and never recover: with no drafts there are no trials to
+        raise it)."""
+        self.ctx = ContextManager(max_gen_length=self.cache_len)
 
     def measured_export_overlap(self) -> float:
         """Fraction of exported slots whose gather was dispatched while
@@ -232,11 +282,27 @@ class SeerRollout:
     def _flush_releases(self, inst: Instance, sched: Scheduler) -> int:
         """Export the instance's draining slots (one batched gather),
         put the blobs in the pool and hand the requests back to the
-        scheduler.  Returns the number of slots freed."""
+        scheduler.  Returns the number of slots freed.
+
+        With placement-aware export each blob is homed on the node the
+        scheduler expects to resume the chunk on
+        (:meth:`~repro.core.scheduler.Scheduler.predict_resume_node`):
+        the fabric leg is paid at export time — inside the batched
+        overlap window — instead of stalling the admission that fetches
+        it (``export_placed_remote`` in pool stats counts the moves)."""
         blobs = inst.flush_exports()
         if not blobs:
             return 0
-        self.pool.put_batch(list(blobs.values()), node=inst.node)
+        placements = None
+        if self.placement_aware_export:
+            views = self._views()
+            placements = {}
+            for req_id in blobs:
+                node = sched.predict_resume_node(
+                    views, self._reqs[req_id], inst.node)
+                placements[req_id] = node or inst.node
+        self.pool.put_batch(list(blobs.values()), node=inst.node,
+                            placements=placements)
         for req_id in blobs:
             sched.requeue(self._reqs[req_id])
         return len(blobs)
@@ -259,11 +325,15 @@ class SeerRollout:
         # inflate mean_ctx and suppress MBA draft budgets mid-admission
         mean_ctx = sum(min(inst.slots[i].next_pos, inst.cache_len)
                        for i in active) / max(len(active), 1)
+        # beta_padded(γ_max) yields positions 1..γ_max plus the terminal
+        # 0 the MBA marginal-benefit loop reads at γ_max+1
+        beta = self.ctx.beta_padded(self.mba_cfg.gamma_max)
         gamma_h, gamma_l = mba_speculation(
-            b_h, b_l, self.ctx.beta_padded(self.mba_cfg.gamma_max + 1),
-            self.sd_model, self.ctx.alpha, mean_ctx, self.mba_cfg)
+            b_h, b_l, beta, self.sd_model, self.ctx.alpha, mean_ctx,
+            self.mba_cfg)
         if gamma_h == 0 and gamma_l == 0:
             return {}
+        use_tree = self.spec_mode == "tree"
         gids, pats, args, order = [], [], [], []
         for i in active:
             seq = inst.slots[i]
@@ -274,8 +344,23 @@ class SeerRollout:
             gids.append(r.group_id)
             # context = everything up to and including the pending token
             pats.append((seq.prompt + seq.generated)[-16:])
-            args.append(SpeculationArgs(max_spec_tokens=g,
-                                        top_k=self.multipath_top_k))
+            if use_tree:
+                # split the SAME per-request token budget γ across tree
+                # paths by marginal benefit (trunk depth vs a branch's
+                # online rescue rate); non-branching archs get the whole
+                # budget as one chain
+                budgets = mba_tree_paths(
+                    g, beta, self.ctx.branch_beta,
+                    self.multipath_top_k if self.tree_branching else 1,
+                    self.mba_cfg.gamma_max)
+                args.append(SpeculationArgs(
+                    max_spec_tokens=max(budgets, default=0),
+                    top_k=max(len(budgets), 1), path_budgets=budgets,
+                    pattern_lookup_max=self.cst_lookup_max))
+            else:
+                args.append(SpeculationArgs(
+                    max_spec_tokens=g, top_k=self.multipath_top_k,
+                    pattern_lookup_max=self.cst_lookup_max))
             order.append(i)
         if not gids:
             return {}
@@ -283,9 +368,16 @@ class SeerRollout:
             gids, pats, args)
         drafts = {}
         for i, ps in zip(order, paths):
-            best = max(ps, key=lambda p: p.score)
-            if best.tokens:
-                drafts[i] = best.tokens
+            if use_tree:
+                tree = build_token_tree(
+                    [p.tokens for p in ps if p.tokens],
+                    max_nodes=self.mba_cfg.gamma_max)
+                if len(tree):
+                    drafts[i] = tree
+            else:
+                best = max(ps, key=lambda p: p.score)
+                if best.tokens:
+                    drafts[i] = best.tokens
         return drafts
 
     # -- the main loop ---------------------------------------------------------------
@@ -304,48 +396,75 @@ class SeerRollout:
             r.t_submitted = t0
 
         while not sched.all_finished:
-            # 1) fill free capacity — one batched scheduling cycle;
-            # same-instance arrivals share one batched KV import
-            # (flushed by the instance at its next dispatch)
-            for r, iid in sched.plan_admissions(
-                    [v for v in self._views() if v.free_slots > 0]):
-                self._admit(sched, r, iid, stats)
-
-            # 2) step every instance — dispatch all device work first
-            # (JAX async dispatch), then commit results, so instance
-            # i+1's host-side work (CST drafting via batch_speculate,
-            # buffer packing) overlaps instance i's device compute.
-            # Drafts for this tick therefore see the CST as of the
-            # previous tick, which cannot change sampled outputs (the
-            # losslessness guarantee: drafts affect only acceptance).
-            # Right after each dispatch, flush the instance's deferred
-            # KV exports (chunks released last tick): the batched
-            # gather is enqueued behind the step it overlaps, the host
-            # moves on, and the freed slots admit next cycle.
+            # 1) step every instance — dispatch all device work first
+            # (JAX async dispatch); everything below until the commits
+            # runs in the overlap window behind it.  Drafts for this
+            # tick see the CST as of the previous tick, which cannot
+            # change sampled outputs (the losslessness guarantee:
+            # drafts affect only acceptance).
             any_active = False
-            freed = 0
             tickets = []
             for inst in self.instances:
                 ticket, drafts = None, {}
                 if inst.active_slots() or inst.pending_takeovers():
                     drafts = self._collect_drafts(inst)
                     ticket = inst.dispatch_step(drafts)
-                freed += self._flush_releases(inst, sched)
                 if ticket is None:
                     continue
                 any_active = True
                 tickets.append((inst, drafts, ticket))
+
+            # 2) fill free capacity while the steps are in flight — one
+            # batched scheduling cycle whose host work (scheduler picks,
+            # pool fetches, queue appends) overlaps device compute.
+            # Admissions run BEFORE the export flush so a slot released
+            # last tick is still draining here: taking it over enqueues
+            # its snapshot gather behind the in-flight step (takeover-
+            # aware overlap) instead of stalling the next dispatch.
+            # Same-instance arrivals share one batched KV import
+            # (flushed by the instance at its next dispatch).
+            admitted = 0
+            for r, iid in sched.plan_admissions(
+                    [v for v in self._views() if v.free_slots > 0]):
+                self._admit(sched, r, iid, stats)
+                admitted += 1
+
+            # 3) flush the deferred KV exports (chunks released last
+            # tick): the batched gather is enqueued behind the step it
+            # overlaps and the host moves on.  A second scheduling pass
+            # fills the just-freed slots in the same window — without
+            # it every freed slot would sit out a tick and admissions
+            # would mostly see a single candidate instance, starving
+            # the topology ranking of real placement choices.
+            freed = 0
+            for inst in self.instances:
+                freed += self._flush_releases(inst, sched)
+            if freed:
+                for r, iid in sched.plan_admissions(
+                        [v for v in self._views() if v.free_slots > 0]):
+                    self._admit(sched, r, iid, stats)
+                    admitted += 1
+
+            # 4) commit results and run chunk/finish bookkeeping
             for inst, drafts, ticket in tickets:
                 out = inst.commit_step(ticket)
                 stats.steps += 1
                 for slot, (new_toks, _lps, n_acc) in out.items():
                     seq = inst.slots[slot]
                     r = self._reqs[seq.req_id]
-                    n_draft = len(drafts.get(slot, []))
+                    d = drafts.get(slot, [])
+                    n_draft = len(d)
                     stats.tokens += len(new_toks)
                     stats.drafted += n_draft
                     stats.accepted += n_acc
-                    if n_draft:
+                    if n_draft and isinstance(d, TokenTree):
+                        # per-branch β: attribute the accepted chain to
+                        # the beam rank that drafted it (trunk misses
+                        # count against the trunk)
+                        self.ctx.record_tree_verification(
+                            d.winner_rank(new_toks[:n_acc]),
+                            d.max_depth, n_acc, n_ranks=len(d.paths))
+                    elif n_draft:
                         self.ctx.record_verification(n_draft, n_acc)
                     if new_toks:
                         # stable speculator id: python str hash is
@@ -386,9 +505,10 @@ class SeerRollout:
                             self._release(r, stats, export=True)
                             sched.requeue(r)
 
-            if not any_active and not freed and not sched.all_finished:
-                # nothing running, nothing freed and nothing placeable
-                # -> capacity deadlock
+            if not any_active and not freed and not admitted \
+                    and not sched.all_finished:
+                # nothing running, nothing freed, nothing admitted and
+                # nothing placeable -> capacity deadlock
                 raise RuntimeError(
                     "rollout stalled: no instance can hold the next chunk")
             if progress_every and stats.steps % progress_every == 0:

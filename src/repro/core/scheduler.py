@@ -253,6 +253,40 @@ class Scheduler:
                 best, best_key = iv.instance_id, key
         return best
 
+    def predict_resume_node(self, instances: Sequence[InstanceView],
+                            r: RolloutRequest,
+                            home_node: str) -> Optional[str]:
+        """Node the scheduler expects ``r``'s next chunk to resume on —
+        the placement-aware *export* oracle.
+
+        Mirrors :meth:`select_instance`'s ranking with the cost the
+        scheduler WILL see if the blob stays home (0 on the releasing
+        node, one fabric hop elsewhere) — so the blob moves exactly
+        when the real admission would place the resume off-home anyway:
+        home instances slot-saturated (e.g. taken over the moment they
+        drained) or overloaded (prefill backlog >= KV head-room) while
+        a foreign node has an open, fit instance.  Then the fabric leg
+        is paid at export time, batched inside the overlap window,
+        instead of stalling the admission-path fetch.  A blob whose
+        home still wins stays put (moving on a load hunch just
+        ping-pongs bytes).  Returns None (keep home) when home wins or
+        nothing fits."""
+        need = len(r.prompt) + r.gen_len + self.chunk_tokens(r)
+        best, best_key = None, None
+        for iv in instances:
+            if iv.kv_free_tokens < need:
+                continue
+            cost = 0.0 if iv.node == home_node else 1.0
+            effective_free = iv.kv_free_tokens - iv.queued_prefill_tokens
+            if effective_free > 0 and iv.free_slots > 0:
+                key = (1, -cost, effective_free)
+            else:
+                key = (0, min(effective_free, 0), -cost,
+                       effective_free)
+            if best_key is None or key > best_key:
+                best, best_key = iv.node, key
+        return None if best == home_node else best
+
     def plan_admissions(self, instances: Sequence[InstanceView]
                         ) -> List[Tuple[RolloutRequest, str]]:
         """Batch of (request, instance) decisions for one scheduling

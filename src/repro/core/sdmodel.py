@@ -99,6 +99,16 @@ class ForwardCostModel:
     def verify_time(self, batch: int, gamma: int, mean_ctx: float) -> float:
         return self.forward_time(batch, gamma + 1, mean_ctx)
 
+    def tree_verify_time(self, batch: int, n_nodes: int,
+                         mean_ctx: float) -> float:
+        """One tree-verify forward scoring ``n_nodes`` draft-tree nodes
+        (+ the anchor) per request.  A token tree of N nodes costs the
+        same forward as a linear chain of N drafts — the whole point of
+        tree speculation: at an equal draft-token budget the forward is
+        unchanged while the expected accepted length rises (see
+        :meth:`SDThroughputModel.expected_tokens_tree`)."""
+        return self.forward_time(batch, n_nodes + 1, mean_ctx)
+
     def step_time(self, batch: int, tokens_per_req: int, mean_ctx: float,
                   *, fused_accept: bool = True) -> float:
         """One engine decode/verify step including accept/commit cost.
@@ -189,6 +199,27 @@ class SDThroughputModel:
             return 1.0
         a = min(max(alpha, 0.0), 0.999)
         return (1.0 - a ** (gamma + 1)) / (1.0 - a)
+
+    def expected_tokens_tree(self, alpha: float,
+                             path_budgets: Sequence[int],
+                             branch_beta: Sequence[float]) -> float:
+        """E[accepted+bonus] per forward for *tree* verification.
+
+        The trunk (``path_budgets[0]``) contributes the linear
+        expectation at its depth; each funded side branch ``r`` adds its
+        rescue probability ``branch_beta[r]`` (the chance the sampled
+        chain leaves the trunk but follows branch r) times the extra
+        tokens that branch salvages beyond the bonus token the linear
+        path would have kept anyway.  Upper-bounded by the whole budget
+        plus the bonus — a tree can never beat committing every drafted
+        node."""
+        if not path_budgets:
+            return 1.0
+        e = self.expected_tokens(alpha, path_budgets[0])
+        for r, d in enumerate(path_budgets[1:], start=1):
+            w = branch_beta[r] if r < len(branch_beta) else 0.0
+            e += w * (self.expected_tokens(alpha, d) - 1.0)
+        return min(e, sum(path_budgets) + 1.0)
 
     def t_sd(self, batch: int, gamma: int, alpha: float,
              mean_ctx: float) -> float:

@@ -31,9 +31,12 @@ Scheduling modes
                   requests, stop at the target count, defer the rest.
 
 Speculative decoding modes: ``none``, ``suffix`` (per-request CST),
-``grouped`` (Seer DGDS CST), ``grouped+multipath``, ``draft_model``,
-``mtp`` — each an (acceptance-profile, draft-cost) pair; grouped modes'
-acceptance grows with the number of completed group references (Table 2).
+``grouped`` (Seer DGDS CST), ``grouped+multipath``, ``grouped+tree``
+(multi-path drafts verified as one token tree per request — equal
+draft-token budget, branch rescues raise accepted tokens/forward),
+``draft_model``, ``mtp`` — each an (acceptance-profile, draft-cost)
+pair; grouped modes' acceptance grows with the number of completed
+group references (Table 2).
 """
 from __future__ import annotations
 
@@ -46,7 +49,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.context import ContextManager
-from repro.core.mba import MBAConfig, mba_speculation
+from repro.core.mba import MBAConfig, mba_speculation, mba_tree_paths
 from repro.core.request import Group, ReqState, RolloutRequest
 from repro.core.scheduler import InstanceView, Scheduler
 from repro.core.sdmodel import (H800, ForwardCostModel, HardwareSpec,
@@ -90,6 +93,16 @@ class SDStrategy:
     #                                 at rollout-tail batch sizes — the
     #                                 paper's "excessive draft overhead")
     alpha_fixed: Optional[float] = None  # fixed acceptance (draft/mtp)
+    # tree verification: the per-request token budget is split across
+    # candidate paths (mba_tree_paths) and the whole tree verifies in
+    # one forward — same forward cost as a linear chain of equal token
+    # budget, higher expected acceptance.  branch_rescue[r] is the
+    # static Table-2-style probability that the sampled chain leaves
+    # the trunk and follows the rank-r beam (the engine tier measures
+    # this online via ContextManager.branch_beta; the simulator uses
+    # the profile below)
+    tree: bool = False
+    branch_rescue: tuple = (1.0, 0.30, 0.15, 0.08)
 
     def alpha(self, n_refs: int, gamma: int) -> float:
         if self.name == "none":
@@ -100,7 +113,11 @@ class SDStrategy:
             acc = _TABLE2_ACCLEN[0]          # self-reference only
         else:                                 # grouped
             acc = float(np.interp(n_refs, _TABLE2_REFS, _TABLE2_ACCLEN))
-            acc *= _MULTIPATH_FACTOR.get(self.top_k, 1.0)
+            if not self.tree:
+                # tree mode models branch uplift explicitly via
+                # expected_tokens_tree; applying the Table-2 best-path
+                # multipath factor too would double-count it
+                acc *= _MULTIPATH_FACTOR.get(self.top_k, 1.0)
         return _acclen_to_alpha(acc, gamma)
 
 
@@ -114,6 +131,11 @@ def sd_strategy(name: str, cfg: ModelConfig) -> SDStrategy:
         return SDStrategy("grouped", gamma_max=8)
     if name == "grouped+multipath":
         return SDStrategy("grouped", gamma_max=8, top_k=4)
+    if name == "grouped+tree":
+        # multi-path drafts verified as one token tree per request —
+        # same draft-token budget and forward shape as grouped linear,
+        # side branches salvage steps the trunk loses
+        return SDStrategy("grouped", gamma_max=8, top_k=4, tree=True)
     if name == "draft_model":
         # dedicated ~7B draft: high acceptance, heavy draft cost — each of
         # the γ sequential draft steps streams the full 14 GB of bf16
@@ -398,8 +420,20 @@ class ClusterSimulator:
             b_l = B - b_h
             gamma_mean = (b_h * g_h + b_l * g_l) / B
             alpha = st.alpha(int(mean_refs), int(max(g_h, g_l, 1)))
-            tok_per_step = self.sd_model.expected_tokens(
-                alpha, int(round(gamma_mean)))
+            if st.tree and gamma_mean >= 1:
+                # tree verification: split the same token budget across
+                # paths and salvage trunk misses with side branches —
+                # the forward (γ_mean+1 scored tokens) is unchanged
+                g = int(round(gamma_mean))
+                beta = [alpha ** (i + 1) for i in range(st.gamma_max + 1)]
+                budgets = mba_tree_paths(g, beta,
+                                         list(st.branch_rescue),
+                                         st.top_k, st.gamma_max)
+                tok_per_step = self.sd_model.expected_tokens_tree(
+                    alpha, budgets, list(st.branch_rescue))
+            else:
+                tok_per_step = self.sd_model.expected_tokens(
+                    alpha, int(round(gamma_mean)))
             t_step = self.fwd.step_time(B, int(round(gamma_mean)) + 1,
                                         mean_ctx,
                                         fused_accept=self.sim.fused_accept)

@@ -87,6 +87,33 @@ global pool a batched, compute-overlapped subsystem:
   one-``jnp.take``-per-leaf path as the launch-count baseline and
   equivalence oracle.
 
+Tree speculation (``spec_mode="tree"``)
+---------------------------------------
+
+Multi-path CST drafts are verified as *token trees* in one fused step:
+
+* drafts arrive as :class:`~repro.engine.token_tree.TokenTree` values
+  (or plain lists, treated as single-path trees — bit-identical to the
+  linear path, which stays the oracle as ``spec_mode="linear"``);
+* tree nodes occupy the verify columns after the anchor in topological
+  order, each written to its own cache slot (``anchor_slot + node
+  index`` — sibling nodes share a logical position, and therefore a
+  sampling key, but need distinct rows), with an ancestor ``within``
+  mask carried through the forward so a node attends exactly the
+  committed prefix plus its own root path;
+* acceptance generalises the longest-prefix rule to the longest
+  accepted *path* (children of one node carry distinct tokens, so the
+  accepted set is always a chain), selected on device; the winning
+  branch's K/V rows are compacted into the canonical position-indexed
+  slots and every rejected node's slot is invalidated inside the same
+  donated jit; sampled/logprob outputs are relaid out path-major so
+  ``commit_step`` is unchanged and the host still reads one tiny block
+  per step.
+
+SSM/hybrid archs verify single-path trees only (a recurrent scan is
+linear in the step's columns; sibling branches would corrupt each
+other's state) — branching trees on those archs raise.
+
 Step functions are compiled once per (config, T) and shared by every
 instance of that model (the paper colocates many instances per model).
 ``prefill_mode="sync"`` keeps the original admit-time python loop plus
@@ -105,7 +132,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.engine.sampling import (draft_acceptance, position_keys,
-                                   sample_tokens, token_logprobs_at)
+                                   sample_tokens, token_logprobs_at,
+                                   tree_acceptance)
+from repro.engine.token_tree import TokenTree, bucket_pow2, chain_tree
 from repro.models import build_cross_cache, forward, init_cache
 
 _INT32_MAX = np.iinfo(np.int32).max
@@ -259,6 +288,116 @@ class StepFunctions:
 
         fn = jax.jit(raw, donate_argnums=(1,))
         counted = self._counted(fn, f"fused:{T}")
+        self._step_cache[key] = counted
+        return counted
+
+    def fused_tree_step(self, T: int):
+        """Device-resident *tree*-verify step: multi-path CST drafts
+        merged into one token tree per row, verified in a single fused
+        forward with everything committed on device.
+
+        (params, cache, tokens(B,T), positions(B,T), slot_index(B,T),
+        mask(B,T), within(B,T,T), keys, temps, sample_rows(B,),
+        anchor(B,), parent(B,T), depth(B,T)) ->
+        (sampled(B,T), logprobs(B,T), n_accepted(B,), new_cache)
+
+        Row layout: column ``anchor[i]`` holds the row's pending token;
+        tree nodes follow in topological order, each written to cache
+        slot ``slot_index`` (laid out after the anchor so sibling nodes
+        at one logical position get distinct rows) and attending its
+        ancestors only via ``within``.  On device: longest accepted
+        *path* selection (:func:`tree_acceptance`), KV compaction of the
+        winning branch into the canonical position-indexed slots,
+        ``slot_pos`` invalidation of every rejected node, the SSM
+        accepted-path replay, and a path-major relayout of
+        sampled/logprobs — the host reads columns ``0..n_accepted`` of
+        the returned block exactly as it does on the linear path.  With
+        a single-path tree this computes bit-identically to
+        :meth:`fused_step` (the exactness oracle tests assert it).
+        """
+        key = ("tree", T)
+        if key in self._step_cache:
+            return self._step_cache[key]
+        cfg = self.cfg
+        ring = cfg.sliding_window > 0
+
+        def raw(params, cache, tokens, positions, slot_index, mask,
+                within, keys, temps, sample_rows, anchor, parent, depth):
+            B = tokens.shape[0]
+            has_rec = "ssm" in cache
+            pre_rec = {k: cache[k] for k in ("ssm", "conv")
+                       if k in cache}
+            logits, new_cache, _ = forward(
+                cfg, params, tokens, positions, cache, token_mask=mask,
+                slot_index=slot_index, within_mask=within)
+            logits = logits.astype(jnp.float32)
+            sampled = sample_tokens(logits, keys, temps, sample_rows)
+            lp = token_logprobs_at(logits, sampled)
+            n_acc, path_col, acc = tree_acceptance(
+                sampled, tokens, parent, depth, within, mask, anchor)
+            n_acc = jnp.where(sample_rows, n_acc, 0)
+            # path-major relayout: column d of the output holds the
+            # sample/logprob at the accepted path's depth-d node, so the
+            # host commit is identical to the linear path at offset 0
+            out_sampled = jnp.take_along_axis(sampled, path_col, axis=1)
+            out_lp = jnp.take_along_axis(lp, path_col, axis=1)
+            anchor_pos = jnp.take_along_axis(
+                positions, anchor[:, None], axis=1)[:, 0]
+            if "slot_pos" in new_cache:
+                S = new_cache["slot_pos"].shape[1]
+                bidx = jnp.arange(B)[:, None]
+                # 1) invalidate every tree-node slot (this step's
+                # writes); 2) re-commit the winning branch into the
+                # canonical slots (slot == position, mod ring) so the
+                # cache looks exactly as if the accepted chain had been
+                # decoded linearly
+                node_slots = jnp.where((depth > 0) & mask, slot_index, S)
+                sp = new_cache["slot_pos"].at[bidx, node_slots].set(
+                    -1, mode="drop")
+                dcols = jnp.arange(T, dtype=jnp.int32)[None, :]
+                dvalid = (dcols >= 1) & (dcols <= n_acc[:, None]) \
+                    & sample_rows[:, None]
+                src = jnp.where(
+                    dvalid,
+                    jnp.take_along_axis(slot_index, path_col, axis=1), S)
+                dst_pos = anchor_pos[:, None] + dcols
+                dst = jnp.where(dvalid, dst_pos % S if ring else dst_pos,
+                                S)
+                new_cache["slot_pos"] = sp.at[bidx, dst].set(
+                    dst_pos, mode="drop")
+                src_c = jnp.clip(src, 0, S - 1)
+                for kk in ("k", "v"):
+                    kv = new_cache[kk]            # (L, B, S, H, D)
+                    vals = jnp.take_along_axis(
+                        kv, src_c[None, :, :, None, None], axis=2)
+                    new_cache[kk] = kv.at[:, bidx, dst].set(
+                        vals, mode="drop")
+            if has_rec and T > 1:
+                # recurrent state advanced through rejected tree nodes:
+                # replay the accepted path (anchor + accepted chain, in
+                # column order = topological order) from the pre-step
+                # state; prefill rows keep their full mask
+                cols = jnp.arange(T)[None, :]
+                keep = mask & jnp.where(
+                    sample_rows[:, None],
+                    (cols <= anchor[:, None]) | acc, True)
+
+                def replay(nc):
+                    c2 = dict(nc)
+                    c2.update(pre_rec)
+                    _, c3, _ = forward(cfg, params, tokens, positions,
+                                       c2, token_mask=keep,
+                                       slot_index=slot_index,
+                                       within_mask=within)
+                    return c3
+
+                new_cache = jax.lax.cond(
+                    jnp.any(keep != mask), replay, lambda nc: nc,
+                    new_cache)
+            return out_sampled, out_lp, n_acc, new_cache
+
+        fn = jax.jit(raw, donate_argnums=(1,))
+        counted = self._counted(fn, f"tree:{T}")
         self._step_cache[key] = counted
         return counted
 
@@ -491,6 +630,7 @@ class Instance:
                  prefill_mode: str = "batched",
                  prefill_budget: Optional[int] = None,
                  migration_mode: Optional[str] = None,
+                 spec_mode: str = "linear",
                  cost_model=None, prefill_latency_factor: float = 2.0,
                  instance_id: str = "inst0", node: str = "n0",
                  admit_into_draining: Optional[bool] = None,
@@ -498,6 +638,13 @@ class Instance:
                  modality_embeds=None):
         if prefill_mode not in ("batched", "sync"):
             raise ValueError(f"prefill_mode={prefill_mode!r}")
+        if spec_mode not in ("linear", "tree"):
+            raise ValueError(f"spec_mode={spec_mode!r}")
+        if spec_mode == "tree" and prefill_mode != "batched":
+            # the sync reference path keeps host-side linear acceptance
+            # as the oracle; trees only exist on the fused device path
+            raise ValueError("spec_mode='tree' requires "
+                             "prefill_mode='batched'")
         if migration_mode is None:
             # the sync reference path keeps the PR 2 per-slot moves
             migration_mode = "perslot" if prefill_mode == "sync" \
@@ -513,6 +660,10 @@ class Instance:
         self.gamma_max = gamma_max
         self.prefill_mode = prefill_mode
         self.migration_mode = migration_mode
+        # "tree": decode rows verify multi-path draft token trees in one
+        # fused step (drafts may be TokenTree values); "linear" keeps
+        # the single-chain verify as the oracle path
+        self.spec_mode = spec_mode
         # Sarathi-style cap on prefill tokens admitted into one mixed
         # step (bounds decode-row latency).  None + a cost model =
         # adaptive: _prefill_plan caps the *modeled mixed-step latency*
@@ -587,6 +738,12 @@ class Instance:
         self.row_slots_active = 0
         self.prefill_rows_packed = 0   # chunk-rows of prefill work issued
         self.tail_fused_rows = 0       # tail chunks fused with 1st decode
+        # tree-speculation accounting: steps that verified >= 1 tree
+        # node, total nodes verified, and nodes on branching (non-chain)
+        # trees — the draft-budget currency of tree mode
+        self.tree_steps = 0
+        self.tree_nodes = 0
+        self.tree_branch_nodes = 0
 
     # -- capacity ------------------------------------------------------------
 
@@ -643,7 +800,17 @@ class Instance:
         prefill work — O(1), no forward — so K admissions cost K queue
         appends, not K x ceil(len/chunk) single-row forwards; the queued
         chunks ride along with subsequent mixed step batches."""
-        if self._inflight is not None:
+        if self._inflight is not None and self.prefill_mode != "batched":
+            # the batched path tolerates admission with a step in
+            # flight: every cache write is either deferred to the next
+            # dispatch (queued prefill, batched imports, takeover
+            # clears) or a functional update enqueued on the post-step
+            # buffers (slot clears, per-slot imports), and the
+            # in-flight ticket's sample_slots are disjoint from
+            # admittable slots.  That window is what lets the rollout
+            # overlap scheduling — and takeover snapshots — with device
+            # compute.  The sync path keeps the guard: it block-waits
+            # on the cache inside admit.
             raise RuntimeError("admit() while a step ticket is in flight")
         t0 = time.perf_counter()
         takeover = False
@@ -690,6 +857,16 @@ class Instance:
             seq.last_token = seq.prompt[-1]
             seq.next_pos = len(seq.prompt) - 1
             self._queue_prefill(slot, seq, tokens, start_pos=0)
+        if takeover and self._inflight is not None:
+            # takeover-aware overlap: with the previous step still in
+            # flight, snapshot the draining rows NOW — the gather
+            # enqueues behind that step (it never writes draining rows;
+            # donation preserves them), so the export rides the overlap
+            # window instead of stalling the next dispatch.  The blob
+            # surfaces at the next flush_exports as usual; the
+            # newcomer's clear/import stay deferred to the next
+            # dispatch.
+            self._export_buffer.update(self._gather_exports({slot}))
         if self.prefill_mode == "sync":
             # jit dispatch is async: without a barrier the timer would
             # capture only trace/dispatch time, not the chunk forwards
@@ -708,8 +885,12 @@ class Instance:
         if slot in self._draining:
             raise RuntimeError(f"slot {slot} is already draining")
         # takeover imports must not land before their draining rows are
-        # snapshotted; everything else flushes now
-        self._flush_imports(exclude=set(self._takeovers))
+        # snapshotted — nor before their deferred slot clear runs (an
+        # early-gathered takeover is no longer in _takeovers, but its
+        # clear is still pending and would wipe an import that landed
+        # first); everything else flushes now
+        self._flush_imports(exclude=set(self._takeovers)
+                            | set(self._pending_clears))
         seq = self.slots[slot]
         self._check_exportable(slot, seq, export)
         blob = None
@@ -774,9 +955,11 @@ class Instance:
         t0 = time.perf_counter()
         if self._inflight is None:
             # blobs queued for *other* slots must land before the gather
-            # reads the cache; imports aimed at taken-over slots wait
-            # until the draining rows are snapshotted
-            self._flush_imports(exclude=set(self._takeovers))
+            # reads the cache; imports aimed at taken-over (or cleared-
+            # but-not-yet-dispatched) slots wait until the draining rows
+            # are snapshotted and the deferred clear has run
+            self._flush_imports(exclude=set(self._takeovers)
+                                | set(self._pending_clears))
         seqs = [self._draining[i] for i in slots]
         overlapped = self._inflight is not None
         out: Dict[str, KVBlob] = {}
@@ -1068,6 +1251,8 @@ class Instance:
         plan = self._prefill_plan()
         if not decode and not plan:
             return None
+        if self.spec_mode == "tree":
+            return self._dispatch_tree(decode, plan, drafts)
         gamma = max((len(drafts.get(i, [])) for i in decode), default=0)
         gamma = min(gamma, self.gamma_max)
         # bucket gamma to bound the number of compiled step shapes
@@ -1155,6 +1340,146 @@ class Instance:
             self.prefill_tokens += n
         self.steps_run += 1
 
+        ticket = StepTicket(sampled=sampled, lps=lps, n_acc=n_acc,
+                            sample_slots=decode + fused, anchors=anchors)
+        self._inflight = ticket
+        return ticket
+
+    def _dispatch_tree(self, decode: List[int], plan: Dict[int, int],
+                       drafts) -> StepTicket:
+        """Build and launch one tree-mode fused step.
+
+        Drafts may be :class:`TokenTree` values (multi-path, merged by
+        the tree builder) or plain token lists (converted to degenerate
+        chain trees, which compute bit-identically to the linear path).
+        Tree nodes are laid out after the anchor: column ``1+j`` holds
+        node ``j`` (topological order) at cache slot ``next_pos+1+j``,
+        logical position ``next_pos+depth[j]`` — sibling nodes share a
+        position (and its sampling key) but occupy distinct cache rows,
+        with the ancestor ``within`` mask restricting in-step attention.
+        Widths are bucketed with the same ladder as linear gamma so
+        compiled step shapes stay bounded.
+        """
+        trees: Dict[int, TokenTree] = {}
+        widest = 0
+        for i in decode:
+            d = drafts.get(i)
+            t = d if isinstance(d, TokenTree) else chain_tree(d or [])
+            cap = min(self.gamma_max,
+                      max(0, self.cache_len - 2 - self.slots[i].next_pos))
+            if len(t) > cap:
+                # topological order: a node-count prefix is a valid tree
+                t = TokenTree(tokens=t.tokens[:cap],
+                              parent=t.parent[:cap], depth=t.depth[:cap],
+                              paths=[p[:cap] for p in t.paths if p[:cap]])
+            trees[i] = t
+            widest = max(widest, len(t))
+        if "ssm" in self.cache and \
+                any(not t.is_chain() for t in trees.values()):
+            # a recurrent scan is linear in the step's columns: sibling
+            # branches would corrupt each other's state.  The rollout's
+            # draft gate collapses trees to chains on these archs.
+            raise ValueError(
+                "branching draft trees require an attention-only arch; "
+                "SSM/hybrid instances verify single-path trees only")
+        T = bucket_pow2(widest, 32) + 1
+        if plan:
+            T = max(T, bucket_pow2(max(plan.values()),
+                                   self.prefill_chunk))
+        B = self.max_slots
+        fused = [i for i, n in plan.items()
+                 if n == len(self.slots[i].prefill_queue) and n + 1 <= T]
+        S = self.cache["slot_pos"].shape[1] if "slot_pos" in self.cache \
+            else self.cache_len
+        ring = self.cfg.sliding_window > 0
+
+        def to_slot(p):
+            return p % S if ring else p
+
+        tokens = np.zeros((B, T), np.int32)
+        positions = np.zeros((B, T), np.int32)
+        slot_index = np.zeros((B, T), np.int32)
+        mask = np.zeros((B, T), bool)
+        within = np.zeros((B, T, T), bool)
+        temps = np.zeros((B,), np.float32)
+        seeds = np.zeros((B,), np.int32)
+        sample_rows = np.zeros((B,), bool)
+        anchor = np.zeros((B,), np.int32)
+        parent = np.full((B, T), -1, np.int32)
+        depth = np.zeros((B, T), np.int32)
+        anchors: Dict[int, int] = {}
+        n_tree_nodes = 0
+        for i in decode:
+            seq = self.slots[i]
+            t = trees[i]
+            tokens[i, 0] = seq.last_token
+            positions[i, 0] = seq.next_pos
+            slot_index[i, 0] = to_slot(seq.next_pos)
+            mask[i, 0] = True
+            within[i, 0, 0] = True
+            anc = t.ancestors_or_self()
+            for j, tok in enumerate(t.tokens):
+                c = 1 + j
+                tokens[i, c] = tok
+                positions[i, c] = seq.next_pos + t.depth[j]
+                slot_index[i, c] = to_slot(seq.next_pos + 1 + j)
+                mask[i, c] = True
+                parent[i, c] = 0 if t.parent[j] < 0 else 1 + t.parent[j]
+                depth[i, c] = t.depth[j]
+                within[i, c, 0] = True
+                for a in anc[j]:
+                    within[i, c, 1 + a] = True
+            temps[i] = seq.temperature
+            seeds[i] = seq.seed
+            sample_rows[i] = True
+            anchors[i] = 0
+            n_tree_nodes += len(t)
+            self.tree_nodes += len(t)
+            if len(t) and not t.is_chain():
+                self.tree_branch_nodes += len(t)
+        for i, n in plan.items():
+            seq = self.slots[i]
+            tokens[i, :n] = seq.prefill_queue[:n]
+            pos = seq.prefill_pos + np.arange(n)
+            positions[i, :n] = pos
+            slot_index[i, :n] = to_slot(pos)
+            mask[i, :n] = True
+            k = n
+            if i in fused:
+                tokens[i, n] = seq.last_token
+                positions[i, n] = seq.next_pos
+                slot_index[i, n] = to_slot(seq.next_pos)
+                mask[i, n] = True
+                temps[i] = seq.temperature
+                seeds[i] = seq.seed
+                sample_rows[i] = True
+                anchor[i] = n
+                anchors[i] = 0      # outputs are path-major: offset 0
+                k = n + 1
+            # prefill chunks are chains by position: plain causal order
+            within[i, :k, :k] = np.tril(np.ones((k, k), bool))
+
+        keys = position_keys(self.base_key, jnp.asarray(seeds),
+                             jnp.asarray(positions))
+        fn = self.steps.fused_tree_step(T)
+        sampled, lps, n_acc, self.cache = fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(slot_index),
+            jnp.asarray(mask), jnp.asarray(within), keys,
+            jnp.asarray(temps), jnp.asarray(sample_rows),
+            jnp.asarray(anchor), jnp.asarray(parent),
+            jnp.asarray(depth))
+        self.row_slots_total += B
+        self.row_slots_active += len(decode) + len(plan)
+        self.prefill_rows_packed += len(plan)
+        self.tail_fused_rows += len(fused)
+        self.tree_steps += 1 if n_tree_nodes else 0
+        for i, n in plan.items():
+            seq = self.slots[i]
+            del seq.prefill_queue[:n]
+            seq.prefill_pos += n
+            self.prefill_tokens += n
+        self.steps_run += 1
         ticket = StepTicket(sampled=sampled, lps=lps, n_acc=n_acc,
                             sample_slots=decode + fused, anchors=anchors)
         self._inflight = ticket

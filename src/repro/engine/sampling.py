@@ -80,6 +80,51 @@ def draft_acceptance(sampled: jax.Array, tokens: jax.Array,
                    axis=1).astype(jnp.int32)
 
 
+def tree_acceptance(sampled: jax.Array, tokens: jax.Array,
+                    parent: jax.Array, depth: jax.Array,
+                    within: jax.Array, mask: jax.Array,
+                    anchor: jax.Array) -> tuple:
+    """Longest accepted *path* through a draft token tree, on device.
+
+    Row layout (see ``TokenTree``): tree nodes occupy columns after the
+    row's anchor; ``parent[b,c]`` is the column of node c's parent (the
+    anchor's column for depth-1 nodes, -1 for non-node columns),
+    ``depth[b,c]`` its depth from the anchor (0 = anchor / non-tree
+    column), and ``within[b,c,c']`` the ancestor-or-self mask the
+    attention step used.  A node is accepted iff its token equals the
+    token the model sampled at its parent AND every ancestor is
+    accepted — evaluated in closed form as "all ancestors' edges
+    match", vectorised through the ancestor mask (no sequential scan).
+    Children of one node carry distinct tokens (the tree builder
+    dedups), so accepted nodes always form a single chain and the
+    deepest accepted node identifies the winning path.
+
+    Returns ``(n_accepted (B,), path_col (B,T), accepted (B,T))``:
+    ``path_col[b,d]`` is the column of the accepted-path node at depth d
+    (the anchor for d = 0 or d > n_accepted) — the gather indices that
+    relayout the sampled/logprob chain path-major for the host — and
+    ``accepted`` the per-node accept flags (the SSM replay mask).
+    """
+    B, T = tokens.shape
+    node = (depth > 0) & mask
+    par = jnp.clip(parent, 0, T - 1)
+    edge_ok = jnp.where(
+        parent >= 0,
+        tokens == jnp.take_along_axis(sampled, par, axis=1), True)
+    # accepted iff every within-visible column's edge holds (non-node
+    # columns have parent -1 => edge_ok True, so the anchor and padding
+    # never veto)
+    acc = node & jnp.all(edge_ok[:, None, :] | ~within, axis=2)
+    n_acc = jnp.max(jnp.where(acc, depth, 0), axis=1).astype(jnp.int32)
+    d = jnp.arange(T, dtype=jnp.int32)[None, :]
+    hit = acc[:, None, :] & (depth[:, None, :] == d[:, :, None]) \
+        & (d[:, :, None] > 0)                                # (B,Td,Tc)
+    has = jnp.any(hit, axis=2)
+    path_col = jnp.where(has, jnp.argmax(hit, axis=2),
+                         anchor[:, None]).astype(jnp.int32)
+    return n_acc, path_col, acc
+
+
 def token_logprobs_at(logits: jax.Array, tokens: jax.Array) -> jax.Array:
     """logprob of ``tokens`` under softmax(logits); (B,T,V),(B,T)->(B,T) f32."""
     lf = logits.astype(jnp.float32)

@@ -31,7 +31,12 @@ NEG_INF = -1e30
 
 def _verify_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
                    m_scr, l_scr, acc_scr, *, scale: float, window: int,
-                   n_k: int):
+                   n_k: int, tree_ref=None):
+    """Shared online-softmax body.  With ``tree_ref`` (the (T, bk) int8
+    ancestor-mask tile of a tree-verify call) the positional mask is
+    additionally AND-ed with it — sibling draft nodes share a position,
+    so causality alone cannot keep a node from attending a rejected
+    sibling's cache row."""
     ki = pl.program_id(1)
 
     @pl.when(ki == 0)
@@ -51,6 +56,8 @@ def _verify_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
                            kp[None, :] <= qp[:, None])
     if window:
         mask = jnp.logical_and(mask, kp[None, :] > qp[:, None] - window)
+    if tree_ref is not None:
+        mask = jnp.logical_and(mask, tree_ref[0] != 0)     # (T, bk)
     s = jnp.where(mask, s, NEG_INF)
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -69,9 +76,42 @@ def _verify_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _tree_kernel(qpos_ref, kpos_ref, tree_ref, q_ref, k_ref, v_ref,
+                 o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                 window: int, n_k: int):
+    _verify_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, scale=scale, window=window,
+                   n_k=n_k, tree_ref=tree_ref)
+
+
 def spec_verify_pallas(q, k, v, q_pos, k_pos, *, window: int = 0,
                        block_k: int = 128, interpret: bool = True):
     """q: (B,T,Hq,D); k,v: (B,S,Hk,D); q_pos: (B,T); k_pos: (B,S)."""
+    return _verify_call(q, k, v, q_pos, k_pos, None, window=window,
+                        block_k=block_k, interpret=interpret)
+
+
+def tree_verify_pallas(q, k, v, q_pos, k_pos, tree_mask, *,
+                       window: int = 0, block_k: int = 128,
+                       interpret: bool = True):
+    """Tree-verify attention: one fused pass over a draft token tree.
+
+    Same contract as :func:`spec_verify_pallas` plus ``tree_mask``
+    (B, T, S) — per-query-node allowed cache slots (committed prefix +
+    tree ancestors), AND-ed with the positional mask.  The (T, block_k)
+    mask tile streams alongside each KV block, so the extra operand
+    costs T*block_k int8 bytes of VMEM per tile — negligible next to
+    the (block_k, D) KV tiles it rides with, and the MXU work is
+    unchanged: verifying a tree of N nodes prices exactly like a linear
+    chain of N drafts.
+    """
+    return _verify_call(q, k, v, q_pos, k_pos,
+                        tree_mask.astype(jnp.int8), window=window,
+                        block_k=block_k, interpret=interpret)
+
+
+def _verify_call(q, k, v, q_pos, k_pos, tree_mask, *, window: int,
+                 block_k: int, interpret: bool):
     B, T, Hq, D = q.shape
     S, Hk = k.shape[1], k.shape[2]
     assert Hq % Hk == 0
@@ -82,6 +122,8 @@ def spec_verify_pallas(q, k, v, q_pos, k_pos, *, window: int = 0,
         k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
         k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=-1)
+        if tree_mask is not None:
+            tree_mask = jnp.pad(tree_mask, ((0, 0), (0, 0), (0, pk)))
     Sp = S + pk
     n_k = Sp // block_k
 
@@ -103,18 +145,32 @@ def spec_verify_pallas(q, k, v, q_pos, k_pos, *, window: int = 0,
     def kpos_map(bh, ki):
         return (bh // Hq, ki)
 
-    kernel = functools.partial(_verify_kernel, scale=D ** -0.5,
-                               window=window, n_k=n_k)
+    def tree_map(bh, ki):
+        return (bh // Hq, 0, ki)
+
+    in_specs = [
+        pl.BlockSpec((1, T), qpos_map),
+        pl.BlockSpec((1, block_k), kpos_map),
+    ]
+    operands = [q_pos, k_pos]
+    if tree_mask is None:
+        kernel = functools.partial(_verify_kernel, scale=D ** -0.5,
+                                   window=window, n_k=n_k)
+    else:
+        kernel = functools.partial(_tree_kernel, scale=D ** -0.5,
+                                   window=window, n_k=n_k)
+        in_specs.append(pl.BlockSpec((1, T, block_k), tree_map))
+        operands.append(tree_mask)
+    in_specs += [
+        pl.BlockSpec((1, T, D), q_map),
+        pl.BlockSpec((1, block_k, D), kv_map),
+        pl.BlockSpec((1, block_k, D), kv_map),
+    ]
+    operands += [qf, kf, vf]
     out = pl.pallas_call(
         kernel,
         grid=(B * Hq, n_k),
-        in_specs=[
-            pl.BlockSpec((1, T), qpos_map),
-            pl.BlockSpec((1, block_k), kpos_map),
-            pl.BlockSpec((1, T, D), q_map),
-            pl.BlockSpec((1, block_k, D), kv_map),
-            pl.BlockSpec((1, block_k, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, T, D), q_map),
         out_shape=jax.ShapeDtypeStruct((B * Hq, T, D), q.dtype),
         scratch_shapes=[
@@ -123,5 +179,5 @@ def spec_verify_pallas(q, k, v, q_pos, k_pos, *, window: int = 0,
             pltpu.VMEM((T, D), jnp.float32),
         ],
         interpret=interpret,
-    )(q_pos, k_pos, qf, kf, vf)
+    )(*operands)
     return out.reshape(B, Hq, T, D).transpose(0, 2, 1, 3)

@@ -1,11 +1,12 @@
-"""Jitted public wrapper for the spec-verify kernel."""
+"""Jitted public wrappers for the spec-verify kernels (linear + tree)."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from repro.kernels.spec_verify.kernel import spec_verify_pallas
+from repro.kernels.spec_verify.kernel import (spec_verify_pallas,
+                                              tree_verify_pallas)
 
 
 @partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
@@ -16,3 +17,17 @@ def spec_verify_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
         interpret = jax.default_backend() != "tpu"
     return spec_verify_pallas(q, k, v, q_pos, k_pos, window=window,
                               block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def tree_verify_attention(q, k, v, q_pos, k_pos, tree_mask, *,
+                          window: int = 0, block_k: int = 128,
+                          interpret: bool | None = None):
+    """Tree-verification attention: ``tree_mask`` (B, T, S) bool marks
+    each query node's allowed cache slots (committed prefix + its own
+    ancestors among this step's writes); see ``tree_verify_pallas``."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return tree_verify_pallas(q, k, v, q_pos, k_pos, tree_mask,
+                              window=window, block_k=block_k,
+                              interpret=interpret)

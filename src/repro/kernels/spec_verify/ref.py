@@ -15,6 +15,35 @@ import jax.numpy as jnp
 
 
 def spec_verify_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
+    return _masked_ref(q, k, v, _pos_mask(q_pos, k_pos, window))
+
+
+def tree_verify_ref(q, k, v, q_pos, k_pos, tree_mask, *,
+                    window: int = 0):
+    """Tree-verification oracle: per-query *ancestor* masking.
+
+    ``tree_mask`` (B, T, S) bool marks, for each query (a draft-tree
+    node), which cache slots it may attend: the committed prefix plus
+    its own ancestors among the slots written this step.  Sibling nodes
+    share an absolute position, so position causality alone cannot
+    separate them — the mask is combined (AND) with validity/causality
+    so an over-permissive caller still never attends an empty or future
+    slot.
+    """
+    return _masked_ref(q, k, v,
+                       _pos_mask(q_pos, k_pos, window) & tree_mask)
+
+
+def _pos_mask(q_pos, k_pos, window):
+    qp = q_pos[:, :, None]
+    kp = k_pos[:, None, :]
+    mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask &= kp > qp - window
+    return mask                                            # (B, T, S)
+
+
+def _masked_ref(q, k, v, mask):
     B, T, Hq, D = q.shape
     S, Hk = k.shape[1], k.shape[2]
     rep = Hq // Hk
@@ -22,15 +51,11 @@ def spec_verify_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
     vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
     qf = q.astype(jnp.float32) * (D ** -0.5)
     s = jnp.einsum("bthd,bshd->bhts", qf, kf)
-    qp = q_pos[:, None, :, None]
-    kp = k_pos[:, None, None, :]
-    mask = (kp >= 0) & (kp <= qp)
-    if window:
-        mask &= kp > qp - window
-    s = jnp.where(mask, s, -1e30)
+    m4 = mask[:, None, :, :]                               # (B,1,T,S)
+    s = jnp.where(m4, s, -1e30)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)
-    p = jnp.where(mask, p, 0.0)
+    p = jnp.where(m4, p, 0.0)
     l = p.sum(axis=-1, keepdims=True)
     o = jnp.einsum("bhts,bshd->bthd", p / jnp.maximum(l, 1e-30), vf)
     return o.astype(q.dtype)

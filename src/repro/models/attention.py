@@ -39,16 +39,27 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
               q_pos: jax.Array, k_pos: jax.Array, *,
               causal: bool = True, window: int = 0,
               kv_valid: Optional[jax.Array] = None,
-              softcap: float = 0.0) -> jax.Array:
-    """q: (B,Tq,Hq,D); k,v: (B,Tk,Hk,D); positions absolute. -> (B,Tq,Hq,D)."""
+              softcap: float = 0.0,
+              allowed_mask: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B,Tq,Hq,D); k,v: (B,Tk,Hk,D); positions absolute. -> (B,Tq,Hq,D).
+
+    ``allowed_mask`` (B,Tq,Tk) bool, when given, *replaces* the
+    positional causal/window/validity mask — the caller has precomputed
+    exactly which keys each query may see.  Tree-speculation verify
+    steps use this: sibling draft nodes share an absolute position, so
+    position-causality alone would let a node attend a non-ancestor;
+    the engine passes the ancestor mask instead.  Only the plain path
+    accepts it (verify T is far below the flash cutoff)."""
     B, Tq, Hq, D = q.shape
     Tk, Hk = k.shape[1], k.shape[2]
     assert Hq % Hk == 0, (Hq, Hk)
-    if Tq >= FLASH_MIN_TQ and Tk >= 2 * FLASH_KV_BLOCK:
+    if allowed_mask is None and Tq >= FLASH_MIN_TQ \
+            and Tk >= 2 * FLASH_KV_BLOCK:
         return _flash(q, k, v, q_pos, k_pos, causal=causal, window=window,
                       kv_valid=kv_valid, softcap=softcap)
     return _plain(q, k, v, q_pos, k_pos, causal=causal, window=window,
-                  kv_valid=kv_valid, softcap=softcap)
+                  kv_valid=kv_valid, softcap=softcap,
+                  allowed_mask=allowed_mask)
 
 
 def _scores(qg, k, softcap):
@@ -67,12 +78,14 @@ def _split_heads(q, Hk):
     return (q.astype(jnp.float32) * scale).reshape(B, Tq, Hk, G, D)
 
 
-def _plain(q, k, v, q_pos, k_pos, *, causal, window, kv_valid, softcap):
+def _plain(q, k, v, q_pos, k_pos, *, causal, window, kv_valid, softcap,
+           allowed_mask=None):
     B, Tq, Hq, D = q.shape
     Hk = k.shape[2]
     qg = _split_heads(q, Hk)
     s = _scores(qg, k, softcap)                               # (B,Hk,G,Tq,Tk)
-    m = _mask(q_pos, k_pos, causal=causal, window=window, kv_valid=kv_valid)
+    m = allowed_mask if allowed_mask is not None else \
+        _mask(q_pos, k_pos, causal=causal, window=window, kv_valid=kv_valid)
     s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     # rows with no allowed key (padding) -> zero output

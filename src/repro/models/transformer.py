@@ -238,8 +238,13 @@ def _project_qkv(p, xn, cfg, positions=None):
 
 
 def _self_attn(p, x, cfg, positions, slots, ck, cv, slot_pos, token_mask,
-               causal=True, sctx=None):
-    """Returns (x_out, new_ck, new_cv).  ck/cv None => no-cache (training)."""
+               causal=True, sctx=None, attn_allowed=None):
+    """Returns (x_out, new_ck, new_cv).  ck/cv None => no-cache (training).
+
+    ``attn_allowed`` (B,T,S) bool, when given, replaces the positional
+    mask on the cache-scatter path — the tree-verify step precomputes
+    per-query visibility (committed prefix + tree ancestors) because
+    sibling draft nodes share absolute positions."""
     xn = rms_norm(x, p["ln"], cfg.rms_eps)
     q, k, v = _project_qkv(p, xn, cfg, positions)
     window = cfg.sliding_window
@@ -291,7 +296,8 @@ def _self_attn(p, x, cfg, positions, slots, ck, cv, slot_pos, token_mask,
         o = attn_mod.attention(q, nk, nv, positions, slot_pos,
                                causal=causal, window=window,
                                kv_valid=kv_valid,
-                               softcap=cfg.attn_logit_softcap)
+                               softcap=cfg.attn_logit_softcap,
+                               allowed_mask=attn_allowed)
     o = lin(o.reshape(B, T, -1), p["wo"])
     return x + o, nk, nv
 
@@ -321,17 +327,19 @@ def _mlp(p, x, cfg):
 
 
 def _dense_layer(p, x, cfg, positions, slots, ck, cv, slot_pos, token_mask,
-                 sctx=None):
+                 sctx=None, attn_allowed=None):
     x, nk, nv = _self_attn(p["attn"], x, cfg, positions, slots, ck, cv,
-                           slot_pos, token_mask, sctx=sctx)
+                           slot_pos, token_mask, sctx=sctx,
+                           attn_allowed=attn_allowed)
     x = _mlp(p["mlp"], x, cfg)
     return x, nk, nv
 
 
 def _moe_layer(p, x, cfg, positions, slots, ck, cv, slot_pos, token_mask,
-               sctx):
+               sctx, attn_allowed=None):
     x, nk, nv = _self_attn(p["attn"], x, cfg, positions, slots, ck, cv,
-                           slot_pos, token_mask, sctx=sctx)
+                           slot_pos, token_mask, sctx=sctx,
+                           attn_allowed=attn_allowed)
     xn = rms_norm(x, p["ln2"], cfg.rms_eps)
     y, aux = moe_forward(xn, p["moe"], cfg, sctx)
     return x + y, nk, nv, aux
@@ -348,12 +356,28 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
             token_mask: Optional[jax.Array] = None,
             sctx: Optional[ShardCtx] = None,
             train: bool = False,
-            contiguous_update: bool = False):
+            contiguous_update: bool = False,
+            slot_index: Optional[jax.Array] = None,
+            within_mask: Optional[jax.Array] = None):
     """tokens/positions: (B, T) -> (logits (B,T,V), new_cache, aux_loss).
 
     cache=None  => full-sequence (training) forward.
     cache given => incremental forward appending T tokens; ``slots`` are
                    derived from positions (ring for sliding-window configs).
+
+    Tree-verify inputs (both or neither):
+
+    * ``slot_index`` (B,T) int32 — explicit cache slot per token,
+      decoupling slots from positions.  Sibling draft nodes share a
+      position but must occupy distinct cache rows; the engine lays the
+      tree out after the anchor (slot = anchor_slot + node index).
+    * ``within_mask`` (B,Tq,Tc) bool — within-step visibility: query
+      column q may attend the cache row written by column c.  For tree
+      rows this is the ancestor-or-self mask; for prefill/linear rows
+      plain position causality (identical to what the positional mask
+      computes, so non-tree rows are unchanged).  Combined here with
+      cache validity + causality over *previously written* slots into
+      one (B,T,S) allowed-mask shared by every attention layer.
     """
     B, T = tokens.shape
     has_cache = cache is not None
@@ -390,7 +414,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
                     (jnp.zeros((), start.dtype), start))
             new_cache["slot_pos"] = slot_pos
         else:
-            slots = positions % S if ring else positions
+            slots = slot_index if slot_index is not None else \
+                (positions % S if ring else positions)
             # masked/padded tokens -> OOB slot, dropped by scatter
             if token_mask is not None:
                 slots = jnp.where(token_mask, slots, S)
@@ -398,13 +423,35 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
                 jnp.arange(B)[:, None], slots].set(positions, mode="drop")
             new_cache["slot_pos"] = slot_pos
 
+    attn_allowed = None
+    if within_mask is not None and slots is not None:
+        # one (B, T, S) allowed-mask shared by all attention layers:
+        # previously cached rows obey validity + positional causality
+        # (+ window); rows written by THIS step's columns obey the
+        # caller's within-step mask instead — position alone cannot
+        # separate sibling draft nodes at the same depth.
+        S = slot_pos.shape[1]
+        qp = positions[:, :, None]
+        kp = slot_pos[:, None, :]
+        base = (kp >= 0) & (kp <= qp)
+        if cfg.sliding_window:
+            base = base & (kp > qp - cfg.sliding_window)
+        col_of_slot = jnp.full((B, S), -1, jnp.int32).at[
+            jnp.arange(B)[:, None], slots].set(
+            jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :],
+                             (B, T)), mode="drop")
+        idx = jnp.broadcast_to(
+            jnp.clip(col_of_slot, 0, T - 1)[:, None, :], (B, T, S))
+        ext = jnp.take_along_axis(within_mask, idx, axis=2)
+        attn_allowed = jnp.where((col_of_slot >= 0)[:, None, :], ext, base)
+
     aux_total = jnp.zeros((), jnp.float32)
     at = cfg.arch_type
 
     if at in ("dense", "moe"):
         x, aux_total, new_cache = _decoder_stack(
             cfg, params, x, positions, slots, slot_pos, token_mask,
-            new_cache if has_cache else None, sctx, train)
+            new_cache if has_cache else None, sctx, train, attn_allowed)
     elif at == "ssm":
         x, new_cache = _ssm_stack(cfg, params["layers"], x, token_mask,
                                   new_cache if has_cache else None, train,
@@ -412,15 +459,17 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
     elif at == "hybrid":
         x, new_cache, aux_total = _hybrid_stack(
             cfg, params, x, positions, slots, slot_pos, token_mask,
-            new_cache if has_cache else None, sctx, train)
+            new_cache if has_cache else None, sctx, train, attn_allowed)
     elif at == "vlm":
         x, new_cache = _vlm_stack(
             cfg, params, x, positions, slots, slot_pos, token_mask,
-            new_cache if has_cache else None, aux_inputs, sctx, train)
+            new_cache if has_cache else None, aux_inputs, sctx, train,
+            attn_allowed)
     elif at == "audio":
         x, new_cache = _audio_stack(
             cfg, params, x, positions, slots, slot_pos, token_mask,
-            new_cache if has_cache else None, aux_inputs, sctx, train)
+            new_cache if has_cache else None, aux_inputs, sctx, train,
+            attn_allowed)
     else:
         raise ValueError(at)
 
@@ -437,7 +486,7 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 
 def _decoder_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
-                   cache, sctx, train):
+                   cache, sctx, train, attn_allowed=None):
     has_cache = cache is not None
     aux = jnp.zeros((), jnp.float32)
     layer_idx = 0
@@ -447,11 +496,13 @@ def _decoder_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
             ck, cv = (cl if has_cache else (None, None))
             if is_moe:
                 xo, nk, nv, a = _moe_layer(p, x, cfg, positions, slots,
-                                           ck, cv, slot_pos, token_mask, sctx)
+                                           ck, cv, slot_pos, token_mask,
+                                           sctx, attn_allowed=attn_allowed)
             else:
                 xo, nk, nv = _dense_layer(p, x, cfg, positions, slots,
                                           ck, cv, slot_pos, token_mask,
-                                          sctx=sctx)
+                                          sctx=sctx,
+                                          attn_allowed=attn_allowed)
                 a = jnp.zeros((), jnp.float32)
             if has_cache:
                 return xo, (nk, nv, a)
@@ -529,7 +580,7 @@ def _ssm_stack(cfg, stacked, x, token_mask, cache, train, key_prefix=None,
 
 
 def _hybrid_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
-                  cache, sctx, train):
+                  cache, sctx, train, attn_allowed=None):
     has_cache = cache is not None
     every = cfg.hybrid_attn_every
     n_cells = cfg.num_layers // every
@@ -556,7 +607,8 @@ def _hybrid_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
         x, (nconv, nssm) = _scan(inner, x, xs2)
         # shared (weight-tied) attention + mlp block
         x, nk, nv = _self_attn(shared_attn, x, cfg, positions, slots,
-                               ck, cv, slot_pos, token_mask, sctx=sctx)
+                               ck, cv, slot_pos, token_mask, sctx=sctx,
+                               attn_allowed=attn_allowed)
         x = _mlp(shared_mlp, x, cfg)
         if has_cache:
             return x, (nconv, nssm, nk, nv)
@@ -620,7 +672,7 @@ def build_cross_cache(cfg: ModelConfig, params: dict, embeds: jax.Array):
 
 
 def _vlm_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
-               cache, aux_inputs, sctx, train):
+               cache, aux_inputs, sctx, train, attn_allowed=None):
     has_cache = cache is not None
     every = cfg.cross_attn_every
     n_cells = cfg.num_layers // every
@@ -643,7 +695,7 @@ def _vlm_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
             c_v = xs2[2] if has_cache else None
             xo, nk, nv = _dense_layer(p2, c2, cfg, positions, slots,
                                       c_k, c_v, slot_pos, token_mask,
-                                      sctx=sctx)
+                                      sctx=sctx, attn_allowed=attn_allowed)
             return xo, (nk, nv) if has_cache else (jnp.zeros(()),)
 
         xs2 = (cell_p["self"],) + ((ck, cv) if has_cache else ())
@@ -693,7 +745,7 @@ def encode_audio(cfg: ModelConfig, params: dict, frames: jax.Array):
 
 
 def _audio_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
-                 cache, aux_inputs, sctx, train):
+                 cache, aux_inputs, sctx, train, attn_allowed=None):
     has_cache = cache is not None
     enc_out = None
     if not has_cache:
@@ -708,7 +760,8 @@ def _audio_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
         else:
             ck = cv = xk = xv = None
         x, nk, nv = _self_attn(p["attn"], x, cfg, positions, slots,
-                               ck, cv, slot_pos, token_mask, sctx=sctx)
+                               ck, cv, slot_pos, token_mask, sctx=sctx,
+                               attn_allowed=attn_allowed)
         if has_cache:
             x, _, _ = _cross_attn(p["cross"], x, cfg, (xk, xv), True)
         else:

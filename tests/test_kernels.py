@@ -6,8 +6,9 @@ import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.spec_verify.kernel import spec_verify_pallas
-from repro.kernels.spec_verify.ref import spec_verify_ref
+from repro.kernels.spec_verify.kernel import (spec_verify_pallas,
+                                              tree_verify_pallas)
+from repro.kernels.spec_verify.ref import spec_verify_ref, tree_verify_ref
 from repro.kernels.ssd_scan.ops import ssd_chunk_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
 
@@ -92,6 +93,77 @@ def test_spec_verify(case, dtype):
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32),
         atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def _tree_case(B, T, S, base):
+    """Random tree layout: q_pos with duplicate (sibling) positions and
+    a consistent ancestor mask over a contiguous cache prefix."""
+    q_pos = np.zeros((B, T), np.int32)
+    tree = np.zeros((B, T, S), bool)
+    k_pos = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        anchor = int(base[b])
+        k_pos[b, :anchor + 1] = np.arange(anchor + 1)
+        parent = [-1]
+        for j in range(1, T):
+            parent.append(int(RNG.integers(0, j)))
+        depth = [0]
+        for j in range(1, T):
+            depth.append(depth[parent[j]] + 1)
+        for j in range(T):
+            q_pos[b, j] = anchor + depth[j]
+            # committed prefix
+            tree[b, j, :anchor + 1] = True
+            # ancestors + self: this step's nodes sit at slots
+            # anchor+1+c for column c >= 1 (anchor at slot anchor)
+            node = j
+            while node >= 0:
+                sl = anchor if node == 0 else anchor + node
+                tree[b, j, sl] = True
+                node = parent[node]
+            k_pos[b, anchor + j if j else anchor] = q_pos[b, j]
+    return (jnp.asarray(q_pos), jnp.asarray(k_pos), jnp.asarray(tree))
+
+
+@pytest.mark.parametrize("case", [(2, 5, 256, 4, 2, 64, 0),
+                                  (1, 8, 128, 8, 8, 128, 0),
+                                  (2, 4, 256, 4, 1, 64, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tree_verify_matches_dense_ref(case, dtype):
+    """The tree-verify kernel must reproduce the dense ancestor-masked
+    oracle on trees with sibling nodes at duplicate positions."""
+    B, T, S, Hq, Hk, D, win = case
+    q = jnp.asarray(RNG.normal(size=(B, T, Hq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hk, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hk, D)), dtype)
+    q_pos, k_pos, tree = _tree_case(B, T, S, RNG.integers(40, 90, B))
+    ref = tree_verify_ref(q, k, v, q_pos, k_pos, tree, window=win)
+    out = tree_verify_pallas(q, k, v, q_pos, k_pos, tree, window=win,
+                             block_k=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_tree_verify_all_true_mask_equals_linear_kernel():
+    """With a permissive tree mask the tree kernel degenerates to the
+    linear spec-verify kernel — the ancestor mask is the only delta."""
+    B, T, S, H, D = 2, 5, 192, 4, 64
+    q = jnp.asarray(RNG.normal(size=(B, T, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
+    base = RNG.integers(50, 120, size=(B, 1))
+    q_pos = jnp.asarray(base + np.arange(T)[None], jnp.int32)
+    k_pos = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        k_pos[b, :int(base[b, 0]) + T] = np.arange(int(base[b, 0]) + T)
+    k_pos = jnp.asarray(k_pos)
+    allow = jnp.ones((B, T, S), bool)
+    a = tree_verify_pallas(q, k, v, q_pos, k_pos, allow, block_k=64,
+                           interpret=True)
+    b_ = spec_verify_pallas(q, k, v, q_pos, k_pos, block_k=64,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
 
 
 def test_spec_verify_equals_flash_on_contiguous_cache():

@@ -21,6 +21,31 @@ def sd():
 # ---------------- Alg. 1 ----------------------------------------------------
 
 
+def test_beta_padded_has_terminal_zero():
+    """The docstring contract: β[1..n] then an appended 0.0, so the MBA
+    marginal-benefit loop reads exactly 0 — not a decayed tail — when it
+    probes one position past γ_max."""
+    ctx = ContextManager(max_gen_length=64, beta_positions=4)
+    out = ctx.beta_padded(8)
+    assert len(out) == 9                    # n entries + terminal zero
+    assert out[-1] == 0.0
+    assert out[:4] == ctx.beta[:4]
+    # padded region decays geometrically and stays positive until the
+    # terminal zero
+    assert all(b > 0 for b in out[:-1])
+    assert out[4] == pytest.approx(ctx.beta[3] * 0.85)
+
+
+def test_beta_padded_terminal_zero_stops_mba_at_gamma_max(sd):
+    """With perfect acceptance the allocation saturates at γ_max and
+    the loop's look-one-past probe must see β = 0, never grant more."""
+    ctx = ContextManager(max_gen_length=64, beta_init=0.99)
+    beta = ctx.beta_padded(4)
+    g_h, g_l = mba_speculation(1, 0, beta, sd, alpha=0.99, mean_ctx=512,
+                               cfg=MBAConfig(gamma_max=4))
+    assert g_h <= 4
+
+
 def test_mba_zero_when_unprofitable(sd):
     """Huge batch + low acceptance -> drafting costs exceed gains."""
     beta = [0.2 * 0.85 ** i for i in range(10)]

@@ -529,6 +529,162 @@ def test_topology_aware_placement_reduces_cross_node_bytes(
     assert aware["cross_node_bytes"] < blind["cross_node_bytes"]
 
 
+# ---------------- placement-aware export ----------------------------------------
+
+
+def test_pool_put_with_placement_homes_blob_and_charges_fabric():
+    """put_batch(placements=...) homes the blob on the predicted resume
+    node, pays the fabric leg at export time (counted in
+    export_placed_remote*), and the subsequent same-node fetch crosses
+    no fabric."""
+    pool = GlobalKVPool(dram_capacity=1 << 20)
+    blob = KVBlob("r0", {}, 4, 1000)
+    t0 = pool.transfer_seconds
+    pool.put_batch([blob], node="n0", placements={"r0": "n1"})
+    assert pool.export_placed_remote == 1
+    assert pool.export_placed_remote_bytes == 1000
+    # DMA leg + fabric leg, both charged at export
+    assert pool.transfer_seconds - t0 == pytest.approx(
+        pool.costs.put_seconds(1000) + 1000 / pool.costs.net_bw)
+    assert pool.node_dram_used("n1") == 1000
+    assert pool.node_dram_used("n0") == 0
+    cb0 = pool.cross_node_bytes
+    assert pool.get("r0", node="n1") is not None
+    assert pool.cross_node_bytes == cb0      # resume fetch is same-node
+    # a same-node put stays free of the fabric charge
+    pool.put(KVBlob("r1", {}, 4, 500), node="n0")
+    assert pool.export_placed_remote == 1
+
+
+def test_predict_resume_node_requires_saturated_home():
+    """The export-placement oracle moves a blob only when its home node
+    genuinely cannot take the resume (slots taken over / overloaded)
+    while a foreign node is open — an open home always wins (moving on
+    a load hunch ping-pongs bytes)."""
+    from repro.core.context import ContextManager
+    from repro.core.request import RolloutRequest
+    from repro.core.scheduler import InstanceView, Scheduler
+    sched = Scheduler([], ContextManager(64), chunk_size=8)
+    r = RolloutRequest("r", "g", prompt=[1] * 8, seed=0,
+                       max_new_tokens=32)
+
+    def iv(iid, node, free, kv, queued=0):
+        return InstanceView(iid, free, kv, node=node,
+                            queued_prefill_tokens=queued)
+
+    # home open -> stay
+    assert sched.predict_resume_node(
+        [iv("a", "n0", 1, 64), iv("b", "n1", 1, 64)], r, "n0") is None
+    # home slot-saturated, foreign open -> move
+    assert sched.predict_resume_node(
+        [iv("a", "n0", 0, 64), iv("b", "n1", 1, 64)], r, "n0") == "n1"
+    # home overloaded by prefill backlog, foreign open -> move
+    assert sched.predict_resume_node(
+        [iv("a", "n0", 1, 64, queued=64), iv("b", "n1", 1, 64)],
+        r, "n0") == "n1"
+    # everything saturated -> stay home (unknowable)
+    assert sched.predict_resume_node(
+        [iv("a", "n0", 0, 64, queued=70), iv("b", "n1", 0, 64,
+                                             queued=10)],
+        r, "n0") == "n1"    # home deeply overloaded, foreign lightly
+    assert sched.predict_resume_node(
+        [iv("a", "n0", 0, 64), iv("b", "n1", 0, 64)], r, "n0") is None
+    # nothing fits -> stay home
+    assert sched.predict_resume_node(
+        [iv("a", "n0", 1, 4), iv("b", "n1", 1, 4)], r, "n0") is None
+
+
+def test_placement_aware_export_moves_fetches_off_fabric(
+        tiny_params_cache):
+    """Two nodes: a short chunked request whose freed home slot is taken
+    over by a long request must see its blob re-homed to the node it
+    will actually resume on — replacing a cross-node *fetch*
+    (admission-path stall) with an export-time placement, token-exactly."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    # R1 short+chunked on n0; R2 keeps n1 busy; RL (long prompt) takes
+    # over R1's freed slot, saturating n0
+    prompts = [list(range(2, 10)), list(range(3, 11)),
+               list(range(4, 54))]
+
+    def run(place):
+        ro = SeerRollout(cfg, params, n_instances=2, max_slots=1,
+                         cache_len=96, chunk_size=4, prefill_chunk=8,
+                         n_nodes=2, topology_aware=True,
+                         placement_aware_export=place, policy="fifo",
+                         spec_decode=False, base_seed=7, steps=steps)
+        groups = make_groups(prompts, group_size=1, max_new_tokens=16,
+                             seed=5)
+        res = ro.run(groups)
+        return res.responses(), ro.pool.stats()
+
+    resp_off, off = run(False)
+    resp_on, on = run(True)
+    assert resp_on == resp_off
+    assert off["export_placed_remote"] == 0
+    assert on["export_placed_remote"] > 0
+    # fetch-path fabric traffic shrinks: the placed blob's resume rides
+    # the same-node path
+    assert on["cross_node_fetches"] < off["cross_node_fetches"]
+    assert on["cross_node_bytes"] < off["cross_node_bytes"]
+
+
+# ---------------- takeover-aware overlap ----------------------------------------
+
+
+def test_takeover_gather_overlaps_inflight_step(tiny_params_cache):
+    """Admitting into a draining slot while a step ticket is in flight
+    snapshots the old rows behind that step — the gather counts toward
+    the overlap window instead of stalling the next dispatch."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    a = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                 gamma_max=0, prefill_chunk=8, base_seed=7)
+    s0 = _seq("r0", range(2, 12), 8, seed=3)
+    s1 = _seq("r1", range(3, 11), 12, seed=4)
+    a.admit(s0)
+    a.admit(s1)
+    while s0.prefilling or s1.prefilling:
+        a.run_step()
+    for _ in range(3):
+        a.run_step()
+    a.release_async(a.slots.index(s0))
+    ticket = a.dispatch_step()              # steps s1; ticket in flight
+    assert a.export_overlapped_slots == 0
+    s2 = _seq("r2", range(4, 10), 4, seed=5)
+    a.admit(s2)                             # takeover while in flight
+    assert a.takeover_admits == 1
+    assert a.export_overlapped_slots == 1   # gather rode the window
+    a.commit_step(ticket)
+    blobs = a.flush_exports()               # early-gathered blob surfaces
+    assert list(blobs) == ["r0"]
+    assert blobs["r0"].next_pos == s0.next_pos
+    _run_to_completion(a, [s1, s2])
+    # the takeover's import/clear landed after the snapshot: r2 is sane
+    assert len(s2.generated) == 4
+
+
+def test_rollout_overlap_includes_takeover_gathers(tiny_params_cache):
+    """The restructured tick (dispatch -> admit -> flush -> commit) runs
+    admissions and export flushes inside the overlap window, so a
+    takeover-exercising chunked rollout keeps a high measured overlap
+    fraction."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    prompts = [[(5 * g + j) % 17 + 2 for j in range(6 + 2 * g)]
+               for g in range(3)]
+    ro = SeerRollout(cfg, params, n_instances=1, max_slots=2,
+                     cache_len=96, chunk_size=5, prefill_chunk=8,
+                     policy="seer", spec_decode=False, base_seed=7,
+                     steps=steps)
+    groups = make_groups(prompts, group_size=2, max_new_tokens=15, seed=5)
+    res = ro.run(groups)
+    takeovers = sum(i.takeover_admits for i in ro.instances)
+    assert res.stats.chunks > len(prompts) * 2
+    assert takeovers > 0
+    assert ro.measured_export_overlap() > 0.3
+
+
 # ---------------- fuzz: randomized schedules vs the sync oracle ------------------
 
 

@@ -1,0 +1,310 @@
+"""Tree speculation: builder invariants, ancestor-mask correctness,
+top_k=1 exactness vs the linear path and the sync oracle, branch
+rescues, the tree-mode MBA controller and per-branch β statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SeerRollout, make_groups
+from repro.core.context import ContextManager
+from repro.core.mba import mba_tree_paths
+from repro.core.sdmodel import (TPU_V5E, ForwardCostModel,
+                                SDThroughputModel)
+from repro.engine import (EngineSeq, Instance, StepFunctions, TokenTree,
+                          build_token_tree, chain_tree)
+
+ARCHS = ["granite-3-8b", "mamba2-370m", "zamba2-1.2b"]
+
+
+def _seq(rid, prompt, n, temp=1.0, seed=3):
+    return EngineSeq(rid, "g0", list(prompt), seed=seed, temperature=temp,
+                     max_new_tokens=n)
+
+
+# ---------------- tree builder --------------------------------------------------
+
+
+def test_build_token_tree_merges_shared_prefixes():
+    t = build_token_tree([[1, 2, 3], [1, 2, 4], [5]])
+    assert len(t) == 5                       # 1,2 shared; 3,4,5 distinct
+    assert t.max_depth == 3
+    # topological: parents precede children
+    for j, p in enumerate(t.parent):
+        assert p < j
+    # depth consistency
+    for j, p in enumerate(t.parent):
+        assert t.depth[j] == (1 if p < 0 else t.depth[p] + 1)
+    # children of one node carry distinct tokens (acceptance chains)
+    kids = {}
+    for j, p in enumerate(t.parent):
+        assert t.tokens[j] not in kids.get(p, set())
+        kids.setdefault(p, set()).add(t.tokens[j])
+
+
+def test_build_token_tree_budget_prefers_trunk():
+    t = build_token_tree([[1, 2, 3, 4], [9, 8]], max_nodes=4)
+    assert t.tokens == [1, 2, 3, 4]          # rank 0 funded first
+    assert t.is_chain()
+
+
+def test_chain_tree_is_chain_and_winner_rank():
+    t = chain_tree([7, 8, 9])
+    assert t.is_chain() and t.max_depth == 3
+    assert t.winner_rank([7, 8]) == 0
+    assert t.winner_rank([]) is None
+    t2 = build_token_tree([[1, 2], [1, 3]])
+    assert t2.winner_rank([1, 3]) == 1
+    assert t2.winner_rank([1, 2]) == 0
+
+
+def test_ancestors_or_self_paths():
+    t = build_token_tree([[1, 2, 3], [1, 4]])
+    anc = t.ancestors_or_self()
+    for j, path in enumerate(anc):
+        assert path[-1] == j
+        # walking parents reproduces the path
+        node, seen = j, []
+        while node >= 0:
+            seen.append(node)
+            node = t.parent[node]
+        assert list(reversed(seen)) == path
+
+
+# ---------------- ancestor mask vs dense reference ------------------------------
+
+
+def test_model_attention_allowed_mask_matches_tree_ref():
+    """The model-side allowed-mask path and the kernel-side dense tree
+    reference implement the same masking contract."""
+    from repro.kernels.spec_verify.ref import tree_verify_ref
+    from repro.models.attention import attention
+    rng = np.random.default_rng(0)
+    B, T, S, H, D = 2, 4, 64, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    anchor = 10
+    q_pos = jnp.asarray(
+        np.tile([anchor, anchor + 1, anchor + 1, anchor + 2], (B, 1)),
+        jnp.int32)
+    k_pos = np.full((B, S), -1, np.int32)
+    k_pos[:, :anchor + 1] = np.arange(anchor + 1)
+    for c in range(1, T):
+        k_pos[:, anchor + c] = np.asarray(q_pos)[:, c]
+    k_pos = jnp.asarray(k_pos)
+    allow = np.zeros((B, T, S), bool)
+    allow[:, :, :anchor + 1] = True          # committed prefix
+    # tree: col1, col2 siblings under col0; col3 child of col1
+    for c, anc_cols in enumerate([[0], [0, 1], [0, 2], [0, 1, 3]]):
+        for a in anc_cols:
+            allow[:, c, anchor + a if a else anchor] = True
+    allow = jnp.asarray(allow)
+    ref = tree_verify_ref(q, k, v, q_pos, k_pos, allow)
+    # attention() takes the final mask verbatim: combine as forward does
+    base = (np.asarray(k_pos)[:, None, :] >= 0) & \
+        (np.asarray(k_pos)[:, None, :] <= np.asarray(q_pos)[:, :, None])
+    out = attention(q, k, v, q_pos, k_pos,
+                    allowed_mask=jnp.asarray(base) & allow)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5)
+
+
+# ---------------- engine: top_k=1 bit-exactness ---------------------------------
+
+
+def _drive(inst, slot, seq, drafts_fn):
+    i = 0
+    while not seq.finished:
+        inst.run_step(drafts_fn(inst, slot, seq, i))
+        i += 1
+        assert i < 500
+    return list(seq.generated)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_tree_chain_bit_exact_vs_linear_and_sync(arch, tiny_params_cache):
+    """Property: tree mode with single-path trees commits exactly the
+    tokens of the linear fused path AND the sync host-accept oracle,
+    under oracle and garbage drafts, on transformer/SSM/hybrid."""
+    cfg, params = tiny_params_cache(arch)
+    steps = StepFunctions(cfg)
+    prompt = list(range(2, 14))
+
+    def run(mode, spec_mode, drafts_fn):
+        inst = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                        gamma_max=4, prefill_chunk=8, prefill_mode=mode,
+                        spec_mode=spec_mode, base_seed=7)
+        seq = _seq("r0", prompt, 12)
+        slot = inst.admit(seq)
+        return _drive(inst, slot, seq, drafts_fn)
+
+    ref = run("sync", "linear", lambda *a: {})
+
+    def drafts(inst, slot, seq, i):
+        if seq.prefilling or not inst.decode_slots():
+            return {}
+        k = len(seq.generated)
+        if i % 3 == 2 and seq.generated:
+            return {slot: [(seq.generated[-1] + 13) % cfg.vocab_size] * 3}
+        return {slot: list(ref[k:k + 3])}
+
+    def tree_drafts(inst, slot, seq, i):
+        return {s: chain_tree(v)
+                for s, v in drafts(inst, slot, seq, i).items()}
+
+    assert run("batched", "linear", drafts) == ref
+    assert run("batched", "tree", tree_drafts) == ref
+    assert run("batched", "tree", lambda *a: {}) == ref
+
+
+def test_branch_rescue_accepts_side_path(tiny_params_cache):
+    """A tree whose trunk is garbage but whose side branch matches the
+    model must accept along the branch — more tokens per step than the
+    linear path given the same (bad-trunk) draft budget."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    steps = StepFunctions(cfg)
+    prompt = list(range(2, 12))
+
+    inst0 = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                     gamma_max=4, prefill_chunk=8, base_seed=7)
+    s0 = _seq("ref", prompt, 14)
+    inst0.admit(s0)
+    ref = _drive(inst0, 0, s0, lambda *a: {})
+
+    rescued = [0]
+
+    def branch_drafts(inst, slot, seq, i):
+        if seq.prefilling or not inst.decode_slots():
+            return {}
+        k = len(seq.generated)
+        good = list(ref[k:k + 2])
+        if not good:
+            return {}
+        bad = [(x + 7) % cfg.vocab_size for x in good]
+        return {slot: build_token_tree([bad, good])}
+
+    inst = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                    gamma_max=4, prefill_chunk=8, spec_mode="tree",
+                    base_seed=7)
+    seq = _seq("r0", prompt, 14)
+    slot = inst.admit(seq)
+    i = 0
+    while not seq.finished:
+        d = branch_drafts(inst, slot, seq, i)
+        out = inst.run_step(d)
+        if slot in out and d:
+            t = d[slot]
+            n_acc = out[slot][2]
+            if n_acc > 0:
+                toks = out[slot][0]
+                assert t.winner_rank(toks[:n_acc]) == 1  # the rescue
+                rescued[0] += 1
+        i += 1
+        assert i < 500
+    assert seq.generated == ref
+    assert rescued[0] > 0, "no step accepted along the side branch"
+    assert inst.tree_branch_nodes > 0
+
+
+def test_branching_tree_rejected_on_ssm(tiny_params_cache):
+    cfg, params = tiny_params_cache("mamba2-370m")
+    steps = StepFunctions(cfg)
+    inst = Instance(cfg, params, steps, max_slots=1, cache_len=128,
+                    gamma_max=4, prefill_chunk=8, spec_mode="tree",
+                    base_seed=7)
+    seq = _seq("r0", range(2, 10), 6)
+    slot = inst.admit(seq)
+    while seq.prefilling:
+        inst.run_step()
+    with pytest.raises(ValueError, match="attention-only"):
+        inst.run_step({slot: build_token_tree([[1, 2], [1, 3], [4]])})
+
+
+# ---------------- rollout: tree mode end-to-end ---------------------------------
+
+
+def test_rollout_tree_mode_token_exact(tiny_params_cache):
+    """Divided rollout outputs are invariant to spec_mode (losslessness)
+    and tree mode actually verifies branching trees."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    prompts = [[3, 1, 4, 1], [5, 9, 2, 6]]
+
+    def run(**kw):
+        ro = SeerRollout(cfg, params, n_instances=1, max_slots=2,
+                         cache_len=128, chunk_size=100, policy="seer",
+                         spec_decode=True, base_seed=7, **kw)
+        groups = make_groups(prompts, group_size=2, max_new_tokens=20,
+                             seed=5)
+        res = ro.run(groups)
+        return res.responses(), ro
+
+    base, _ = run(spec_mode="linear")
+    tree1, _ = run(spec_mode="tree", multipath_top_k=1)
+    tree3, ro3 = run(spec_mode="tree", multipath_top_k=3)
+    assert tree1 == base
+    assert tree3 == base
+    assert sum(i.tree_nodes for i in ro3.instances) > 0
+    assert ro3.ctx.stats()["branch_beta"][0] <= 1.0
+
+
+# ---------------- MBA tree controller -------------------------------------------
+
+
+def test_mba_tree_paths_collapse_to_linear_without_rescues():
+    beta = [0.7 * 0.85 ** i for i in range(9)] + [0.0]
+    assert mba_tree_paths(4, beta, [1.0, 0.0, 0.0], 4, 8) == (4,)
+
+
+def test_mba_tree_paths_fund_branch_when_rescue_high():
+    beta = [0.6 * 0.85 ** i for i in range(9)] + [0.0]
+    budgets = mba_tree_paths(6, beta, [1.0, 0.45, 0.3], 3, 8)
+    assert sum(budgets) == 6                 # equal token budget
+    assert len(budgets) >= 2                 # side branch funded
+    assert budgets[0] >= budgets[1]          # trunk keeps the lead
+    # the branch's conditional continuation outbids the trunk's decayed
+    # tail: the budget moves tail tokens, not the trunk's first ones
+    lin = mba_tree_paths(6, beta, [1.0, 0.0, 0.0], 3, 8)
+    assert lin == (6,) and budgets[0] < 6
+
+
+def test_mba_tree_paths_budget_conserved_and_capped():
+    beta = [0.9] * 9 + [0.0]
+    budgets = mba_tree_paths(20, beta, [1.0, 0.5, 0.4, 0.3], 4, 4)
+    assert sum(budgets) <= 20
+    assert all(d <= 4 for d in budgets)
+
+
+def test_expected_tokens_tree_monotone_in_branches():
+    sd = SDThroughputModel(
+        ForwardCostModel(__import__("repro.configs",
+                                    fromlist=["get_config"])
+                         .get_config("granite-3-8b"), TPU_V5E))
+    lin = sd.expected_tokens(0.6, 4)
+    tre = sd.expected_tokens_tree(0.6, (4, 2), [1.0, 0.3])
+    assert tre > sd.expected_tokens_tree(0.6, (4,), [1.0]) == lin
+    assert tre <= 7.0                        # budget+bonus bound
+
+
+# ---------------- per-branch β statistics ---------------------------------------
+
+
+def test_record_tree_verification_updates_branch_beta():
+    ctx = ContextManager(max_gen_length=64)
+    b1_0 = ctx.branch_beta[1]
+    b3_0 = ctx.branch_beta[3]
+    for _ in range(50):
+        ctx.record_tree_verification(1, n_drafted=3, n_accepted=2,
+                                     n_ranks=3)
+    assert ctx.branch_beta[1] > b1_0         # rescues raise rank 1
+    assert ctx.branch_beta[2] < 0.05         # offered but never rescued
+    # rank 3 was never offered: its optimistic prior (the exploration
+    # budget) must survive untouched
+    assert ctx.branch_beta[3] == b3_0
+    assert ctx.branch_beta[0] == pytest.approx(
+        max(0.0, 1.0 - sum(ctx.branch_beta[1:])))
+    # misses count against the trunk, not the branches
+    b1 = ctx.branch_beta[1]
+    ctx.record_tree_verification(None, n_drafted=3, n_accepted=0,
+                                 n_ranks=3)
+    assert ctx.branch_beta[1] < b1
