@@ -530,10 +530,145 @@ def bench_engine_tree(n_groups: int = 3, group_size: int = 4,
     }
 
 
+def bench_train_overlap(n_groups: int = 3, group_size: int = 2,
+                        max_new_tokens: int = 8, iterations: int = 3,
+                        n_instances: int = 2, max_slots: int = 2,
+                        seed: int = 3) -> dict:
+    """Bounded-staleness rollout<->train overlap on a tiny RL pipeline.
+
+    Three modes over the same workload (n_groups * group_size requests
+    per iteration on n_instances * max_slots slots — deliberately
+    non-tiling, so the final admission wave leaves idle slots = tail
+    bubbles the streaming loop can pack):
+
+    * ``sync``      — the strict barrier loop (rollout → train →
+      refresh), the oracle,
+    * ``stream_s0`` — the streaming loop at ``staleness_bound=0``:
+      injection can never fire, so it must be token- AND loss-exact
+      with ``sync`` (``staleness0_token_exact`` gates it),
+    * ``stream_s1`` — ``staleness_bound=1``: next-iteration prompts
+      inject into tail bubbles, finished iterations train mid-stream,
+      and the in-flight weight refresh re-anchors live slots; the
+      ledger proves no trained token exceeded the bound.
+
+    A divided-mode simulator run of the same shape reports the
+    barrier-stall seconds the overlap reclaims at cluster scale.
+    """
+    import dataclasses as _dc
+
+    from repro.data.tasks import make_task
+    from repro.training.loop import RLConfig, RLTrainer
+    from repro.configs import get_tiny_config
+
+    cfg = _dc.replace(get_tiny_config("granite-3-8b"), vocab_size=32)
+    task = make_task("copy", 32, prompt_len=4,
+                     response_len=max_new_tokens, content_vocab=8)
+
+    def one(**kw):
+        rl = RLConfig(n_groups=n_groups, group_size=group_size,
+                      max_new_tokens=max_new_tokens,
+                      iterations=iterations, n_instances=n_instances,
+                      max_slots=max_slots, cache_len=128,
+                      chunk_size=max_new_tokens, seed=seed,
+                      log=lambda s: None, **kw)
+        tr = RLTrainer(cfg, task, rl)
+        responses: Dict[str, list] = {}
+        orig_submit = tr.rewards.submit
+
+        def submit(rid, prompt, gen):
+            responses[rid] = list(gen)
+            return orig_submit(rid, prompt, gen)
+
+        tr.rewards.submit = submit
+        t0 = time.perf_counter()
+        hist = tr.run()
+        wall = time.perf_counter() - t0
+        steps = sum(i.steps_run for i in tr.rollout.instances)
+        total_led = tr.ledger.total_tokens()
+        rec = {
+            "wall_seconds": wall,
+            "losses": [h.loss for h in hist],
+            "mean_rewards": [h.mean_reward for h in hist],
+            "tokens": sum(h.tokens for h in hist),
+            "host_syncs_per_step":
+                tr.rollout.steps.host_syncs / max(steps, 1),
+            "max_staleness": tr.ledger.max_staleness,
+            "stale_token_frac":
+                (1.0 - tr.ledger.total_tokens(0) / total_led)
+                if total_led else 0.0,
+        }
+        return rec, responses, tr
+
+    sync, sync_resp, _ = one()
+    s0, s0_resp, _ = one(async_overlap=True, staleness_bound=0)
+    s1, s1_resp, tr1 = one(async_overlap=True, staleness_bound=1)
+    stats1 = [r.stats for r in tr1.stream_results]
+    overlap = {
+        "streams": len(stats1),
+        "overlap_steps": sum(s.overlap_steps for s in stats1),
+        "reclaimed_rows": sum(s.reclaimed_rows for s in stats1),
+        "refreshes": sum(s.refreshes for s in stats1),
+        "injected_groups": sum(s.injected_groups for s in stats1),
+        "reval_tokens": sum(s.reval_tokens for s in stats1),
+        "reval_accepted": sum(s.reval_accepted for s in stats1),
+    }
+
+    # cluster-scale barrier stall (divided-mode sim, same shape idea):
+    # how many instance-seconds the iteration barrier wastes, and what
+    # the bounded-staleness overlap reclaims
+    spec = _dc.replace(MOONLIGHT, n_requests=24, group_size=4,
+                       n_instances=2, max_gen_length=4096,
+                       mean_gen_length=1200)
+    wl = make_workload(spec, seed=seed)
+    skw = dict(mode="divided", policy="seer", max_slots=8,
+               chips_per_instance=1, kv_capacity_tokens=40_000,
+               chunk_size=512)
+    scfg = get_config("yi-6b")
+    r_sync = ClusterSimulator(scfg, spec, SimConfig(**skw)).run(wl)
+    r_async = ClusterSimulator(
+        scfg, spec, SimConfig(**skw, async_overlap=True)).run(wl)
+    sim_barrier = {
+        "barrier_stall_seconds":
+            r_sync.extras["barrier_stall_seconds"],
+        "barrier_stall_reclaimed":
+            r_async.extras["barrier_stall_reclaimed"],
+        "effective_speedup":
+            r_sync.total_time
+            / max(r_async.extras["effective_time"], 1e-9),
+    }
+
+    return {
+        "workload": {
+            "n_groups": n_groups, "group_size": group_size,
+            "max_new_tokens": max_new_tokens, "iterations": iterations,
+            "n_instances": n_instances, "max_slots": max_slots,
+            "seed": seed,
+        },
+        "sync": sync,
+        "stream_s0": s0,
+        "stream_s1": s1,
+        "staleness0_token_exact":
+            sync_resp == s0_resp and sync["losses"] == s0["losses"],
+        "overlap": overlap,
+        "sim_barrier": sim_barrier,
+    }
+
+
 _ENGINE_ROLLOUT_CACHE: Optional[dict] = None
 _ENGINE_MIGRATION_CACHE: Optional[dict] = None
 _ENGINE_TOPOLOGY_CACHE: Optional[dict] = None
 _ENGINE_TREE_CACHE: Optional[dict] = None
+_TRAIN_OVERLAP_CACHE: Optional[dict] = None
+
+
+def ensure_train_overlap_record() -> dict:
+    """Run the train-overlap benchmark once per process and write it to
+    BENCH_rollout.json's 'train_overlap' section."""
+    global _TRAIN_OVERLAP_CACHE
+    if _TRAIN_OVERLAP_CACHE is None:
+        _TRAIN_OVERLAP_CACHE = bench_train_overlap()
+        update_bench_rollout("train_overlap", _TRAIN_OVERLAP_CACHE)
+    return _TRAIN_OVERLAP_CACHE
 
 
 def ensure_engine_tree_record() -> dict:

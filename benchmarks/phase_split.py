@@ -14,7 +14,8 @@ from repro.core.sdmodel import H800
 
 from benchmarks.common import DEPLOY, SPECS, \
     ensure_engine_migration_record, ensure_engine_rollout_record, \
-    run_sim, save_result, table, update_bench_rollout, workload
+    ensure_train_overlap_record, run_sim, save_result, table, \
+    update_bench_rollout, workload
 
 TRAIN_MFU = 0.35                  # Megatron-style large-model training MFU
 BCAST_BW = 25e9                   # checkpoint-engine effective bytes/s
@@ -55,6 +56,7 @@ def run(workloads=("moonlight", "qwen2-vl-72b", "kimi-k2"), seed=0):
     try:
         ensure_engine_rollout_record()
         ensure_engine_migration_record()
+        ensure_train_overlap_record()
     except Exception as e:  # noqa: BLE001 - report-and-continue CLI
         print(f"[phase_split] engine rollout bench failed: {e}", flush=True)
     update_bench_rollout("phase_split", {

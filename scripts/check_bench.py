@@ -94,11 +94,13 @@ def main(argv=None) -> int:
     base_mig = _section(args.baseline, "engine_migration")
     base_topo = _section(args.baseline, "engine_topology")
     base_tree = _section(args.baseline, "engine_tree")
+    base_ovl = _section(args.baseline, "train_overlap")
     if args.fresh:
         fresh = _section(args.fresh, "engine")
         fresh_mig = _section(args.fresh, "engine_migration")
         fresh_topo = _section(args.fresh, "engine_topology")
         fresh_tree = _section(args.fresh, "engine_tree")
+        fresh_ovl = _section(args.fresh, "train_overlap")
     else:
         # the benchmarks package lives at the repo root, one level up
         sys.path.insert(0, os.path.dirname(os.path.dirname(
@@ -106,11 +108,13 @@ def main(argv=None) -> int:
         from benchmarks.common import (bench_engine_migration,
                                        bench_engine_rollout,
                                        bench_engine_topology,
-                                       bench_engine_tree)
+                                       bench_engine_tree,
+                                       bench_train_overlap)
         fresh = bench_engine_rollout()
         fresh_mig = bench_engine_migration()
         fresh_topo = bench_engine_topology()
         fresh_tree = bench_engine_tree()
+        fresh_ovl = bench_train_overlap()
 
     if fresh.get("workload") != base.get("workload"):
         print("[check_bench] FAIL workload mismatch: fresh "
@@ -142,6 +146,7 @@ def main(argv=None) -> int:
     checks += _migration_checks(fresh_mig, base_mig, args)
     checks += _topology_checks(fresh_topo, base_topo, args)
     checks += _tree_checks(fresh_tree, base_tree, args)
+    checks += _train_overlap_checks(fresh_ovl, base_ovl, args)
     ok = True
     for name, passed, detail in checks:
         status = "ok  " if passed else "FAIL"
@@ -260,6 +265,44 @@ def _tree_checks(fresh: dict, base: dict, args) -> list:
          f"{fresh['accepted_per_step_ratio']:.3f} >= "
          f"{args.tree_ratio_slack} * "
          f"{base['accepted_per_step_ratio']:.3f}"),
+    ]
+
+
+def _train_overlap_checks(fresh: dict, base: dict, args) -> list:
+    """Gates on the bounded-staleness train-overlap benchmark.
+
+    The streaming loop at staleness_bound=0 must reproduce the sync
+    barrier loop token- and loss-exactly (the standing oracle); at
+    bound 1 the stream must actually reclaim barrier-stall work
+    (next-iteration rows packed into tail bubbles, simulator stall
+    seconds recovered) while honoring the 1-host-sync contract and the
+    staleness bound the ledger enforces."""
+    if fresh.get("workload") != base.get("workload"):
+        return [("train_overlap_workload", False,
+                 f"fresh {fresh.get('workload')} vs baseline "
+                 f"{base.get('workload')} — numbers are not comparable")]
+    s1 = fresh["stream_s1"]
+    ovl = fresh["overlap"]
+    sim = fresh["sim_barrier"]
+    return [
+        ("staleness0_token_exact",
+         fresh.get("staleness0_token_exact") is True,
+         "stream bound-0 vs sync token+loss exact: "
+         f"{fresh.get('staleness0_token_exact')}"),
+        ("overlap_reclaims_rows",
+         ovl["reclaimed_rows"] > 0 and ovl["overlap_steps"] > 0,
+         f"reclaimed rows {ovl['reclaimed_rows']} > 0 in "
+         f"{ovl['overlap_steps']} overlap steps"),
+        ("barrier_stall_reclaimed",
+         sim["barrier_stall_reclaimed"] > 0.0,
+         f"sim reclaimed {sim['barrier_stall_reclaimed']:.3f}s > 0 "
+         f"(of {sim['barrier_stall_seconds']:.3f}s stall)"),
+        ("overlap_host_syncs_per_step",
+         s1.get("host_syncs_per_step", float("inf")) <= 1.0 + 1e-9,
+         f"{s1.get('host_syncs_per_step')} <= 1"),
+        ("staleness_bound_held",
+         s1["max_staleness"] <= 1,
+         f"max trained-token staleness {s1['max_staleness']} <= 1"),
     ]
 
 

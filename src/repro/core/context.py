@@ -35,14 +35,30 @@ class ContextManager:
                  branch_ranks: int = 4, branch_init: float = 0.3):
         self.max_gen_length = max_gen_length
         self._groups: Dict[str, GroupContext] = {}
+        self._beta_positions = beta_positions
+        self._beta_init = beta_init
+        self._beta_ewma = beta_ewma
+        self._branch_ranks = branch_ranks
+        self._branch_init = branch_init
+        self.reset_acceptance()
+
+    def reset_acceptance(self) -> None:
+        """Re-initialise the acceptance profile (β, per-branch β) IN
+        PLACE, preserving group length contexts and — critically — the
+        object identity that live Schedulers hold.  Called at each
+        mid-stream weight refresh: the policy has moved, so acceptance
+        statistics gathered under the old version would mis-drive MBA
+        (a collapsed β can pin γ at 0 and never recover), but the L̂_g
+        estimates and group registrations must survive the now-soft
+        iteration boundary."""
         # β[i]: probability that draft position i is accepted (1-indexed in
         # the paper's Alg. 1; we store index 0 = position 1).  Shared across
         # groups — the paper profiles these online per workload.
-        self.beta = [beta_init * (0.85 ** i) for i in range(beta_positions)]
-        self._beta_ewma = beta_ewma
+        self.beta = [self._beta_init * (0.85 ** i)
+                     for i in range(self._beta_positions)]
         # per-position trial/accept counts for reporting
-        self._trials = [0] * beta_positions
-        self._accepts = [0] * beta_positions
+        self._trials = [0] * self._beta_positions
+        self._accepts = [0] * self._beta_positions
         # per-branch β for tree speculation: branch_beta[r] (r >= 1) is
         # the EWMA probability that a verify step's accepted chain left
         # the rank-0 trunk and followed the rank-r candidate path
@@ -52,9 +68,10 @@ class ContextManager:
         # near-zero rescue rate never earns draft tokens, so low branch
         # diversity degrades tree mode gracefully back to linear.
         self.branch_beta = [1.0] + \
-            [branch_init * (0.5 ** (r - 1)) for r in range(1, branch_ranks)]
-        self._branch_trials = [0] * branch_ranks
-        self._branch_wins = [0] * branch_ranks
+            [self._branch_init * (0.5 ** (r - 1))
+             for r in range(1, self._branch_ranks)]
+        self._branch_trials = [0] * self._branch_ranks
+        self._branch_wins = [0] * self._branch_ranks
 
     # -- group length context --------------------------------------------------
 

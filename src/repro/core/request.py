@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 class ReqState(enum.Enum):
@@ -49,6 +49,12 @@ class RolloutRequest:
     chunks_run: int = 0
     migrations: int = 0
     preemptions: int = 0
+    # staleness ledger: run-length encoding of the param version each
+    # generated token was sampled under — [(version, n_tokens), ...] in
+    # generation order.  A request that lives across an in-flight weight
+    # refresh carries several runs; the trainer expands them to
+    # per-token staleness masks.  Empty = everything at version 0.
+    version_runs: List[Tuple[int, int]] = field(default_factory=list)
     # timestamps (wall or simulated)
     t_submitted: float = 0.0
     t_first_scheduled: Optional[float] = None
@@ -70,6 +76,29 @@ class RolloutRequest:
     def finish(self, now: float) -> None:
         self.state = ReqState.FINISHED
         self.t_finished = now
+
+    def note_version_tokens(self, version: int, n: int) -> None:
+        """Record ``n`` newly committed tokens sampled under param
+        ``version`` (merged into the last run when contiguous)."""
+        if n <= 0:
+            return
+        if self.version_runs and self.version_runs[-1][0] == version:
+            v, k = self.version_runs[-1]
+            self.version_runs[-1] = (v, k + n)
+        else:
+            self.version_runs.append((version, n))
+
+    def token_versions(self) -> List[int]:
+        """Per-token param versions, expanded from the run-length ledger
+        and padded with version 0 if the ledger is short (tokens from
+        before ledger tracking began are version 0 by construction)."""
+        out: List[int] = []
+        for v, k in self.version_runs:
+            out.extend([v] * k)
+        n = self.gen_len
+        if len(out) < n:
+            out = [0] * (n - len(out)) + out
+        return out[:n]
 
 
 @dataclass

@@ -57,6 +57,21 @@ class RolloutStats:
     # no pool round-trip for a request about to finish)
     inplace_renewals: int = 0
     wall_seconds: float = 0.0
+    # -- streaming / bounded-staleness accounting --------------------------
+    refreshes: int = 0           # in-flight weight refreshes survived
+    injected_groups: int = 0     # groups injected mid-stream
+    # prefix revalidation (truncate-mode refresh): old-params tokens
+    # replayed as verify drafts under the new params, and how many were
+    # re-accepted.  Excluded from drafted/accepted — they would pollute
+    # the β acceptance profile MBA budgets are driven by.
+    reval_tokens: int = 0
+    reval_accepted: int = 0
+    # tail packing: engine steps whose batch mixed requests from more
+    # than one inject epoch, and the newer-epoch rows in those steps —
+    # rows of next-iteration work that rode inside what would have been
+    # the iteration barrier's tail bubble
+    overlap_steps: int = 0
+    reclaimed_rows: int = 0
 
     @property
     def mean_acceptance(self) -> float:
@@ -98,6 +113,7 @@ class SeerRollout:
                  cst_lookup_max: int = 8,
                  pool_dram_gb: float = 4.0, base_seed: int = 0,
                  oracle_lengths: Optional[Dict[str, int]] = None,
+                 admission_rank: str = "total_delay",
                  steps: Optional[StepFunctions] = None):
         self.cfg = cfg
         self.chunk_size = chunk_size
@@ -105,12 +121,6 @@ class SeerRollout:
         self.spec_decode = spec_decode
         if spec_mode not in ("linear", "tree"):
             raise ValueError(f"spec_mode={spec_mode!r}")
-        if spec_mode == "tree" and prefill_mode != "batched":
-            # match Instance: trees only exist on the fused device
-            # path; silently downgrading would make a tree-vs-linear
-            # comparison under the sync oracle measure nothing
-            raise ValueError("spec_mode='tree' requires "
-                             "prefill_mode='batched'")
         # "tree": multi-path CST drafts are merged into token trees and
         # verified in one fused step ("linear" stays the oracle).
         # Branching within a step needs attention-only layers — SSM and
@@ -172,9 +182,41 @@ class SeerRollout:
         self.cache_len = cache_len
         self.ctx = ContextManager(max_gen_length=cache_len)
         self.sd_model = SDThroughputModel(fwd)
+        # admission ranking: "total_delay" folds the blob fetch cost and
+        # the target's queued-prefill delay into one modeled unit;
+        # "lexicographic" keeps the legacy cost-then-headroom key for
+        # the topology bench comparison
+        self.admission_rank = admission_rank
+        # modeled marginal seconds one queued prefill token adds to a
+        # mixed step — converts queue depth into the same unit as the
+        # pool's fetch cost for total-delay ranking
+        base = fwd.step_time(1, 1, 0.0)
+        mixed = fwd.mixed_step_time(1, 1, chunk_size, 0.0)
+        self._queue_cost_per_token = max(0.0, mixed - base) \
+            / max(chunk_size, 1)
         # req_id -> (instance, slot, chunk_tokens_left)
         self._placements: Dict[str, tuple] = {}
         self._reqs: Dict[str, RolloutRequest] = {}
+        # -- streaming / bounded-staleness state --------------------------
+        # current weight version the instances decode under; bumped by
+        # refresh_params so the staleness ledger can stamp every
+        # committed token with the version it was sampled at
+        self.param_version = 0
+        # live-stream handles (None outside run_stream): mid-run
+        # injection and refresh talk to the active scheduler/stats
+        self._stream_sched: Optional[Scheduler] = None
+        self._stream_stats: Optional[RolloutStats] = None
+        self._stream_groups: Optional[Dict[str, Group]] = None
+        # next-epoch tagging: requests injected mid-stream carry the
+        # inject generation, so ticks whose batch mixes epochs can be
+        # counted (the reclaimed-bubble currency of tail packing)
+        self._epoch = 0
+        self._req_epoch: Dict[str, int] = {}
+        self._injected_since_bubble = False
+        # truncate-mode refresh: released (buffered) requests rewound to
+        # their prompt stash the old-params generation here; _admit
+        # feeds it back as the slot's prefix-revalidation queue
+        self._pending_rewind: Dict[str, List[int]] = {}
 
     # -- scheduling glue ---------------------------------------------------------
 
@@ -203,8 +245,14 @@ class SeerRollout:
         policy model has moved, so stale acceptance statistics would
         mis-drive MBA (a collapsed β from an earlier iteration can pin
         γ at 0 and never recover: with no drafts there are no trials to
-        raise it)."""
-        self.ctx = ContextManager(max_gen_length=self.cache_len)
+        raise it).
+
+        Resets IN PLACE: replacing ``self.ctx`` wholesale (the old
+        behaviour) silently detached any live :class:`Scheduler` — mid-
+        stream refreshes would keep feeding L̂_g updates and acceptance
+        stats into an orphaned manager while admission ordering read the
+        new, empty one."""
+        self.ctx.reset_acceptance()
 
     def measured_export_overlap(self) -> float:
         """Fraction of exported slots whose gather was dispatched while
@@ -246,6 +294,12 @@ class SeerRollout:
             r.t_first_scheduled = time.monotonic()
         chunk = sched.chunk_tokens(r)
         self._placements[r.req_id] = (inst, slot, seq, chunk)
+        rewound = self._pending_rewind.pop(r.req_id, None)
+        if rewound:
+            # truncate-mode refresh rewound this buffered request to its
+            # prompt; replay the old-params generation as verify drafts
+            # so the still-valid prefix is re-accepted in bulk
+            seq.reval_queue = list(rewound)
         self.clients[instance_id].register_group(r.group_id)
 
     def _sync_back(self, r: RolloutRequest, seq: EngineSeq) -> None:
@@ -310,13 +364,26 @@ class SeerRollout:
     # -- drafts --------------------------------------------------------------------
 
     def _collect_drafts(self, inst: Instance) -> Dict[int, List[int]]:
-        if not self.spec_decode:
-            return {}
         # still-prefilling slots have no pending token to verify against —
         # only decode-ready slots draw drafts
         active = inst.decode_slots()
+        drafts: Dict[int, List[int]] = {}
+        # prefix revalidation first (independent of spec_decode): a slot
+        # re-anchored by a truncate-mode weight refresh replays its
+        # old-params generation as the draft chain, so the still-valid
+        # prefix is re-accepted a verify step at a time instead of one
+        # decode step per token
+        reval = set()
+        for i in active:
+            seq = inst.slots[i]
+            if seq.reval_queue:
+                drafts[i] = list(seq.reval_queue[:inst.gamma_max])
+                reval.add(i)
+        if not self.spec_decode:
+            return drafts
+        active = [i for i in active if i not in reval]
         if not active:
-            return {}
+            return drafts
         b_h = sum(1 for i in active
                   if self._reqs[inst.slots[i].req_id].speculative)
         b_l = len(active) - b_h
@@ -332,7 +399,7 @@ class SeerRollout:
             b_h, b_l, beta, self.sd_model, self.ctx.alpha, mean_ctx,
             self.mba_cfg)
         if gamma_h == 0 and gamma_l == 0:
-            return {}
+            return drafts
         use_tree = self.spec_mode == "tree"
         gids, pats, args, order = [], [], [], []
         for i in active:
@@ -363,10 +430,9 @@ class SeerRollout:
                     pattern_lookup_max=self.cst_lookup_max))
             order.append(i)
         if not gids:
-            return {}
+            return drafts
         paths = self.clients[inst.instance_id].batch_speculate(
             gids, pats, args)
-        drafts = {}
         for i, ps in zip(order, paths):
             if use_tree:
                 tree = build_token_tree(
@@ -380,21 +446,197 @@ class SeerRollout:
                     drafts[i] = best.tokens
         return drafts
 
+    # -- mid-stream control (injection / weight refresh) -------------------------
+
+    def inject(self, groups: Sequence[Group]) -> None:
+        """Add next-epoch groups to the live stream (RollPacker-style
+        tail packing): the requests enter the scheduler's buffer and ride
+        the existing ``plan_admissions`` / mixed-prefill path into
+        whatever slots the current epoch's tail leaves idle.  Only legal
+        at a :meth:`run_stream` yield point (no step ticket in flight)."""
+        if self._stream_sched is None:
+            raise RuntimeError("inject() outside an active run_stream()")
+        now = time.monotonic()
+        self._epoch += 1
+        for g in groups:
+            self._stream_groups[g.group_id] = g
+            for r in g.requests:
+                r.t_submitted = now
+                self._reqs[r.req_id] = r
+                self._req_epoch[r.req_id] = self._epoch
+        self._stream_sched.add_groups(list(groups))
+        self._stream_stats.injected_groups += len(groups)
+        self._injected_since_bubble = True
+
+    def refresh_params(self, params, *, version: Optional[int] = None,
+                       mode: str = "keep") -> None:
+        """Swap model weights while requests are in flight.
+
+        Only legal at a :meth:`run_stream` yield point (no step ticket
+        in flight).  Every KV byte in the system was computed under the
+        old params, so all of it is invalidated: pending blob imports
+        are cancelled, draining exports are flushed straight back to the
+        scheduler (never pooled), every pooled blob is dropped, and each
+        live slot is *revalidated*:
+
+        * ``mode="keep"`` — the committed tokens are kept; the slot
+          re-anchors by re-prefilling its full prefix under the new
+          params (the engine's pool-miss path).  Decoding resumes from
+          the same position; the staleness ledger records which tokens
+          predate the refresh.
+        * ``mode="truncate"`` — the slot rewinds to its prompt and the
+          old generation is replayed as verify drafts
+          (``EngineSeq.reval_queue``): the prefix the new params agree
+          with is re-accepted in bulk, the first divergence truncates
+          the rest.  Position-keyed sampling makes the result bit-exact
+          with a fresh run under the new params.
+
+        The acceptance profile resets in place (β statistics gathered
+        under the old policy must not drive the new version's MBA
+        budgets); DGDS CSTs persist — online context reuse across
+        versions is the paper's core bet, and drafts never change
+        sampled tokens.
+        """
+        if mode not in ("keep", "truncate"):
+            raise ValueError(f"refresh mode={mode!r}")
+        for inst in self.instances:
+            if inst.step_in_flight:
+                raise RuntimeError(
+                    "refresh_params() with a step ticket in flight")
+        self.param_version = self.param_version + 1 \
+            if version is None else int(version)
+        sched = self._stream_sched
+        for inst in self.instances:
+            # old-params KV must never land in the new-params cache
+            inst.cancel_pending_imports()
+            # draining slots: materialise the export (frees the slot)
+            # but requeue the request with its blob dropped — it will
+            # re-prefill under the new params at its next admission
+            blobs = inst.flush_exports()
+            for req_id in blobs:
+                if sched is not None:
+                    sched.requeue(self._reqs[req_id])
+            inst.params = params
+            for slot in inst.active_slots():
+                self._revalidate_slot(inst, slot, mode)
+        for req_id in list(self._reqs):
+            self.pool.drop(req_id)
+        if mode == "truncate":
+            # buffered (released, not-yet-readmitted) requests rewind to
+            # their prompt too; the old generation is stashed and
+            # replayed as verify drafts when the request is re-admitted
+            for r in self._reqs.values():
+                if not r.finished and r.req_id not in self._placements \
+                        and r.generated:
+                    self._pending_rewind[r.req_id] = list(r.generated)
+                    r.generated = []
+                    r.logprobs = []
+                    r.last_token = r.prompt[-1]
+                    r.next_pos = len(r.prompt) - 1
+                    r.version_runs = []
+        self.reset_acceptance_profile()
+        if self._stream_stats is not None:
+            self._stream_stats.refreshes += 1
+
+    def _revalidate_slot(self, inst: Instance, slot: int,
+                         mode: str) -> None:
+        """Re-anchor one live slot after a weight refresh (see
+        :meth:`refresh_params`)."""
+        seq = inst.slots[slot]
+        r = self._reqs.get(seq.req_id)
+        if mode == "truncate" and seq.generated:
+            seq.reval_queue = list(seq.generated)
+            seq.generated = []
+            seq.logprobs = []
+            seq.last_token = seq.prompt[-1]
+            seq.next_pos = len(seq.prompt) - 1
+            seq.prefill_queue = list(seq.prompt[:-1])
+            seq.prefill_pos = 0
+            if r is not None:
+                r.generated = []
+                r.logprobs = []
+                r.last_token = seq.last_token
+                r.next_pos = seq.next_pos
+                r.version_runs = []
+                if r.req_id in self._placements:
+                    sched = self._stream_sched
+                    chunk = sched.chunk_tokens(r) if sched is not None \
+                        else min(self.chunk_size, r.remaining_tokens)
+                    self._placements[r.req_id] = (inst, slot, seq, chunk)
+        else:
+            # keep: same committed prefix, new params — requeue a full
+            # re-prefill of [0, next_pos) exactly like the engine's
+            # pool-miss path (covers mid-prefill slots too: the queue is
+            # rebuilt from position 0)
+            seq.prefill_queue = list(
+                (seq.prompt + seq.generated)[:seq.next_pos])
+            seq.prefill_pos = 0
+        inst._clear_slot_cache(slot)
+
     # -- the main loop ---------------------------------------------------------------
 
     def run(self, groups: Sequence[Group],
             progress_every: int = 0) -> RolloutResult:
+        """Drain :meth:`run_stream` to completion — the synchronous
+        barrier view (bit-exact with the pre-streaming loop; the
+        bound-0 equivalence tests gate it)."""
+        result = None
+        for kind, payload in self.run_stream(groups,
+                                             progress_every=progress_every):
+            if kind == "result":
+                result = payload
+        return result
+
+    def run_stream(self, groups: Sequence[Group], progress_every: int = 0):
+        """Generator-shaped rollout: yields ``(kind, payload)`` events.
+
+        * ``("group", Group)`` — a GRPO group just finished (all its
+          requests done); streamed to the trainer as it completes
+          instead of waiting for the barrier.
+        * ``("bubble", info)`` — the tick ended with idle capacity the
+          scheduler cannot fill (``info`` carries ``free_slots``,
+          ``pending``, ``stalled``): the tail-packing window.  The
+          consumer may :meth:`inject` next-epoch groups here.  With
+          ``stalled=True`` nothing is running *or* placeable — if the
+          consumer does not inject, the capacity-deadlock guard raises
+          exactly as the barrier loop did.
+        * ``("result", RolloutResult)`` — final event; aggregate stats
+          over everything the stream ran (injected groups included).
+
+        Every yield happens with no step ticket in flight, so
+        :meth:`inject` and :meth:`refresh_params` are legal at ANY yield
+        point, not just bubbles.
+        """
         t0 = time.monotonic()
         stats = RolloutStats()
         sched = Scheduler(list(groups), self.ctx, policy=self.policy,
                           chunk_size=self.chunk_size,
                           oracle_lengths=self.oracle_lengths,
                           fetch_cost=(self._fetch_cost
-                                      if self.topology_aware else None))
+                                      if self.topology_aware else None),
+                          rank_mode=self.admission_rank,
+                          queue_cost_per_token=self._queue_cost_per_token)
+        all_groups = {g.group_id: g for g in groups}
+        self._stream_sched = sched
+        self._stream_stats = stats
+        self._stream_groups = all_groups
         self._reqs = {r.req_id: r for g in groups for r in g.requests}
+        self._req_epoch = {rid: self._epoch for rid in self._reqs}
+        yielded: set = set()
         for r in self._reqs.values():
             r.t_submitted = t0
 
+        try:
+            yield from self._stream_loop(sched, stats, all_groups,
+                                         yielded, t0, progress_every)
+        finally:
+            self._stream_sched = None
+            self._stream_stats = None
+            self._stream_groups = None
+
+    def _stream_loop(self, sched: Scheduler, stats: RolloutStats,
+                     all_groups: Dict[str, Group], yielded: set,
+                     t0: float, progress_every: int):
         while not sched.all_finished:
             # 1) step every instance — dispatch all device work first
             # (JAX async dispatch); everything below until the commits
@@ -413,6 +655,17 @@ class SeerRollout:
                     continue
                 any_active = True
                 tickets.append((inst, drafts, ticket))
+                if self._epoch:
+                    # tail-packing currency: a step whose batch mixes
+                    # inject epochs is running next-iteration rows in
+                    # what would have been the barrier's tail bubble
+                    eps = [self._req_epoch.get(inst.slots[i].req_id, 0)
+                           for i in inst.active_slots()]
+                    if len(set(eps)) > 1:
+                        lo = min(eps)
+                        stats.overlap_steps += 1
+                        stats.reclaimed_rows += \
+                            sum(1 for e in eps if e > lo)
 
             # 2) fill free capacity while the steps are in flight — one
             # batched scheduling cycle whose host work (scheduler picks,
@@ -445,7 +698,10 @@ class SeerRollout:
                     self._admit(sched, r, iid, stats)
                     admitted += 1
 
-            # 4) commit results and run chunk/finish bookkeeping
+            # 4) commit results and run chunk/finish bookkeeping;
+            # finished groups are buffered and yielded only after every
+            # ticket committed (no step in flight at any yield point)
+            finished_groups: List[Group] = []
             for inst, drafts, ticket in tickets:
                 out = inst.commit_step(ticket)
                 stats.steps += 1
@@ -455,17 +711,38 @@ class SeerRollout:
                     d = drafts.get(slot, [])
                     n_draft = len(d)
                     stats.tokens += len(new_toks)
-                    stats.drafted += n_draft
-                    stats.accepted += n_acc
-                    if n_draft and isinstance(d, TokenTree):
-                        # per-branch β: attribute the accepted chain to
-                        # the beam rank that drafted it (trunk misses
-                        # count against the trunk)
-                        self.ctx.record_tree_verification(
-                            d.winner_rank(new_toks[:n_acc]),
-                            d.max_depth, n_acc, n_ranks=len(d.paths))
-                    elif n_draft:
-                        self.ctx.record_verification(n_draft, n_acc)
+                    r.note_version_tokens(self.param_version,
+                                          len(new_toks))
+                    if seq.reval_queue:
+                        # prefix revalidation: the drafts came from the
+                        # old-params generation, not the CST.  Excluded
+                        # from the β profile (they measure old-policy
+                        # agreement, not CST quality).  Consume the
+                        # re-accepted prefix; any divergence — a
+                        # rejected draft, or a bonus token that departs
+                        # from the old trajectory — drops the rest.
+                        stats.reval_tokens += n_draft
+                        stats.reval_accepted += n_acc
+                        q = seq.reval_queue
+                        if seq.finished or n_acc < n_draft \
+                                or len(q) == n_draft:
+                            seq.reval_queue = []
+                        elif new_toks and q[n_draft] == new_toks[-1]:
+                            del q[:n_draft + 1]
+                        else:
+                            seq.reval_queue = []
+                    else:
+                        stats.drafted += n_draft
+                        stats.accepted += n_acc
+                        if n_draft and isinstance(d, TokenTree):
+                            # per-branch β: attribute the accepted chain
+                            # to the beam rank that drafted it (trunk
+                            # misses count against the trunk)
+                            self.ctx.record_tree_verification(
+                                d.winner_rank(new_toks[:n_acc]),
+                                d.max_depth, n_acc, n_ranks=len(d.paths))
+                        elif n_draft:
+                            self.ctx.record_verification(n_draft, n_acc)
                     if new_toks:
                         # stable speculator id: python str hash is
                         # randomized per process (PYTHONHASHSEED), which
@@ -485,6 +762,11 @@ class SeerRollout:
                         self.pool.drop(r.req_id)
                         r.finish(time.monotonic())
                         sched.on_finished(r)
+                        g = all_groups.get(r.group_id)
+                        if g is not None and g.all_finished \
+                                and r.group_id not in yielded:
+                            yielded.add(r.group_id)
+                            finished_groups.append(g)
                     elif consumed >= chunk:
                         remaining = r.max_new_tokens - len(seq.generated)
                         if self.final_chunk_inplace and \
@@ -505,12 +787,35 @@ class SeerRollout:
                             self._release(r, stats, export=True)
                             sched.requeue(r)
 
+            # 5) stream finished groups (every ticket has committed —
+            # no step in flight, so consumers may inject/refresh here)
+            for g in finished_groups:
+                yield ("group", g)
+
+            free = sum(v.free_slots for v in self._views())
             if not any_active and not freed and not admitted \
                     and not sched.all_finished:
                 # nothing running, nothing freed, nothing admitted and
-                # nothing placeable -> capacity deadlock
-                raise RuntimeError(
-                    "rollout stalled: no instance can hold the next chunk")
+                # nothing placeable.  Give the consumer one injection
+                # window (next-epoch work may fit where this epoch's
+                # chunks cannot); without an injection this is the same
+                # capacity deadlock the barrier loop raised on.
+                self._injected_since_bubble = False
+                yield ("bubble", {"free_slots": free,
+                                  "pending": sched.pending_count(),
+                                  "stalled": True})
+                if not self._injected_since_bubble:
+                    raise RuntimeError(
+                        "rollout stalled: no instance can hold the "
+                        "next chunk")
+            elif free > 0 and sched.ready_count() == 0 \
+                    and not sched.all_finished:
+                # the tail bubble: idle capacity, but every pending
+                # request is already placed — only next-epoch injection
+                # can fill these slots
+                yield ("bubble", {"free_slots": free,
+                                  "pending": sched.pending_count(),
+                                  "stalled": False})
             if progress_every and stats.steps % progress_every == 0:
                 done = len(self._reqs) - sched.pending_count()
                 print(f"[rollout] steps={stats.steps} done={done}/"
@@ -518,7 +823,14 @@ class SeerRollout:
                       f"acc={stats.mean_acceptance:.2f}")
 
         stats.wall_seconds = time.monotonic() - t0
-        return RolloutResult(
-            groups=list(groups), stats=stats,
+        result = RolloutResult(
+            groups=list(all_groups.values()), stats=stats,
             ctx_stats=self.ctx.stats(), pool_stats=self.pool.stats(),
             dgds_stats=self.server.stats())
+        for gid, g in all_groups.items():
+            # groups that were already finished at submit time (or empty)
+            # never pass through the commit loop — flush them here
+            if gid not in yielded and g.all_finished:
+                yielded.add(gid)
+                yield ("group", g)
+        yield ("result", result)

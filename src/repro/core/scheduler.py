@@ -57,7 +57,9 @@ class Scheduler:
                  starvation_every: int = 16,
                  oracle_lengths: Optional[Dict[str, int]] = None,
                  fetch_cost: Optional[
-                     Callable[[RolloutRequest, str], float]] = None):
+                     Callable[[RolloutRequest, str], float]] = None,
+                 rank_mode: str = "total_delay",
+                 queue_cost_per_token: float = 0.0):
         self.policy = policy
         self.chunk_size = chunk_size
         self.ctx = ctx
@@ -65,7 +67,18 @@ class Scheduler:
         # blob to that node (0 when it has none).  None = topology-blind
         # placement (pure load balance)
         self.fetch_cost = fetch_cost
-        self.groups = {g.group_id: g for g in groups}
+        if rank_mode not in ("total_delay", "lexicographic"):
+            raise ValueError(f"rank_mode={rank_mode!r}")
+        # placement ranking: "total_delay" folds fetch cost and queue
+        # delay into ONE modeled unit (seconds); "lexicographic" keeps
+        # the old cost-then-headroom key for the topology bench
+        # comparison
+        self.rank_mode = rank_mode
+        # modeled seconds each queued prefill token delays a newly
+        # placed chunk by (marginal mixed-step cost); 0 = queue depth
+        # doesn't enter the delay ranking
+        self.queue_cost_per_token = queue_cost_per_token
+        self.groups: Dict[str, Group] = {}
         self._starvation_every = starvation_every
         self._decisions = 0
         self._oracle = oracle_lengths or {}
@@ -75,9 +88,17 @@ class Scheduler:
         self._heap: List[tuple] = []                # fifo / sfs / lfs
         self._spec_ready: Dict[str, RolloutRequest] = {}   # seer probes
         self._buckets: Dict[str, List[tuple]] = {}  # gid -> (submit, tok, r)
-        n = 0
+        self.add_groups(groups)
+
+    def add_groups(self, groups: Sequence[Group]) -> None:
+        """Submit more groups mid-run (bounded-staleness tail packing):
+        next-epoch prompts join the ready buffer behind the existing
+        submit order and compete for slots through the normal admission
+        path — RollPacker-style bubble filling, no special casing."""
+        n = len(self._submit_order)
         for g in groups:
-            ctx.register_group(g)
+            self.groups[g.group_id] = g
+            self.ctx.register_group(g)
             for r in g.requests:
                 self._submit_order[r.req_id] = n
                 n += 1
@@ -239,13 +260,22 @@ class Scheduler:
                 continue
             cost = self.fetch_cost(r, iv.node) if self.fetch_cost else 0.0
             effective_free = iv.kv_free_tokens - iv.queued_prefill_tokens
-            # an overloaded instance (prefill backlog >= KV head-room)
-            # never wins on locality alone — a tiny blob-transfer saving
-            # must not serialize the chunk behind a deep queue while a
-            # less-loaded peer sits idle.  Under saturation (every
-            # candidate overloaded) load stays primary and locality
-            # demotes to the tie-break.
-            if effective_free > 0:
+            if self.rank_mode == "total_delay":
+                # ONE modeled unit: seconds until the chunk actually
+                # runs = blob transfer + serialization behind the
+                # queued prefill backlog.  A tiny fetch saving can no
+                # longer beat a deep queue (and vice versa) the way the
+                # lexicographic key allowed; head-room only tie-breaks.
+                delay = cost + iv.queued_prefill_tokens \
+                    * self.queue_cost_per_token
+                key = (-delay, effective_free)
+            # lexicographic (legacy): an overloaded instance (prefill
+            # backlog >= KV head-room) never wins on locality alone — a
+            # tiny blob-transfer saving must not serialize the chunk
+            # behind a deep queue while a less-loaded peer sits idle.
+            # Under saturation (every candidate overloaded) load stays
+            # primary and locality demotes to the tie-break.
+            elif effective_free > 0:
                 key = (1, -cost, effective_free)
             else:
                 key = (0, effective_free, -cost)
@@ -332,3 +362,9 @@ class Scheduler:
     def pending_count(self) -> int:
         return sum(1 for g in self.groups.values()
                    for r in g.requests if not r.finished)
+
+    def ready_count(self) -> int:
+        """Unfinished requests sitting in the buffer (not running) —
+        the streaming loop's tail-bubble probe: free slots + an empty
+        buffer means injected next-epoch prompts would be admitted."""
+        return len(self._ready())

@@ -181,6 +181,10 @@ class SimInstance:
         self.queue: List[RolloutRequest] = []   # local queue (group modes)
         self.preempted: List[SimSeq] = []
         self.busy_time = 0.0
+        # when this instance last finished productive work — the gap to
+        # the fleet-wide end time is its barrier stall (tail idle a
+        # bounded-staleness overlap would fill with next-iteration work)
+        self.last_busy_end = 0.0
         self.overhead = 0.0          # prefill/pool time owed to next segment
         # prefill tokens folded into the next segment's mixed steps
         # (divided mode: the engine batches admission prefill into decode
@@ -259,6 +263,17 @@ class SimConfig:
     # set False to model a host-accept loop paying a blocking
     # device->host sync per step (HardwareSpec.host_sync_overhead)
     fused_accept: bool = True
+    # admission ranking for the divided-mode scheduler: "total_delay"
+    # folds KV-fetch time and the queued-prefill backlog into one
+    # modeled-delay unit; "lexicographic" is the legacy two-level key
+    admission_rank: str = "total_delay"
+    # bounded-staleness rollout<->train overlap: instances that drain
+    # early no longer idle at the iteration barrier — next-iteration
+    # prompts pack the tail.  barrier_reclaim is the fraction of the
+    # measured barrier stall (per-instance tail idle) the overlap
+    # actually recovers; calibrate with with_measured_barrier().
+    async_overlap: bool = False
+    barrier_reclaim: float = 1.0
 
     def with_measured_overlap(self, fraction: float) -> "SimConfig":
         """Calibrate ``migration_overlap`` from an engine's measured
@@ -268,6 +283,17 @@ class SimConfig:
         import dataclasses as _dc
         return _dc.replace(
             self, migration_overlap=min(max(float(fraction), 0.0), 1.0))
+
+    def with_measured_barrier(self, fraction: float) -> "SimConfig":
+        """Calibrate the async-overlap reclaim fraction from an engine's
+        measured tail-packing efficiency (reclaimed rows per overlap
+        step, :class:`~repro.core.rollout.RolloutStats`), enabling
+        ``async_overlap`` so barrier-stall accounting reports reclaimed
+        instance-seconds and the effective iteration time."""
+        import dataclasses as _dc
+        return _dc.replace(
+            self, async_overlap=True,
+            barrier_reclaim=min(max(float(fraction), 0.0), 1.0))
 
 
 @dataclass
@@ -495,10 +521,17 @@ class ClusterSimulator:
         self._node_of = {i.iid: i.node for i in instances}
         fetch_cost = self._make_fetch_cost() \
             if (sim.mode == "divided" and sim.topology_aware) else None
+        # queued-prefill delay per token for the total-delay ranking:
+        # the marginal mixed-step cost of folding one chunk token into a
+        # decode forward (same unit the engine tier derives)
+        q_cost = max(0.0, self.fwd.mixed_step_time(1, 1, chunk, 0.0)
+                     - self.fwd.step_time(1, 1, 0.0)) / max(chunk, 1)
         sched = Scheduler(groups, ctxmgr, policy=policy, chunk_size=chunk,
                           oracle_lengths=(true_len if policy in
                                           ("lfs", "sfs") else None),
-                          fetch_cost=fetch_cost)
+                          fetch_cost=fetch_cost,
+                          rank_mode=sim.admission_rank,
+                          queue_cost_per_token=q_cost)
         self._assign_static(groups, instances, true_len)
 
         group_refs: Dict[str, int] = {}     # completed requests per group
@@ -531,6 +564,7 @@ class ClusterSimulator:
             t0, dur, n_tok = inst._seg
             if n_tok:
                 inst.busy_time += dur
+                inst.last_busy_end = now
                 for rid in list(inst.running):
                     s = inst.running[rid]
                     take = min(n_tok, s.total_left, s.chunk_left)
@@ -609,6 +643,17 @@ class ClusterSimulator:
         spread = (max(last_by_inst.values()) - min(last_by_inst.values())) \
             / max(t_end, 1e-9) if len(last_by_inst) > 1 else 0.0
         steps = max(self._seg_stats["steps"], 1.0)
+        # barrier-stall accounting: instance-seconds of tail idle between
+        # each instance's last productive segment and the iteration
+        # barrier.  async_overlap models bounded-staleness tail packing —
+        # barrier_reclaim of that stall is filled with next-iteration
+        # work, shrinking the amortized per-iteration wall time by the
+        # reclaimed seconds spread over the fleet.
+        barrier_stall = sum(max(0.0, t_end - i.last_busy_end)
+                            for i in instances)
+        reclaimed = barrier_stall * sim.barrier_reclaim \
+            if sim.async_overlap else 0.0
+        effective_time = t_end - reclaimed / max(len(instances), 1)
         return SimResult(
             total_time=t_end, tokens=tokens, n_requests=len(completion),
             completion_times=comp, output_lengths=out_lens,
@@ -628,6 +673,9 @@ class ClusterSimulator:
                     self._seg_stats["mig_cross_bytes"],
                 "migration_batches": self._seg_stats["mig_batches"],
                 "busy_frac": busy / max(t_end * len(instances), 1e-9),
+                "barrier_stall_seconds": barrier_stall,
+                "barrier_stall_reclaimed": reclaimed,
+                "effective_time": effective_time,
             })
 
     # -- placement -----------------------------------------------------------------

@@ -216,6 +216,36 @@ class StepFunctions:
         self._step_cache[T] = counted
         return counted
 
+    def tree_step(self, T: int):
+        """Reference *tree* step (no donation, host-side acceptance):
+        (params, cache, tokens(B,T), positions(B,T), slot_index(B,T),
+        mask(B,T), within(B,T,T), keys, temps, sample_rows(B,)) ->
+        (sampled(B,T), logprobs(B,T), new_cache).
+
+        The forward is identical to :meth:`fused_tree_step`'s; acceptance,
+        the winning-branch KV compaction and node-slot invalidation run on
+        the *host* (``_run_step_sync_tree``) so branching tree steps can be
+        cross-checked token-exactly against the fused path."""
+        key = ("tree_ref", T)
+        if key in self._step_cache:
+            return self._step_cache[key]
+        cfg = self.cfg
+
+        @jax.jit
+        def fn(params, cache, tokens, positions, slot_index, mask,
+               within, keys, temps, sample_rows):
+            logits, new_cache, _ = forward(
+                cfg, params, tokens, positions, cache, token_mask=mask,
+                slot_index=slot_index, within_mask=within)
+            logits = logits.astype(jnp.float32)
+            sampled = sample_tokens(logits, keys, temps, sample_rows)
+            lp = token_logprobs_at(logits, sampled)
+            return sampled, lp, new_cache
+
+        counted = self._counted(fn, f"tree_ref:{T}")
+        self._step_cache[key] = counted
+        return counted
+
     def fused_step(self, T: int):
         """Device-resident step with donated cache and on-device
         accept/commit.
@@ -537,6 +567,12 @@ class EngineSeq:
     # state, so KV accounting sees the full footprint from admission.
     prefill_queue: List[int] = field(default_factory=list)
     prefill_pos: int = 0
+    # prefix-revalidation queue (truncate-mode weight refresh): tokens
+    # generated under the OLD params, replayed as verify drafts under
+    # the new ones — accepted prefixes are re-committed without paying a
+    # decode step per token, and the first divergence drops the rest.
+    # Consumed by the rollout's draft collection; empty in steady state.
+    reval_queue: List[int] = field(default_factory=list)
 
     @property
     def prefilling(self) -> bool:
@@ -621,6 +657,29 @@ class _SyncTicket:
     out: Dict[int, Tuple[List[int], List[float], int]]
 
 
+@dataclass
+class _TreeBatch:
+    """One built tree-verify step batch, shared by the fused device path
+    and the sync reference path (identical layout => token-exact
+    cross-checks)."""
+    T: int
+    fused: List[int]
+    anchors: Dict[int, int]
+    trees: Dict[int, TokenTree]
+    n_tree_nodes: int
+    tokens: np.ndarray
+    positions: np.ndarray
+    slot_index: np.ndarray
+    mask: np.ndarray
+    within: np.ndarray
+    temps: np.ndarray
+    seeds: np.ndarray
+    sample_rows: np.ndarray
+    anchor: np.ndarray
+    parent: np.ndarray
+    depth: np.ndarray
+
+
 class Instance:
     """One inference instance (a model replica with its own KV buffer)."""
 
@@ -640,11 +699,6 @@ class Instance:
             raise ValueError(f"prefill_mode={prefill_mode!r}")
         if spec_mode not in ("linear", "tree"):
             raise ValueError(f"spec_mode={spec_mode!r}")
-        if spec_mode == "tree" and prefill_mode != "batched":
-            # the sync reference path keeps host-side linear acceptance
-            # as the oracle; trees only exist on the fused device path
-            raise ValueError("spec_mode='tree' requires "
-                             "prefill_mode='batched'")
         if migration_mode is None:
             # the sync reference path keeps the PR 2 per-slot moves
             migration_mode = "perslot" if prefill_mode == "sync" \
@@ -941,6 +995,21 @@ class Instance:
         self._export_buffer.clear()
         out.update(self._gather_exports())
         return out
+
+    def cancel_pending_imports(self) -> List[int]:
+        """Drop every queued KV-blob import without scattering it into
+        the cache (weight refresh: the blobs hold KV computed under the
+        OLD params and must not land under the new ones).  Returns the
+        slots whose import was cancelled; their seqs still carry
+        ``next_pos > 0`` with an empty prefill queue, so the caller must
+        re-queue a full re-prefill (the pool-miss path) or truncate."""
+        slots = [s for s, _ in self._pending_imports]
+        self._pending_imports.clear()
+        return slots
+
+    @property
+    def step_in_flight(self) -> bool:
+        return self._inflight is not None
 
     def _gather_exports(self, only: Optional[set] = None
                         ) -> Dict[str, KVBlob]:
@@ -1360,6 +1429,40 @@ class Instance:
         Widths are bucketed with the same ladder as linear gamma so
         compiled step shapes stay bounded.
         """
+        bt = self._build_tree_batch(decode, plan, drafts)
+        keys = position_keys(self.base_key, jnp.asarray(bt.seeds),
+                             jnp.asarray(bt.positions))
+        fn = self.steps.fused_tree_step(bt.T)
+        sampled, lps, n_acc, self.cache = fn(
+            self.params, self.cache, jnp.asarray(bt.tokens),
+            jnp.asarray(bt.positions), jnp.asarray(bt.slot_index),
+            jnp.asarray(bt.mask), jnp.asarray(bt.within), keys,
+            jnp.asarray(bt.temps), jnp.asarray(bt.sample_rows),
+            jnp.asarray(bt.anchor), jnp.asarray(bt.parent),
+            jnp.asarray(bt.depth))
+        self.row_slots_total += self.max_slots
+        self.row_slots_active += len(decode) + len(plan)
+        self.prefill_rows_packed += len(plan)
+        self.tail_fused_rows += len(bt.fused)
+        self.tree_steps += 1 if bt.n_tree_nodes else 0
+        for i, n in plan.items():
+            seq = self.slots[i]
+            del seq.prefill_queue[:n]
+            seq.prefill_pos += n
+            self.prefill_tokens += n
+        self.steps_run += 1
+        ticket = StepTicket(sampled=sampled, lps=lps, n_acc=n_acc,
+                            sample_slots=decode + bt.fused,
+                            anchors=bt.anchors)
+        self._inflight = ticket
+        return ticket
+
+    def _build_tree_batch(self, decode: List[int], plan: Dict[int, int],
+                          drafts) -> "_TreeBatch":
+        """Shared tree-step batch construction (layout, within masks,
+        slot indices) for the fused device path and the sync reference
+        path — both verify the identical batch, which is what makes the
+        host cross-check token-exact."""
         trees: Dict[int, TokenTree] = {}
         widest = 0
         for i in decode:
@@ -1459,31 +1562,12 @@ class Instance:
             # prefill chunks are chains by position: plain causal order
             within[i, :k, :k] = np.tril(np.ones((k, k), bool))
 
-        keys = position_keys(self.base_key, jnp.asarray(seeds),
-                             jnp.asarray(positions))
-        fn = self.steps.fused_tree_step(T)
-        sampled, lps, n_acc, self.cache = fn(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(slot_index),
-            jnp.asarray(mask), jnp.asarray(within), keys,
-            jnp.asarray(temps), jnp.asarray(sample_rows),
-            jnp.asarray(anchor), jnp.asarray(parent),
-            jnp.asarray(depth))
-        self.row_slots_total += B
-        self.row_slots_active += len(decode) + len(plan)
-        self.prefill_rows_packed += len(plan)
-        self.tail_fused_rows += len(fused)
-        self.tree_steps += 1 if n_tree_nodes else 0
-        for i, n in plan.items():
-            seq = self.slots[i]
-            del seq.prefill_queue[:n]
-            seq.prefill_pos += n
-            self.prefill_tokens += n
-        self.steps_run += 1
-        ticket = StepTicket(sampled=sampled, lps=lps, n_acc=n_acc,
-                            sample_slots=decode + fused, anchors=anchors)
-        self._inflight = ticket
-        return ticket
+        return _TreeBatch(
+            T=T, fused=fused, anchors=anchors, trees=trees,
+            n_tree_nodes=n_tree_nodes, tokens=tokens, positions=positions,
+            slot_index=slot_index, mask=mask, within=within, temps=temps,
+            seeds=seeds, sample_rows=sample_rows, anchor=anchor,
+            parent=parent, depth=depth)
 
     def commit_step(self, ticket) -> Dict[int, Tuple[List[int],
                                                      List[float], int]]:
@@ -1550,7 +1634,29 @@ class Instance:
                        ) -> Dict[int, Tuple[List[int], List[float], int]]:
         """Seed-path step: undonated cache, host-side acceptance over the
         full sample block, host-issued rollback and SSM replay.  Kept
-        verbatim as the oracle the fused device path is tested against."""
+        verbatim as the oracle the fused device path is tested against.
+
+        Tree drafts: a single-path (chain) tree computes bit-identically
+        to the linear layout (node ``j`` sits at column/position/slot
+        ``1+j`` either way), so chains are flattened to token lists and
+        take the linear oracle below; a step carrying any *branching*
+        tree routes to :meth:`_run_step_sync_tree`."""
+        if self.spec_mode == "tree" or \
+                any(isinstance(d, TokenTree) for d in drafts.values()):
+            flat: Dict[int, List[int]] = {}
+            branching = False
+            for i, d in drafts.items():
+                if isinstance(d, TokenTree):
+                    if d.is_chain():
+                        flat[i] = list(d.tokens)
+                    else:
+                        branching = True
+                        break
+                else:
+                    flat[i] = list(d or [])
+            if branching:
+                return self._run_step_sync_tree(drafts)
+            drafts = flat
         active = self.active_slots()
         if not active:
             return {}
@@ -1654,5 +1760,109 @@ class Instance:
                     self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(positions), jnp.asarray(accepted_mask), keys,
                     jnp.asarray(temps), jnp.asarray(sample_rows))
+        self.steps_run += 1
+        return out
+
+    def _run_step_sync_tree(self, drafts
+                            ) -> Dict[int, Tuple[List[int], List[float],
+                                                 int]]:
+        """Sync-path *tree* step: the reference (undonated) tree forward
+        plus host-side acceptance — a numpy port of
+        :func:`~repro.engine.sampling.tree_acceptance` — and host-issued
+        node-slot invalidation / winning-branch KV compaction.  Lets the
+        oracle cross-check branching ``spec_mode="tree"`` steps
+        token-exactly against the fused device path (the batch layout is
+        shared via :meth:`_build_tree_batch`)."""
+        active = self.active_slots()
+        if not active:
+            return {}
+        decode = self.decode_slots()
+        plan = self._prefill_plan()
+        if not decode and not plan:
+            return {}
+        bt = self._build_tree_batch(decode, plan, drafts)
+        B, T = self.max_slots, bt.T
+        keys = position_keys(self.base_key, jnp.asarray(bt.seeds),
+                             jnp.asarray(bt.positions))
+        fn = self.steps.tree_step(T)
+        sampled_d, lps_d, self.cache = fn(
+            self.params, self.cache, jnp.asarray(bt.tokens),
+            jnp.asarray(bt.positions), jnp.asarray(bt.slot_index),
+            jnp.asarray(bt.mask), jnp.asarray(bt.within), keys,
+            jnp.asarray(bt.temps), jnp.asarray(bt.sample_rows))
+        sampled = np.asarray(sampled_d)
+        lps = np.asarray(lps_d)
+        self.steps.host_syncs += 2   # full sample + logprob blocks
+        self.row_slots_total += B
+        self.row_slots_active += len(decode) + len(plan)
+        self.prefill_rows_packed += len(plan)
+        self.tail_fused_rows += len(bt.fused)
+        self.tree_steps += 1 if bt.n_tree_nodes else 0
+        for i, n in plan.items():
+            seq = self.slots[i]
+            del seq.prefill_queue[:n]
+            seq.prefill_pos += n
+            self.prefill_tokens += n
+
+        # longest accepted *path* on host — same closed form as the
+        # device tree_acceptance: a node is accepted iff every ancestor
+        # edge token matches its parent's sample
+        node = (bt.depth > 0) & bt.mask
+        par = np.clip(bt.parent, 0, T - 1)
+        edge_ok = np.where(
+            bt.parent >= 0,
+            bt.tokens == np.take_along_axis(sampled, par, axis=1), True)
+        acc = node & np.all(edge_ok[:, None, :] | ~bt.within, axis=2)
+        n_acc = np.max(np.where(acc, bt.depth, 0), axis=1).astype(np.int32)
+        n_acc = np.where(bt.sample_rows, n_acc, 0)
+        dd = np.arange(T, dtype=np.int32)[None, :]
+        hit = acc[:, None, :] & (bt.depth[:, None, :] == dd[:, :, None]) \
+            & (dd[:, :, None] > 0)
+        path_col = np.where(np.any(hit, axis=2), np.argmax(hit, axis=2),
+                            bt.anchor[:, None]).astype(np.int32)
+        anchor_pos = np.take_along_axis(
+            bt.positions, bt.anchor[:, None], axis=1)[:, 0]
+
+        out = {}
+        for i in decode + bt.fused:
+            seq = self.slots[i]
+            a = int(n_acc[i])
+            new_toks = [int(sampled[i, path_col[i, j]])
+                        for j in range(a + 1)]
+            new_lps = [float(lps[i, path_col[i, j]])
+                       for j in range(a + 1)]
+            out[i] = self._commit_row(seq, new_toks, new_lps, a)
+
+        # host-issued cache fix-up mirroring fused_tree_step: 1) every
+        # tree-node slot written this step is invalidated; 2) the
+        # winning branch is re-committed into the canonical
+        # position-indexed slots, so the cache looks exactly as if the
+        # accepted chain had been decoded linearly
+        if "slot_pos" in self.cache and bt.n_tree_nodes:
+            S = self.cache["slot_pos"].shape[1]
+            ring = self.cfg.sliding_window > 0
+            bidx = jnp.arange(B)[:, None]
+            node_slots = np.where(node, bt.slot_index, S)
+            sp = self.cache["slot_pos"].at[
+                bidx, jnp.asarray(node_slots)].set(-1, mode="drop")
+            dcols = np.arange(T, dtype=np.int32)[None, :]
+            dvalid = (dcols >= 1) & (dcols <= n_acc[:, None]) \
+                & bt.sample_rows[:, None]
+            src = np.where(
+                dvalid,
+                np.take_along_axis(bt.slot_index, path_col, axis=1), S)
+            dst_pos = anchor_pos[:, None] + dcols
+            dst = np.where(dvalid, dst_pos % S if ring else dst_pos, S)
+            self.cache["slot_pos"] = sp.at[
+                bidx, jnp.asarray(dst)].set(jnp.asarray(dst_pos),
+                                            mode="drop")
+            src_c = jnp.asarray(np.clip(src, 0, S - 1))
+            dst_j = jnp.asarray(dst)
+            for kk in ("k", "v"):
+                kv = self.cache[kk]            # (L, B, S, H, D)
+                vals = jnp.take_along_axis(
+                    kv, src_c[None, :, :, None, None], axis=2)
+                self.cache[kk] = kv.at[:, bidx, dst_j].set(
+                    vals, mode="drop")
         self.steps_run += 1
         return out

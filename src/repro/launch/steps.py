@@ -196,6 +196,27 @@ def build_verify_step(cfg: ModelConfig, sctx: ShardCtx):
     return verify_step
 
 
+def build_tree_verify_step(cfg: ModelConfig, sctx: ShardCtx):
+    """Tree-speculative verify: T tree nodes per sequence scored in one
+    forward.  ``slot_index`` (B,T) decouples cache rows from positions so
+    sibling draft nodes (same position, different branch) occupy distinct
+    slots; ``within`` (B,T,T) restricts each node's in-batch attention to
+    its own ancestor chain; ``mask`` (B,T) marks live nodes.  Returns the
+    target's greedy token at every node — the host computes the winning
+    branch (deepest fully-matched path) exactly like the engine's fused
+    tree step, then re-commits that branch's slots."""
+    def tree_verify_step(params, tokens, positions, slot_index, mask,
+                         within, cache):
+        logits, new_cache, _ = forward(cfg, params, tokens, positions,
+                                       cache, token_mask=mask,
+                                       slot_index=slot_index,
+                                       within_mask=within, sctx=sctx)
+        target = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        return target.astype(jnp.int32), new_cache
+
+    return tree_verify_step
+
+
 def opt_state_specs(param_specs):
     mu = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
@@ -213,6 +234,7 @@ def lower_pair(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                seq_shard_prefill: bool = False,
                remat_policy: str = "none",
                verify_gamma: int = 0,
+               tree_verify: bool = False,
                serve_bf16: bool = False):
     """Lower the right step for one (arch x input-shape) on a mesh.
 
@@ -220,6 +242,8 @@ def lower_pair(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
       seq_shard_prefill — Megatron-SP residual sharding during prefill
       remat_policy      — "none" (full remat) | "dots" (save matmul outs)
       verify_gamma      — decode shapes lower the γ-token verify step
+      tree_verify       — with verify_gamma, lower the tree-verify step
+                          instead (slot_index + ancestor within-mask)
       serve_bf16        — inference steps take bf16 weight specs (halves
                           weight streaming on TPU; the host backend
                           re-promotes bf16 dots to f32, so host-measured
@@ -253,6 +277,23 @@ def lower_pair(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
             lowered = jax.jit(step, donate_argnums=(3,)).lower(
                 pspecs, batch_in["tokens"], batch_in["positions"],
                 cache_in, **aux)
+        elif verify_gamma and tree_verify:
+            step = build_tree_verify_step(cfg, sctx)
+            cache_in = batch_in.pop("cache")
+            B, T = batch_in["tokens"].shape
+            b = _guard(B, tuple(sctx.dp), mesh)
+
+            def tree_in(shp, dt):
+                spec = P(*([b] + [None] * (len(shp) - 1)))
+                return jax.ShapeDtypeStruct(
+                    shp, dt, sharding=NamedSharding(mesh, spec))
+
+            lowered = jax.jit(step, donate_argnums=(6,)).lower(
+                pspecs, batch_in["tokens"], batch_in["positions"],
+                tree_in((B, T), jnp.int32),       # slot_index
+                tree_in((B, T), jnp.bool_),       # mask
+                tree_in((B, T, T), jnp.bool_),    # within
+                cache_in)
         else:  # decode
             step = (build_verify_step(cfg, sctx) if verify_gamma
                     else build_serve_step(cfg, sctx))

@@ -84,6 +84,10 @@ class WeightUpdater:
         self.instances = instances
         self.link_bw = link_bw
         self.updates = 0
+        # monotonically increasing weight version; the staleness ledger
+        # stamps every sampled token with the version it decoded under,
+        # so version = number of pushes so far
+        self.version = 0
         self.modeled_seconds = 0.0
 
     def push(self, params) -> float:
@@ -92,6 +96,7 @@ class WeightUpdater:
         for inst in self.instances:
             inst.params = params
         self.updates += 1
+        self.version += 1
         t = nbytes / self.link_bw  # one broadcast stage
         self.modeled_seconds += t
         return t

@@ -33,6 +33,19 @@ class GRPOConfig:
     aux_coef: float = 0.01         # MoE router load-balance coefficient
     adv_eps: float = 1e-4
     normalize_std: bool = True     # GRPO normalizes by group std
+    # -- bounded-staleness corrections (streamed overlap mode) -------------
+    # Tokens sampled s weight versions before the training step carry
+    # per-token staleness s in batch["staleness"].  Both knobs engage
+    # only when that key is present, so sync batches (and the compiled
+    # bound-0 train step) are untouched:
+    #   max_token_staleness — tokens with s > bound are masked out of
+    #     the loss entirely (a hard cap on version skew in the gradient)
+    #   staleness_discount  — per-token loss weight discount^s (a soft
+    #     importance correction: the clipped ratio already bounds the
+    #     policy gap; the discount additionally down-weights older
+    #     versions' tokens, Laminar-style)
+    max_token_staleness: Optional[int] = None
+    staleness_discount: float = 1.0
 
 
 def group_advantages(rewards: jax.Array, group_size: int,
@@ -62,6 +75,15 @@ def grpo_loss(cfg: ModelConfig, params, batch: dict, *,
     mask = batch["loss_mask"][:, 1:]
     adv = batch["advantages"][:, None]
     old_lp = batch["old_logprobs"][:, 1:]
+    if "staleness" in batch:
+        # per-token staleness mask + importance-correction hook: only
+        # streamed (bounded-staleness) batches carry the key, so the
+        # sync path compiles and computes exactly as before
+        stale = batch["staleness"][:, 1:].astype(jnp.float32)
+        if gcfg.max_token_staleness is not None:
+            mask = mask * (stale <= gcfg.max_token_staleness)
+        if gcfg.staleness_discount != 1.0:
+            mask = mask * jnp.power(gcfg.staleness_discount, stale)
 
     aux_inputs = {k: v for k, v in batch.items()
                   if k in ("image_embeds", "audio_frames")}
@@ -96,11 +118,19 @@ def grpo_loss(cfg: ModelConfig, params, batch: dict, *,
 def pack_experience(cfg: ModelConfig, responses: dict, prompts: dict,
                     rewards: dict, logprobs: dict, group_size: int,
                     max_len: int, *, gcfg: GRPOConfig = GRPOConfig(),
-                    pad_id: int = 0) -> dict:
+                    pad_id: int = 0,
+                    token_versions: Optional[dict] = None,
+                    train_version: int = 0) -> dict:
     """Build a fixed-shape training batch from rollout outputs.
 
     responses/prompts/logprobs keyed by req_id; req order must be
     group-major (g0.r0, g0.r1, ..., g1.r0, ...).
+
+    ``token_versions`` (req_id -> per-token weight versions, from the
+    rollout's staleness ledger) adds a per-token ``staleness`` plane
+    (``train_version - version``) that engages the GRPOConfig staleness
+    knobs; omitted (the sync path), the batch is identical to before —
+    the bound-0 bit-exactness gate depends on that.
     """
     rids = sorted(responses, key=lambda k: (k.split(".r")[0],
                                             int(k.split(".r")[1])))
@@ -108,6 +138,7 @@ def pack_experience(cfg: ModelConfig, responses: dict, prompts: dict,
     tokens = np.full((B, max_len), pad_id, np.int32)
     mask = np.zeros((B, max_len), np.float32)
     old_lp = np.zeros((B, max_len), np.float32)
+    stale = np.zeros((B, max_len), np.float32)
     rew = np.zeros((B,), np.float32)
     for i, rid in enumerate(rids):
         seq = list(prompts[rid]) + list(responses[rid])
@@ -117,12 +148,19 @@ def pack_experience(cfg: ModelConfig, responses: dict, prompts: dict,
         mask[i, np_len:len(seq)] = 1.0
         lp = list(logprobs[rid])[:max(0, max_len - np_len)]
         old_lp[i, np_len:np_len + len(lp)] = lp
+        if token_versions is not None:
+            vs = list(token_versions.get(rid, []))[:max(0, max_len - np_len)]
+            stale[i, np_len:np_len + len(vs)] = \
+                [max(0, train_version - v) for v in vs]
         rew[i] = rewards[rid]
     adv = np.asarray(group_advantages(jnp.asarray(rew), group_size, gcfg))
-    return {
+    batch = {
         "tokens": jnp.asarray(tokens),
         "loss_mask": jnp.asarray(mask),
         "old_logprobs": jnp.asarray(old_lp),
         "advantages": jnp.asarray(adv),
         "rewards": jnp.asarray(rew),
     }
+    if token_versions is not None:
+        batch["staleness"] = jnp.asarray(stale)
+    return batch

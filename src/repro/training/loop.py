@@ -43,9 +43,61 @@ class RLConfig:
     max_slots: int = 4
     cache_len: int = 256
     chunk_size: int = 64
+    # -- bounded-staleness rollout<->train overlap -------------------------
+    # async_overlap: drive the rollout as a stream (SeerRollout.run_stream)
+    # instead of a barrier — groups train as they finish, next-iteration
+    # prompts pack into tail bubbles, and weights refresh in flight.
+    # staleness_bound caps version skew: iteration j's prompts may enter
+    # the stream once weights reached version j - bound, so no trained
+    # token is ever more than `bound` versions stale (the ledger gates
+    # it).  Bound 0 forbids any overlap and reproduces the sync loop
+    # bit-exactly — the standing oracle.
+    async_overlap: bool = False
+    staleness_bound: int = 0
+    # how live slots survive an in-flight refresh: "keep" re-anchors the
+    # committed prefix under the new params (KV re-prefill, tokens kept,
+    # staleness recorded); "truncate" rewinds to the prompt and replays
+    # the old generation as verify drafts (bit-exact with a fresh run)
+    refresh_mode: str = "keep"
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     log: Callable[[str], None] = print
+
+
+class StalenessLedger:
+    """Per-iteration accounting of how stale every trained token was
+    (weight version at the train step minus the version the token was
+    sampled under), with a hard gate on the configured bound."""
+
+    def __init__(self, bound: int):
+        self.bound = bound
+        # iteration -> {staleness: token count}
+        self.per_iteration: Dict[int, Dict[int, int]] = {}
+
+    def record(self, iteration: int, train_version: int,
+               token_versions: Dict[str, List[int]]) -> None:
+        counts: Dict[int, int] = {}
+        for vs in token_versions.values():
+            for v in vs:
+                s = max(0, train_version - v)
+                counts[s] = counts.get(s, 0) + 1
+        self.per_iteration[iteration] = counts
+        worst = max(counts) if counts else 0
+        if worst > self.bound:
+            raise RuntimeError(
+                f"staleness bound violated: iteration {iteration} "
+                f"trained tokens {worst} versions stale "
+                f"(bound {self.bound})")
+
+    @property
+    def max_staleness(self) -> int:
+        return max((max(c) for c in self.per_iteration.values() if c),
+                   default=0)
+
+    def total_tokens(self, staleness: Optional[int] = None) -> int:
+        return sum(n for c in self.per_iteration.values()
+                   for s, n in c.items()
+                   if staleness is None or s == staleness)
 
 
 @dataclass
@@ -100,6 +152,10 @@ class RLTrainer:
         self.updater = WeightUpdater(self.rollout.instances)
         self.rewards = RewardWorker(task)
         self.history: List[IterStats] = []
+        self.ledger = StalenessLedger(rl.staleness_bound)
+        # one RolloutResult per stream (streaming mode only): overlap /
+        # tail-packing / revalidation counters for benchmarks
+        self.stream_results: List = []
 
     def _sample_groups(self, it: int) -> List[Group]:
         rng = np.random.default_rng(self.rl.seed * 7919 + it)
@@ -113,6 +169,14 @@ class RLTrainer:
             prefix=f"it{it}-g")
 
     def run(self) -> List[IterStats]:
+        if self.rl.async_overlap:
+            return self._run_stream()
+        return self._run_sync()
+
+    def _run_sync(self) -> List[IterStats]:
+        """The strict barrier loop (rollout → train → refresh), kept
+        verbatim: it is the bit-exactness oracle the streaming mode's
+        bound-0 gate compares against."""
         rl = self.rl
         for it in range(rl.iterations):
             # ---- rollout (Seer) --------------------------------------------
@@ -169,4 +233,146 @@ class RLTrainer:
             if rl.checkpoint_dir and rl.checkpoint_every and \
                     (it + 1) % rl.checkpoint_every == 0:
                 save(f"{rl.checkpoint_dir}/it{it + 1}", self.params, it + 1)
+        return self.history
+
+    def _run_stream(self) -> List[IterStats]:
+        """Bounded-staleness streaming pipeline.
+
+        One ``run_stream`` may span several iterations: groups stream to
+        the reward workers as they finish; when every group of the
+        oldest untrained iteration is in, that iteration trains — mid-
+        stream if newer work is still rolling — and the fresh weights
+        refresh the live instances (``rl.refresh_mode``).  At every
+        bubble (idle capacity the scheduler cannot fill) the next
+        iteration's prompts are injected IF the version-skew cap allows:
+        iteration j enters once weights reached version ``j - bound``.
+        With ``staleness_bound=0`` injection can never fire, every
+        iteration gets its own barrier-shaped stream, and the loop is
+        bit-exact with :meth:`_run_sync` (the gated oracle)."""
+        rl = self.rl
+        bound = rl.staleness_bound
+        total = rl.iterations
+        state = {"next": 0, "trained": 0}
+        iter_groups: Dict[int, List[Group]] = {}
+        unfinished: Dict[int, set] = {}
+        t_start: Dict[int, float] = {}
+        t_done: Dict[int, float] = {}
+        reward_buf: Dict[str, float] = {}
+
+        def iter_of(group_id: str) -> int:
+            # group ids are f"it{j}-g{k}" (see _sample_groups)
+            return int(group_id[2:group_id.index("-g")])
+
+        def sample_iteration(j: int) -> List[Group]:
+            gs = self._sample_groups(j)
+            iter_groups[j] = gs
+            unfinished[j] = {g.group_id for g in gs}
+            t_start[j] = time.monotonic()
+            state["next"] = j + 1
+            return gs
+
+        def train_iteration(j: int, live: bool, result=None) -> None:
+            t1 = time.monotonic()
+            prompts, responses, logprobs, versions = {}, {}, {}, {}
+            for g in iter_groups.pop(j):
+                for r in g.requests:
+                    prompts[r.req_id] = r.prompt
+                    responses[r.req_id] = r.generated
+                    logprobs[r.req_id] = r.logprobs
+                    versions[r.req_id] = r.token_versions()
+            reward_buf.update(self.rewards.collect())
+            rewards = {rid: reward_buf.pop(rid) for rid in responses}
+            max_len = max(len(p) for p in prompts.values()) \
+                + rl.max_new_tokens
+            train_version = self.updater.version
+            self.ledger.record(j, train_version, versions)
+            batch = pack_experience(
+                self.cfg, responses, prompts, rewards, logprobs,
+                rl.group_size, max_len, gcfg=self.gcfg,
+                token_versions=versions if bound > 0 else None,
+                train_version=train_version)
+            loss = jnp.zeros(())
+            metrics: dict = {}
+            for _ in range(rl.train_steps_per_iter):
+                self.params, self.opt_state, loss, metrics = \
+                    self.train_step(self.params, self.opt_state, batch)
+            loss.block_until_ready()
+            t_train = time.monotonic() - t1
+            t2 = time.monotonic()
+            self.updater.push(self.params)
+            if live:
+                # requests still decoding (newer iterations) survive the
+                # refresh: their KV re-anchors under the new params and
+                # the ledger keeps stamping versions per token
+                self.rollout.refresh_params(
+                    self.params, version=self.updater.version,
+                    mode=rl.refresh_mode)
+            else:
+                self.rollout.param_version = self.updater.version
+            t_upd = time.monotonic() - t2
+            stream_stats = self.rollout._stream_stats
+            acc = stream_stats.mean_acceptance if live and stream_stats \
+                else (result.stats.mean_acceptance if result else 0.0)
+            mean_r = float(np.mean(list(rewards.values())))
+            t_roll = t_done.get(j, t1) - t_start[j]
+            st = IterStats(
+                iteration=j, mean_reward=mean_r, loss=float(loss),
+                rollout_seconds=t_roll, train_seconds=t_train,
+                weight_update_seconds=t_upd,
+                tokens=sum(len(t) for t in responses.values()),
+                mean_acceptance=acc,
+                metrics={k: float(v) for k, v in metrics.items()})
+            self.history.append(st)
+            rl.log(f"[iter {j:3d}] reward={mean_r:.3f} "
+                   f"loss={float(loss):+.4f} rollout={t_roll:.1f}s "
+                   f"train={t_train:.1f}s acc={acc:.2f}"
+                   + (" (streamed)" if live else ""))
+            if rl.checkpoint_dir and rl.checkpoint_every and \
+                    (j + 1) % rl.checkpoint_every == 0:
+                save(f"{rl.checkpoint_dir}/it{j + 1}", self.params, j + 1)
+
+        while state["trained"] < total:
+            groups = sample_iteration(state["next"])
+            # fresh context per stream (iteration-scoped group state,
+            # matching the sync loop — at bound 0 every iteration is its
+            # own stream, so this is exactly the oracle's reset); mid-
+            # stream refreshes reset the acceptance profile in place
+            self.rollout.ctx = type(self.rollout.ctx)(
+                max_gen_length=rl.cache_len)
+            result = None
+            for kind, payload in self.rollout.run_stream(groups):
+                if kind == "group":
+                    j = iter_of(payload.group_id)
+                    unfinished[j].discard(payload.group_id)
+                    if not unfinished[j]:
+                        t_done[j] = time.monotonic()
+                    for r in payload.requests:
+                        self.rewards.submit(r.req_id, r.prompt,
+                                            r.generated)
+                    # train every ready iteration in order — mid-stream
+                    # only while newer work keeps the stream alive (a
+                    # fully drained stream trains after its result, the
+                    # barrier shape)
+                    while state["trained"] < state["next"] \
+                            and not unfinished[state["trained"]] \
+                            and any(unfinished[k] for k in unfinished):
+                        train_iteration(state["trained"], live=True)
+                        unfinished.pop(state["trained"])
+                        state["trained"] += 1
+                elif kind == "bubble":
+                    if state["next"] < total and \
+                            self.updater.version >= state["next"] - bound:
+                        self.rollout.inject(
+                            sample_iteration(state["next"]))
+                else:   # "result"
+                    result = payload
+                    self.stream_results.append(payload)
+            while state["trained"] < state["next"]:
+                j = state["trained"]
+                if unfinished.get(j):
+                    raise RuntimeError(
+                        f"stream ended with iteration {j} unfinished")
+                train_iteration(j, live=False, result=result)
+                unfinished.pop(j, None)
+                state["trained"] += 1
         return self.history

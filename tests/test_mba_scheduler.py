@@ -187,7 +187,10 @@ def test_select_instance_topology_aware():
     """With a fetch-cost oracle, the node already holding the blob wins
     over a less-loaded cross-node placement; fresh requests (cost 0
     everywhere) fall back to load balance; an infeasible same-node
-    instance spills to the cross-node one."""
+    instance spills to the cross-node one.  The default total-delay
+    rank folds fetch + priced queue backlog into one unit; the legacy
+    lexicographic rank (overload demotes locality outright) stays
+    available behind rank_mode."""
     groups, ctx = _mk(1, 2, maxtok=64)
     r0, r1 = groups[0].requests
     r0.generated = [1] * 4                       # resumed: has a blob
@@ -212,17 +215,30 @@ def test_select_instance_topology_aware():
     blind = Scheduler(groups, ctx, chunk_size=32)
     views[0].kv_free_tokens = 200
     assert blind.select_instance(views, r0) == "b"
-    # overloaded home instance (prefill backlog >= KV head-room) never
-    # wins on locality alone: the idle cross-node peer takes the chunk
+    # total-delay rank with a free queue (queue_cost_per_token=0):
+    # the backlog costs nothing, so locality keeps the home node
     views[0].queued_prefill_tokens = 200
-    assert s.select_instance(views, r0) == "b"
-    # under saturation (every candidate overloaded) load stays primary:
-    # the less-backlogged cross-node peer beats the buried home node
+    assert s.select_instance(views, r0) == "a"
+    # pricing the backlog flips it: 200 queued tokens at 0.01 s/tok
+    # dwarf the 0.9 s fetch saving...
+    priced = Scheduler(groups, ctx, chunk_size=32, fetch_cost=cost,
+                       queue_cost_per_token=0.01)
+    assert priced.select_instance(views, r0) == "b"
+    # ...but a shallow backlog does not (0.2 s queue < 0.9 s fetch)
+    views[0].queued_prefill_tokens = 20
+    assert priced.select_instance(views, r0) == "a"
+    # legacy lexicographic rank: an overloaded home (prefill backlog
+    # >= KV head-room) never wins on locality alone, and under
+    # saturation (every candidate overloaded) load stays primary
+    lex = Scheduler(groups, ctx, chunk_size=32, fetch_cost=cost,
+                    rank_mode="lexicographic")
+    views[0].queued_prefill_tokens = 200
+    assert lex.select_instance(views, r0) == "b"
     views[0].queued_prefill_tokens = 500         # a: effective -300
     views[1].queued_prefill_tokens = 905         # b: effective -5
-    assert s.select_instance(views, r0) == "b"
+    assert lex.select_instance(views, r0) == "b"
     views[1].queued_prefill_tokens = 2000        # b: effective -1100
-    assert s.select_instance(views, r0) == "a"   # a now least buried
+    assert lex.select_instance(views, r0) == "a" # a now least buried
 
 
 def test_starvation_safeguard():

@@ -93,3 +93,237 @@ def test_checkpoint_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(loaded["a"]["b"]),
                                   np.asarray(params["a"]["b"]))
     assert loaded["c"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness streaming pipeline (async_overlap)
+# ---------------------------------------------------------------------------
+
+
+def _mk_trainer(cfg, task, **kw):
+    from repro.training.loop import RLConfig, RLTrainer
+    rl = RLConfig(n_groups=3, group_size=2, max_new_tokens=8,
+                  iterations=3, n_instances=2, max_slots=2,
+                  cache_len=128, chunk_size=8, seed=3,
+                  log=lambda s: None, **kw)
+    return RLTrainer(cfg, task, rl)
+
+
+@pytest.fixture(scope="module")
+def rl_fixture():
+    import dataclasses
+    from repro.configs import get_tiny_config
+    from repro.data.tasks import make_task
+    cfg = dataclasses.replace(get_tiny_config("granite-3-8b"),
+                              vocab_size=32)
+    task = make_task("copy", 32, prompt_len=4, response_len=8,
+                     content_vocab=8)
+    return cfg, task
+
+
+def _run_recording(tr):
+    """Run a trainer recording every (req_id -> generated) pair that
+    reached the reward worker."""
+    responses = {}
+    orig = tr.rewards.submit
+
+    def submit(rid, prompt, gen):
+        responses[rid] = list(gen)
+        return orig(rid, prompt, gen)
+
+    tr.rewards.submit = submit
+    hist = tr.run()
+    return hist, responses
+
+
+def test_stream_staleness0_bit_exact(rl_fixture):
+    """staleness_bound=0 streaming must reproduce the sync barrier loop
+    bit-exactly: same tokens to the reward worker, same loss sequence."""
+    cfg, task = rl_fixture
+    h_sync, r_sync = _run_recording(_mk_trainer(cfg, task))
+    h_s0, r_s0 = _run_recording(
+        _mk_trainer(cfg, task, async_overlap=True, staleness_bound=0))
+    assert r_sync == r_s0
+    assert [h.loss for h in h_sync] == [h.loss for h in h_s0]
+    assert [h.mean_reward for h in h_sync] == \
+        [h.mean_reward for h in h_s0]
+    assert [h.tokens for h in h_sync] == [h.tokens for h in h_s0]
+
+
+def test_stream_bound1_overlaps_and_holds_bound(rl_fixture):
+    """At staleness_bound=1 the stream injects next-iteration prompts
+    into tail bubbles; the ledger proves overlap happened AND that no
+    trained token exceeded the bound."""
+    cfg, task = rl_fixture
+    tr = _mk_trainer(cfg, task, async_overlap=True, staleness_bound=1)
+    hist, responses = _run_recording(tr)
+    assert len(hist) == 3
+    # ledger accounting: every trained token is counted exactly once
+    trained = sum(len(v) for v in responses.values())
+    assert tr.ledger.total_tokens() == trained
+    assert 0 < tr.ledger.max_staleness <= 1
+    assert tr.ledger.total_tokens(1) > 0       # overlap actually happened
+    stats = [r.stats for r in tr.stream_results]
+    assert sum(s.injected_groups for s in stats) > 0
+    assert sum(s.reclaimed_rows for s in stats) > 0
+    assert sum(s.refreshes for s in stats) > 0
+
+
+def test_ledger_gates_bound_violation():
+    from repro.training.loop import StalenessLedger
+    led = StalenessLedger(bound=1)
+    led.record(0, 2, {"r0": [2, 2, 1]})        # staleness 0,0,1 — ok
+    assert led.max_staleness == 1
+    assert led.total_tokens() == 3
+    assert led.total_tokens(1) == 1
+    with pytest.raises(RuntimeError, match="staleness bound violated"):
+        led.record(1, 3, {"r0": [1]})          # staleness 2 > bound
+
+
+# -- weight refresh while requests are in flight ----------------------------
+
+
+def _stream_with_refresh(cfg, params, new_params, mode, at_event=0,
+                         **kw):
+    """Two staggered groups (short + long max_new_tokens) on one
+    rollout; refresh_params(new_params) fires at stream-event index
+    ``at_event`` (the short group finishing yields mid-run events while
+    the long group is still decoding)."""
+    from repro.core import SeerRollout, make_groups
+    defaults = dict(n_instances=1, max_slots=4, cache_len=128,
+                    chunk_size=100, policy="fifo", spec_decode=False)
+    defaults.update(kw)
+    ro = SeerRollout(cfg, params, **defaults)
+    short = make_groups([[3, 1, 4, 1]], group_size=2, max_new_tokens=4,
+                        seed=5, prefix="s-g")
+    long = make_groups([[5, 9, 2, 6]], group_size=2, max_new_tokens=24,
+                       seed=5, prefix="l-g")
+    refreshed = False
+    result = None
+    events = 0
+    for kind, payload in ro.run_stream(short + long):
+        if kind == "result":
+            result = payload
+            continue
+        if not refreshed and events >= at_event:
+            ro.refresh_params(new_params, mode=mode)
+            refreshed = True
+        events += 1
+    assert refreshed, "no mid-stream event before all groups finished"
+    return result, ro
+
+
+def _plain_responses(cfg, params, groups_args, **kw):
+    from repro.core import SeerRollout, make_groups
+    defaults = dict(n_instances=1, max_slots=4, cache_len=128,
+                    chunk_size=100, policy="fifo", spec_decode=False)
+    defaults.update(kw)
+    ro = SeerRollout(cfg, params, **defaults)
+    return ro.run(make_groups(**groups_args)).responses()
+
+
+def test_refresh_truncate_bit_exact_with_fresh_run(tiny_params_cache):
+    """Truncate-mode refresh rewinds live requests to their prompt and
+    replays the stale generation as verify drafts: the final tokens must
+    equal a from-scratch run under the NEW params (position-keyed
+    sampling makes the replay lossless)."""
+    import jax
+    from repro.models import init_params
+    cfg, params = tiny_params_cache("granite-3-8b")
+    params2, _ = init_params(cfg, jax.random.PRNGKey(42))
+    res, ro = _stream_with_refresh(cfg, params, params2, "truncate")
+    fresh = _plain_responses(
+        cfg, params2, dict(prompts=[[5, 9, 2, 6]], group_size=2,
+                           max_new_tokens=24, seed=5, prefix="l-g"))
+    got = {k: v for k, v in res.responses().items()
+           if k.startswith("l-g")}
+    assert got == fresh
+    assert res.stats.refreshes == 1
+
+
+def test_refresh_keep_preserves_prefix_and_continues(tiny_params_cache):
+    """Keep-mode refresh re-anchors the committed prefix under the new
+    params: pre-refresh tokens are kept verbatim (they match the
+    old-params run's prefix) and generation continues to the budget."""
+    import jax
+    from repro.models import init_params
+    cfg, params = tiny_params_cache("granite-3-8b")
+    params2, _ = init_params(cfg, jax.random.PRNGKey(42))
+    old_full = _plain_responses(
+        cfg, params, dict(prompts=[[5, 9, 2, 6]], group_size=2,
+                          max_new_tokens=24, seed=5, prefix="l-g"))
+    res, ro = _stream_with_refresh(cfg, params, params2, "keep")
+    for rid, toks in res.responses().items():
+        if not rid.startswith("l-g"):
+            continue
+        assert len(toks) == 24                  # ran to budget
+        # the short group finished at 4 generated tokens, so at least
+        # 4 pre-refresh tokens were committed and must match the
+        # old-params trajectory
+        assert toks[:4] == old_full[rid][:4]
+
+
+@pytest.mark.parametrize("mode", ["keep", "truncate"])
+def test_refresh_same_params_is_noop(tiny_params_cache, mode):
+    """Refreshing with the SAME params mid-stream must not change any
+    token, in either mode — the re-anchor (keep) and the rewind+replay
+    (truncate) are lossless."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    base = _plain_responses(
+        cfg, params, dict(prompts=[[5, 9, 2, 6]], group_size=2,
+                          max_new_tokens=24, seed=5, prefix="l-g"))
+    res, ro = _stream_with_refresh(cfg, params, params, mode)
+    got = {k: v for k, v in res.responses().items()
+           if k.startswith("l-g")}
+    assert got == base
+    if mode == "truncate":
+        assert res.stats.reval_tokens > 0
+        assert res.stats.reval_accepted == res.stats.reval_tokens
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["keep", "truncate"])
+@pytest.mark.parametrize("at_event", [0, 1, 2, 3])
+def test_refresh_point_fuzz(tiny_params_cache, mode, at_event):
+    """Same-params refresh is a token-level no-op at EVERY stream event
+    index, both modes, with spec decode on (reval drafts interleave with
+    CST drafts)."""
+    cfg, params = tiny_params_cache("granite-3-8b")
+    kw = dict(policy="seer", spec_decode=True, chunk_size=16)
+    base = _plain_responses(
+        cfg, params, dict(prompts=[[5, 9, 2, 6]], group_size=2,
+                          max_new_tokens=24, seed=5, prefix="l-g"), **kw)
+    try:
+        res, ro = _stream_with_refresh(cfg, params, params, mode,
+                                       at_event=at_event, **kw)
+    except AssertionError:
+        pytest.skip("stream drained before the requested event index")
+    got = {k: v for k, v in res.responses().items()
+           if k.startswith("l-g")}
+    assert got == base
+
+
+def test_reset_acceptance_profile_preserves_group_state(
+        tiny_params_cache):
+    """Regression (soft iteration boundary): resetting the acceptance
+    profile must keep the ContextManager object identity (live
+    Schedulers hold a reference) and the L̂ group estimates, while β
+    and branch-β go back to their priors."""
+    from repro.core import SeerRollout, make_groups
+    cfg, params = tiny_params_cache("granite-3-8b")
+    ro = SeerRollout(cfg, params, n_instances=1, max_slots=2,
+                     cache_len=128, chunk_size=8, policy="seer",
+                     spec_decode=True)
+    groups = make_groups([[3, 1, 4, 1], [5, 9, 2, 6]], group_size=2,
+                         max_new_tokens=16, seed=5)
+    ro.run(groups)
+    ctx = ro.ctx
+    gid = groups[0].group_id
+    assert ctx.has_estimate(gid)
+    est = ctx.estimate(gid)
+    ctx.beta[0] = 0.123                         # dirty the profile
+    ro.reset_acceptance_profile()
+    assert ro.ctx is ctx                        # identity preserved
+    assert ctx.beta[0] != 0.123                 # profile re-primed
+    assert ctx.has_estimate(gid)                # L̂ survives
+    assert ctx.estimate(gid) == est
