@@ -654,11 +654,205 @@ def bench_train_overlap(n_groups: int = 3, group_size: int = 2,
     }
 
 
+def bench_engine_faults(n_groups: int = 3, group_size: int = 2,
+                        max_new_tokens: int = 14, n_instances: int = 3,
+                        max_slots: int = 2, chunk_size: int = 5,
+                        prefill_chunk: int = 8, seed: int = 5) -> dict:
+    """Fault-tolerant divided rollout (tiny model, real engine): one
+    deterministic fault schedule covering every recovery path — an
+    instance crash, a short stall that waits out, a long stall the
+    watchdog escalates to a crash, a pool fetch that fails past the
+    retry budget (degrading to replay), and a corrupted blob caught by
+    its checksum and recovered on retry.
+
+    The faulted run must be **token-lossless**: every response
+    bit-identical to a no-fault oracle on the same workload
+    (``token_exact`` / ``tokens_lost == 0`` gate it), with recovery
+    overhead bounded by the faulted requests' remaining decode budget
+    and the 1-host-sync-per-step contract intact under faults.
+
+    A divided-mode simulator run with ``fault_rate > 0`` reports the
+    projected recovery overhead at cluster scale.
+    """
+    import dataclasses as _dc
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.core.faults import FaultEvent, FaultInjector
+    from repro.core.request import make_groups
+    from repro.core.rollout import SeerRollout
+    from repro.models import init_params
+
+    cfg = get_tiny_config("granite-3-8b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(1))
+    # staggered prompts: slots hit chunk boundaries out of lockstep, so
+    # the crash tick catches victims both AT a boundary (blob recovery)
+    # and mid-chunk (replay recovery)
+    plens = [6 + 4 * g for g in range(n_groups)]
+    prompts = [[(7 * g + 3 * j) % (cfg.vocab_size - 2) + 1
+                for j in range(plens[g])]
+               for g in range(n_groups)]
+
+    def make(injector=None, steps=None):
+        # gamma_max=8 with spec_decode off: normal decode stays plain,
+        # but crash replay re-feeds saved tokens as verify drafts in
+        # bulk (8/step) instead of one re-decode step per token.
+        # Takeover and in-place renewal are pinned off so every chunk
+        # boundary is a pool round-trip: the fetch-fault and
+        # blob-recovery paths this bench measures then fire on every
+        # re-admission (the fuzz suite covers the takeover modes).
+        return SeerRollout(
+            cfg, params, n_instances=n_instances, max_slots=max_slots,
+            cache_len=max(plens) + max_new_tokens + 32,
+            chunk_size=chunk_size, prefill_chunk=prefill_chunk,
+            admit_into_draining=False, final_chunk_inplace=False,
+            policy="seer", spec_decode=False, gamma_max=8,
+            base_seed=7, fault_injector=injector,
+            watchdog_ticks=3, fetch_retries=3, steps=steps)
+
+    def groups():
+        return make_groups(prompts, group_size=group_size,
+                           max_new_tokens=max_new_tokens, seed=seed)
+
+    def one(ro, injector=None):
+        # warm-up compiles every step shape (and, for the faulted pass,
+        # runs fault-free: the injector arms only for the timed pass)
+        ro.run(groups())
+        ro.faults = injector
+        hs0 = ro.steps.host_syncs
+        steps0 = sum(i.steps_run for i in ro.instances)
+        t0 = time.perf_counter()
+        res = ro.run(groups())
+        wall = time.perf_counter() - t0
+        engine_steps = sum(i.steps_run for i in ro.instances) - steps0
+        s = res.stats
+        return {
+            "engine_steps": engine_steps,
+            "ticks": s.ticks,
+            "host_syncs_per_step":
+                (ro.steps.host_syncs - hs0) / max(engine_steps, 1),
+            "tokens_per_sec": s.tokens / max(wall, 1e-9),
+            "wall_seconds": wall,
+            "instance_crashes": s.instance_crashes,
+            "watchdog_escalations": s.watchdog_escalations,
+            "stuck_ticks": s.stuck_ticks,
+            "recovered_requests": s.recovered_requests,
+            "recovered_via_blob": s.recovered_via_blob,
+            "recovered_via_replay": s.recovered_via_replay,
+            "recovery_redecode_tokens": s.recovery_redecode_tokens,
+            "recovery_replay_tokens": s.recovery_replay_tokens,
+            "faulted_remaining_tokens": s.faulted_remaining_tokens,
+            "fetch_failures": s.fetch_failures,
+            "fetch_degraded": s.fetch_degraded,
+            "corrupt_blobs": s.corrupt_blobs,
+            "fetch_backoff_seconds": s.fetch_backoff_seconds,
+            "responses": res.responses(),
+        }
+
+    ro_o = make()
+    oracle = one(ro_o)
+    T = oracle["ticks"]
+    schedule = [
+        # late-run crash: victims mid-chunk past their first boundary,
+        # so recovery resumes from the pooled blob and re-decodes only
+        # the in-chunk tail
+        FaultEvent(tick=max(2, (3 * T) // 5), kind="crash",
+                   instance_id="inst1"),
+        # short stall: waits out below watchdog_ticks, no escalation
+        FaultEvent(tick=3, kind="stuck", instance_id="inst2", ticks=2),
+        # long stall on live work: watchdog escalates to a crash
+        FaultEvent(tick=max(4, T // 3), kind="stuck",
+                   instance_id="inst0", ticks=8),
+        # armed fetch faults persist until fetches consume them, and one
+        # fetch's retry loop drains the queue back-to-back — so the
+        # three fetch faults are spaced across ticks to land on three
+        # DIFFERENT fetches: failures past the retry budget (degrade to
+        # re-prefill) on the first re-admission wave ...
+        FaultEvent(tick=2, kind="fetch_fail", count=3),
+        # ... checksum-caught corruption (pool keeps the intact entry,
+        # the retry fetch recovers without replay) mid-run ...
+        FaultEvent(tick=max(3, T // 2), kind="corrupt", count=1),
+        # ... and failures within the budget (retry succeeds) later
+        FaultEvent(tick=max(4, T // 2 + 2), kind="fetch_fail", count=2),
+    ]
+    # a crashed instance stays dead, so the faulted pass needs a fresh
+    # rollout; sharing the oracle's StepFunctions skips recompilation
+    faulted = one(make(steps=ro_o.steps), FaultInjector(schedule))
+
+    resp_o = oracle.pop("responses")
+    resp_f = faulted.pop("responses")
+    tokens_lost = 0
+    for rid, toks in resp_o.items():
+        got = resp_f.get(rid, [])
+        tokens_lost += sum(1 for a, b in zip(toks, got) if a != b)
+        tokens_lost += abs(len(toks) - len(got))
+    extra_steps = faulted["engine_steps"] - oracle["engine_steps"]
+
+    # cluster-scale projection: the same divided-mode sim shape as
+    # bench_train_overlap, with the per-segment fault model on
+    spec = _dc.replace(MOONLIGHT, n_requests=24, group_size=4,
+                       n_instances=2, max_gen_length=4096,
+                       mean_gen_length=1200)
+    wl = make_workload(spec, seed=seed)
+    skw = dict(mode="divided", policy="seer", max_slots=8,
+               chips_per_instance=1, kv_capacity_tokens=40_000,
+               chunk_size=512)
+    scfg = get_config("yi-6b")
+    r0 = ClusterSimulator(scfg, spec, SimConfig(**skw)).run(wl)
+    rf = ClusterSimulator(
+        scfg, spec,
+        SimConfig(**skw, fault_rate=0.05, mttr_ticks=8)).run(wl)
+    sim_faults = {
+        "fault_rate": 0.05,
+        "mttr_ticks": 8,
+        "fault_events": rf.extras["fault_events"],
+        "fault_lost_seconds": rf.extras["fault_lost_seconds"],
+        "fault_downtime_seconds": rf.extras["fault_downtime_seconds"],
+        "fault_recovery_seconds": rf.extras["fault_recovery_seconds"],
+        "fault_overhead_frac": rf.extras["fault_overhead_frac"],
+        "time_ratio": rf.total_time / max(r0.total_time, 1e-9),
+    }
+
+    return {
+        "workload": {
+            "n_groups": n_groups, "group_size": group_size,
+            "max_new_tokens": max_new_tokens,
+            "n_instances": n_instances, "max_slots": max_slots,
+            "chunk_size": chunk_size, "prefill_chunk": prefill_chunk,
+            "seed": seed, "watchdog_ticks": 3, "fetch_retries": 3,
+        },
+        "schedule": [
+            {"tick": e.tick, "kind": e.kind,
+             "instance_id": e.instance_id, "ticks": e.ticks,
+             "count": e.count}
+            for e in schedule
+        ],
+        "oracle": oracle,
+        "faulted": faulted,
+        "token_exact": resp_o == resp_f,
+        "tokens_lost": tokens_lost,
+        "recovery_extra_steps": extra_steps,
+        "recovery_overhead_ratio":
+            extra_steps / max(faulted["faulted_remaining_tokens"], 1),
+        "sim_faults": sim_faults,
+    }
+
+
 _ENGINE_ROLLOUT_CACHE: Optional[dict] = None
 _ENGINE_MIGRATION_CACHE: Optional[dict] = None
 _ENGINE_TOPOLOGY_CACHE: Optional[dict] = None
 _ENGINE_TREE_CACHE: Optional[dict] = None
 _TRAIN_OVERLAP_CACHE: Optional[dict] = None
+_ENGINE_FAULTS_CACHE: Optional[dict] = None
+
+
+def ensure_engine_faults_record() -> dict:
+    """Run the fault-injection benchmark once per process and write it
+    to BENCH_rollout.json's 'engine_faults' section."""
+    global _ENGINE_FAULTS_CACHE
+    if _ENGINE_FAULTS_CACHE is None:
+        _ENGINE_FAULTS_CACHE = bench_engine_faults()
+        update_bench_rollout("engine_faults", _ENGINE_FAULTS_CACHE)
+    return _ENGINE_FAULTS_CACHE
 
 
 def ensure_train_overlap_record() -> dict:
@@ -734,3 +928,43 @@ def _fmt(v) -> str:
             return f"{v:,.0f}"
         return f"{v:.3g}"
     return str(v)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="benchmark plumbing; smoke modes only — full runs "
+                    "go through benchmarks.run / scripts/check_bench.py")
+    ap.add_argument(
+        "--faults", action="store_true",
+        help="fault-injection smoke: run bench_engine_faults once, "
+             "print the recovery summary, exit nonzero unless recovery "
+             "was token-lossless (does NOT write the bench baseline)")
+    ns = ap.parse_args()
+    if ns.faults:
+        rec = bench_engine_faults()
+        f = rec["faulted"]
+        table([
+            dict(run="oracle", **{k: rec["oracle"][k] for k in
+                 ("engine_steps", "ticks", "host_syncs_per_step")}),
+            dict(run="faulted", **{k: f[k] for k in
+                 ("engine_steps", "ticks", "host_syncs_per_step")}),
+        ], ["run", "engine_steps", "ticks", "host_syncs_per_step"],
+            title="engine_faults smoke")
+        table([{
+            "crashes": f["instance_crashes"],
+            "escalations": f["watchdog_escalations"],
+            "rec_blob": f["recovered_via_blob"],
+            "rec_replay": f["recovered_via_replay"],
+            "fetch_degraded": f["fetch_degraded"],
+            "corrupt": f["corrupt_blobs"],
+            "tokens_lost": rec["tokens_lost"],
+            "overhead": rec["recovery_overhead_ratio"],
+        }], ["crashes", "escalations", "rec_blob", "rec_replay",
+             "fetch_degraded", "corrupt", "tokens_lost", "overhead"],
+            title="recovery")
+        ok = rec["token_exact"] and rec["tokens_lost"] == 0
+        print("token-lossless:", "PASS" if ok else "FAIL", flush=True)
+        raise SystemExit(0 if ok else 1)
+    ap.print_help()

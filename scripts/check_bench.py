@@ -36,6 +36,15 @@ forward than linear at the same per-request draft budget, with
 branching nodes actually verified, <= 1 host sync per step, and the
 uplift ratio no worse than the committed baseline (with slack).
 
+And the fault-injection benchmark (``engine_faults`` section): under a
+deterministic schedule of instance crashes, stalls (one escalated by
+the watchdog), fetch failures and a corrupted blob, recovery must be
+**token-lossless** (every response bit-identical to the no-fault
+oracle, ``tokens_lost == 0``), every recovery path must actually fire
+(blob resume, rewind+replay, retry-degrade, checksum catch), recovery
+overhead must stay under 2x the faulted requests' remaining decode
+budget, and the 1-host-sync-per-step contract must hold under faults.
+
 Exit status 0 iff every check passes — invoked from the verify skill so
 perf regressions fail tier-1 review, not just eyeballs.
 
@@ -88,6 +97,10 @@ def main(argv=None) -> int:
                     help="fresh batched migration stall seconds must be "
                          "<= this fraction of the same run's per-slot "
                          "path")
+    ap.add_argument("--recovery-overhead", type=float, default=2.0,
+                    help="faulted-run extra engine steps must be <= this "
+                         "multiple of the faulted requests' remaining "
+                         "decode budget at crash time")
     args = ap.parse_args(argv)
 
     base = _section(args.baseline, "engine")
@@ -95,17 +108,20 @@ def main(argv=None) -> int:
     base_topo = _section(args.baseline, "engine_topology")
     base_tree = _section(args.baseline, "engine_tree")
     base_ovl = _section(args.baseline, "train_overlap")
+    base_flt = _section(args.baseline, "engine_faults")
     if args.fresh:
         fresh = _section(args.fresh, "engine")
         fresh_mig = _section(args.fresh, "engine_migration")
         fresh_topo = _section(args.fresh, "engine_topology")
         fresh_tree = _section(args.fresh, "engine_tree")
         fresh_ovl = _section(args.fresh, "train_overlap")
+        fresh_flt = _section(args.fresh, "engine_faults")
     else:
         # the benchmarks package lives at the repo root, one level up
         sys.path.insert(0, os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
-        from benchmarks.common import (bench_engine_migration,
+        from benchmarks.common import (bench_engine_faults,
+                                       bench_engine_migration,
                                        bench_engine_rollout,
                                        bench_engine_topology,
                                        bench_engine_tree,
@@ -115,6 +131,7 @@ def main(argv=None) -> int:
         fresh_topo = bench_engine_topology()
         fresh_tree = bench_engine_tree()
         fresh_ovl = bench_train_overlap()
+        fresh_flt = bench_engine_faults()
 
     if fresh.get("workload") != base.get("workload"):
         print("[check_bench] FAIL workload mismatch: fresh "
@@ -147,6 +164,7 @@ def main(argv=None) -> int:
     checks += _topology_checks(fresh_topo, base_topo, args)
     checks += _tree_checks(fresh_tree, base_tree, args)
     checks += _train_overlap_checks(fresh_ovl, base_ovl, args)
+    checks += _fault_checks(fresh_flt, base_flt, args)
     ok = True
     for name, passed, detail in checks:
         status = "ok  " if passed else "FAIL"
@@ -303,6 +321,52 @@ def _train_overlap_checks(fresh: dict, base: dict, args) -> list:
         ("staleness_bound_held",
          s1["max_staleness"] <= 1,
          f"max trained-token staleness {s1['max_staleness']} <= 1"),
+    ]
+
+
+def _fault_checks(fresh: dict, base: dict, args) -> list:
+    """Gates on the fault-injection benchmark.
+
+    Token-losslessness and path coverage are absolute properties of the
+    fresh run (the fault schedule is deterministic, so "did the
+    watchdog fire" is a yes/no fact, not a measurement); the committed
+    baseline pins the workload shape so the numbers stay comparable
+    across PRs."""
+    if fresh.get("workload") != base.get("workload"):
+        return [("faults_workload", False,
+                 f"fresh {fresh.get('workload')} vs baseline "
+                 f"{base.get('workload')} — numbers are not comparable")]
+    f = fresh["faulted"]
+    sim = fresh["sim_faults"]
+    return [
+        ("faults_token_exact", fresh.get("token_exact") is True,
+         "faulted vs no-fault oracle token-exact: "
+         f"{fresh.get('token_exact')}"),
+        ("faults_tokens_lost", fresh.get("tokens_lost") == 0,
+         f"tokens lost to faults: {fresh.get('tokens_lost')} == 0"),
+        ("faults_recovery_exercised",
+         f["instance_crashes"] > 0 and f["watchdog_escalations"] > 0
+         and f["recovered_via_blob"] > 0
+         and f["recovered_via_replay"] > 0
+         and f["fetch_degraded"] > 0 and f["corrupt_blobs"] > 0,
+         f"crashes {f['instance_crashes']}, escalations "
+         f"{f['watchdog_escalations']}, blob {f['recovered_via_blob']}, "
+         f"replay {f['recovered_via_replay']}, degraded "
+         f"{f['fetch_degraded']}, corrupt {f['corrupt_blobs']} all > 0"),
+        ("faults_recovery_overhead",
+         fresh["recovery_extra_steps"]
+         <= args.recovery_overhead
+         * max(f["faulted_remaining_tokens"], 1),
+         f"{fresh['recovery_extra_steps']} extra steps <= "
+         f"{args.recovery_overhead} * {f['faulted_remaining_tokens']} "
+         "remaining tokens"),
+        ("faults_host_syncs_per_step",
+         f.get("host_syncs_per_step", float("inf")) <= 1.0 + 1e-9,
+         f"{f.get('host_syncs_per_step')} <= 1 (under faults)"),
+        ("faults_sim_overhead_charged",
+         sim["fault_events"] > 0 and sim["fault_overhead_frac"] > 0.0,
+         f"sim fault events {sim['fault_events']} > 0, overhead frac "
+         f"{sim['fault_overhead_frac']:.4f} > 0"),
     ]
 
 

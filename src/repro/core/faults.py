@@ -1,0 +1,156 @@
+"""Deterministic fault injection for the divided-rollout engine.
+
+A :class:`FaultInjector` holds a seeded schedule of :class:`FaultEvent`s
+keyed by *tick index* of the stream loop.  ``SeerRollout`` consults the
+injector exactly once per tick (``begin_tick``), at the tick boundary
+where no :class:`StepTicket` is in flight, so a faulted run is fully
+replayable: the same schedule against the same workload produces the
+same crashes, the same recoveries, and — the invariant everything here
+exists to test — the same tokens as a no-fault oracle run.
+
+Event kinds
+-----------
+``crash``
+    The named instance dies at the top of the tick.  Its KV cache, any
+    draining export buffers and in-flight bookkeeping are lost; every
+    live request on it is reconstructed by the rollout's recovery path
+    (pool blob when one exists at the request's chunk boundary,
+    otherwise rewind-to-prompt + replay via the ``reval_queue``).  With
+    ``lose_pool=True`` the victims' pool entries are dropped too,
+    forcing the replay path.
+``stuck``
+    The named instance stops making progress for ``ticks`` ticks (a
+    hung worker, not a dead one).  The stream loop's watchdog counts
+    ticks an instance holds work without progressing and escalates a
+    stuck instance to a crash after ``watchdog_ticks``.
+``fetch_fail`` / ``corrupt``
+    The next ``count`` pool fetches (optionally restricted to
+    ``req_id``) fail outright / return a blob whose checksum does not
+    match.  The rollout retries with modeled backoff and, after its
+    retry budget, degrades to replay-based recovery.
+
+Events are armed at their tick and, for the fetch kinds, stay armed
+until consumed — a fetch at tick 7 can be failed by an event armed at
+tick 5 if no fetch happened in between, which keeps schedules
+meaningful on workloads whose fetch timing shifts.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+FAULT_KINDS = ("crash", "stuck", "fetch_fail", "corrupt")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``tick`` is the stream-loop tick index."""
+
+    tick: int
+    kind: str                       # one of FAULT_KINDS
+    instance_id: Optional[str] = None   # crash/stuck target
+    ticks: int = 1                  # stuck duration
+    req_id: Optional[str] = None    # fetch_fail/corrupt filter (None = any)
+    count: int = 1                  # number of fetches affected
+    lose_pool: bool = False         # crash: drop victims' pool entries too
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind: {self.kind!r}")
+        if self.kind in ("crash", "stuck") and self.instance_id is None:
+            raise ValueError(f"{self.kind} event needs instance_id")
+
+
+@dataclass
+class _ArmedFetch:
+    kind: str
+    req_id: Optional[str]
+    remaining: int
+
+
+class FaultInjector:
+    """Replayable fault schedule, consumed by ``SeerRollout.run_stream``.
+
+    The injector is single-use per stream: tick arming and fetch-event
+    consumption are stateful.  Build a fresh injector (or call
+    ``reset()``) for each run you want to compare.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent] = ()):  # noqa: D107
+        self.events: List[FaultEvent] = list(events)
+        self._by_tick: Dict[int, List[FaultEvent]] = {}
+        for ev in self.events:
+            self._by_tick.setdefault(ev.tick, []).append(ev)
+        self._armed: List[_ArmedFetch] = []
+        self.fired: List[FaultEvent] = []
+
+    def reset(self) -> None:
+        self._armed = []
+        self.fired = []
+
+    # -- stream-loop hooks -------------------------------------------------
+    def begin_tick(self, tick: int) -> List[FaultEvent]:
+        """Arm this tick's events.  Returns the crash/stuck events for the
+        rollout to apply; fetch events are retained internally and consumed
+        through :meth:`fetch_outcome`."""
+        out: List[FaultEvent] = []
+        for ev in self._by_tick.get(tick, ()):  # schedule order is stable
+            self.fired.append(ev)
+            if ev.kind in ("fetch_fail", "corrupt"):
+                self._armed.append(_ArmedFetch(ev.kind, ev.req_id, ev.count))
+            else:
+                out.append(ev)
+        return out
+
+    def fetch_outcome(self, req_id: str) -> str:
+        """Outcome for one pool-fetch attempt: "ok", "fail" or "corrupt".
+
+        Consumes one unit from the oldest armed fetch event matching
+        ``req_id`` (events with ``req_id=None`` match any request)."""
+        for armed in self._armed:
+            if armed.remaining <= 0:
+                continue
+            if armed.req_id is not None and armed.req_id != req_id:
+                continue
+            armed.remaining -= 1
+            return "fail" if armed.kind == "fetch_fail" else "corrupt"
+        return "ok"
+
+    # -- schedule generation ----------------------------------------------
+    @classmethod
+    def seeded(cls, seed: int, instance_ids: Sequence[str], horizon: int, *,
+               crash_rate: float = 0.0, stuck_rate: float = 0.0,
+               fetch_fail_rate: float = 0.0, corrupt_rate: float = 0.0,
+               stuck_ticks: int = 2, max_crashes: Optional[int] = None,
+               lose_pool_frac: float = 0.0) -> "FaultInjector":
+        """Generate a deterministic schedule over ``horizon`` ticks.
+
+        Per tick, each live-looking fault class fires with its rate;
+        crash victims are drawn round-robin-free from ``instance_ids``
+        but never the last remaining instance (a schedule that kills
+        every instance is not recoverable by construction and raises in
+        the rollout instead)."""
+        rng = random.Random(seed)
+        alive = list(instance_ids)
+        events: List[FaultEvent] = []
+        crashes = 0
+        budget = (len(alive) - 1 if max_crashes is None
+                  else min(max_crashes, len(alive) - 1))
+        for tick in range(horizon):
+            if crashes < budget and rng.random() < crash_rate:
+                victim = alive.pop(rng.randrange(len(alive)))
+                events.append(FaultEvent(
+                    tick=tick, kind="crash", instance_id=victim,
+                    lose_pool=rng.random() < lose_pool_frac))
+                crashes += 1
+            if alive and rng.random() < stuck_rate:
+                events.append(FaultEvent(
+                    tick=tick, kind="stuck",
+                    instance_id=rng.choice(alive), ticks=stuck_ticks))
+            if rng.random() < fetch_fail_rate:
+                events.append(FaultEvent(tick=tick, kind="fetch_fail",
+                                         count=1 + rng.randrange(2)))
+            if rng.random() < corrupt_rate:
+                events.append(FaultEvent(tick=tick, kind="corrupt"))
+        return cls(events)

@@ -167,6 +167,10 @@ class GlobalKVPool:
         old = self._entries.pop(blob.req_id, None)
         if old is not None:
             self._deaccount(old)
+        # integrity stamp at the pool boundary: every pooled blob
+        # carries a header CRC, verified on the import side before any
+        # cache mutation (see KVBlob.stamp_checksum for what it covers)
+        blob.stamp_checksum()
         home = placed_node if placed_node is not None else node
         entry = PoolEntry(blob, "dram", home, blob.nbytes)
         self._entries[blob.req_id] = entry
@@ -230,6 +234,15 @@ class GlobalKVPool:
             return 0.0
         return self.costs.fetch_seconds(
             entry.nbytes, entry.tier, entry.home_node != node)
+
+    def peek_next_pos(self, req_id: str) -> Optional[int]:
+        """Position extent of ``req_id``'s pooled blob, or None if the
+        pool holds nothing for it.  No stats, no recency bump — the
+        recovery path's is-the-blob-usable probe (a blob is only a
+        valid resume point when its ``next_pos`` matches the request's
+        last chunk boundary)."""
+        entry = self._entries.get(req_id)
+        return None if entry is None else entry.blob.next_pos
 
     def get(self, req_id: str, node: str = "n0") -> Optional[KVBlob]:
         entry = self._entries.get(req_id)

@@ -88,6 +88,27 @@ class RolloutRequest:
         else:
             self.version_runs.append((version, n))
 
+    def version_tokens_recorded(self) -> int:
+        """Total tokens the ledger has recorded so far.  The recovery
+        path compares this against ``len(generated)`` to note only
+        genuinely-new tokens: replayed/re-decoded tokens keep the
+        versions they were originally sampled under."""
+        return sum(k for _, k in self.version_runs)
+
+    def trim_version_runs(self, n: int) -> None:
+        """Drop ledger entries from the tail until at most ``n`` tokens
+        are recorded.  Crash recovery from a chunk-boundary blob rewinds
+        the request to ``n = len(generated)`` committed tokens; the
+        in-chunk tokens beyond it re-decode (bit-identically) and
+        re-record on commit."""
+        while self.version_runs and self.version_tokens_recorded() > n:
+            v, k = self.version_runs[-1]
+            excess = self.version_tokens_recorded() - n
+            if k <= excess:
+                self.version_runs.pop()
+            else:
+                self.version_runs[-1] = (v, k - excess)
+
     def token_versions(self) -> List[int]:
         """Per-token param versions, expanded from the run-length ledger
         and padded with version 0 if the ledger is short (tokens from

@@ -26,20 +26,23 @@ autoregressive decoding.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.context import ContextManager
 from repro.core.dgds import DraftClient, DraftServer, SpeculationArgs
+from repro.core.faults import FaultInjector
 from repro.core.kvpool import GlobalKVPool
 from repro.core.mba import MBAConfig, mba_speculation, mba_tree_paths
 from repro.core.request import Group, ReqState, RolloutRequest
 from repro.core.scheduler import InstanceView, Scheduler
 from repro.core.sdmodel import ForwardCostModel, SDThroughputModel, TPU_V5E
-from repro.engine.engine import EngineSeq, Instance, StepFunctions
+from repro.engine.engine import (BlobCorruptionError, EngineSeq, Instance,
+                                 StepFunctions)
 from repro.engine.token_tree import TokenTree, build_token_tree
 
 
@@ -72,6 +75,21 @@ class RolloutStats:
     # the iteration barrier's tail bubble
     overlap_steps: int = 0
     reclaimed_rows: int = 0
+    # -- fault tolerance ---------------------------------------------------
+    ticks: int = 0               # stream-loop ticks run (fault-schedule axis)
+    instance_crashes: int = 0
+    stuck_ticks: int = 0         # ticks a hung instance sat on live work
+    watchdog_escalations: int = 0
+    recovered_requests: int = 0
+    recovered_via_blob: int = 0      # resumed from the pooled chunk blob
+    recovered_via_replay: int = 0    # rewound + replayed as verify drafts
+    recovery_redecode_tokens: int = 0  # in-chunk tokens re-decoded (blob path)
+    recovery_replay_tokens: int = 0    # tokens replayed as verify drafts
+    faulted_remaining_tokens: int = 0  # victims' remaining budget at crash
+    fetch_failures: int = 0      # injected pool-fetch failures retried
+    fetch_degraded: int = 0      # fetches that gave up -> replay recovery
+    corrupt_blobs: int = 0       # checksum-rejected fetched blobs
+    fetch_backoff_seconds: float = 0.0  # modeled retry backoff
 
     @property
     def mean_acceptance(self) -> float:
@@ -114,6 +132,10 @@ class SeerRollout:
                  pool_dram_gb: float = 4.0, base_seed: int = 0,
                  oracle_lengths: Optional[Dict[str, int]] = None,
                  admission_rank: str = "total_delay",
+                 fault_injector: Optional[FaultInjector] = None,
+                 watchdog_ticks: int = 3,
+                 fetch_retries: int = 3,
+                 fetch_backoff_s: float = 0.05,
                  steps: Optional[StepFunctions] = None):
         self.cfg = cfg
         self.chunk_size = chunk_size
@@ -217,10 +239,34 @@ class SeerRollout:
         # their prompt stash the old-params generation here; _admit
         # feeds it back as the slot's prefix-revalidation queue
         self._pending_rewind: Dict[str, List[int]] = {}
+        # -- fault tolerance --------------------------------------------
+        # deterministic fault schedule consumed at tick boundaries (one
+        # injector per stream: its armed state is stateful).  Settable
+        # between streams (benches warm up fault-free, then arm).
+        self.faults = fault_injector
+        # ticks a stuck instance may sit on live work before the
+        # watchdog declares it dead and recovers its requests (0
+        # disables escalation — a stuck instance just waits out)
+        self.watchdog_ticks = watchdog_ticks
+        # pool-fetch retry budget + modeled exponential backoff base.
+        # Backoff is accounted (fetch_backoff_seconds), never slept:
+        # pool transfers are modeled seconds too, and real sleeps would
+        # perturb the deterministic tick structure the schedules key on.
+        self.fetch_retries = fetch_retries
+        self.fetch_backoff_s = fetch_backoff_s
+        self._stuck_until: Dict[str, int] = {}   # instance_id -> tick
+        self._watchdog: Dict[str, int] = {}      # consecutive stuck ticks
+        self._cur_tick = 0
+        self._stream_drained = False
 
     # -- scheduling glue ---------------------------------------------------------
 
+    def _is_stuck(self, inst: Instance) -> bool:
+        return self._stuck_until.get(inst.instance_id, 0) > self._cur_tick
+
     def _views(self) -> List[InstanceView]:
+        # dead and currently-stuck instances take no placements: the
+        # scheduler only ever sees capacity that can actually step
         return [
             InstanceView(
                 instance_id=inst.instance_id,
@@ -231,6 +277,7 @@ class SeerRollout:
                 queued_prefill_tokens=inst.queued_prefill_tokens(),
                 node=inst.node)
             for inst in self.instances
+            if inst.alive and not self._is_stuck(inst)
         ]
 
     def _fetch_cost(self, r: RolloutRequest, node: str) -> float:
@@ -279,11 +326,7 @@ class SeerRollout:
         seq.next_pos = r.next_pos
         blob = None
         if r.next_pos > 0:
-            blob = self.pool.get(r.req_id, node=inst.node)
-            if blob is not None:
-                stats.pool_hits += 1
-            else:
-                stats.pool_misses += 1
+            blob = self._pool_fetch(r, inst, stats)
         slot = inst.admit(seq, blob)
         if r.instance_id is not None and r.instance_id != instance_id:
             r.migrations += 1
@@ -301,6 +344,47 @@ class SeerRollout:
             # so the still-valid prefix is re-accepted in bulk
             seq.reval_queue = list(rewound)
         self.clients[instance_id].register_group(r.group_id)
+
+    def _pool_fetch(self, r: RolloutRequest, inst: Instance,
+                    stats: RolloutStats) -> Optional["object"]:
+        """Fetch ``r``'s KV blob with retry-with-backoff and checksum
+        validation.  Injected fetch failures and corrupt blobs are
+        retried up to ``fetch_retries`` times (backoff is modeled, not
+        slept — it lands in ``fetch_backoff_seconds`` next to the
+        pool's own modeled transfer time); when the budget is exhausted
+        the fetch *degrades*: the entry is dropped and the admit takes
+        the pool-miss path, re-prefilling ``[0, next_pos)`` from the
+        tokens the host already holds — slower, but token-lossless."""
+        for attempt in range(max(1, self.fetch_retries)):
+            outcome = "ok" if self.faults is None \
+                else self.faults.fetch_outcome(r.req_id)
+            if outcome == "fail":
+                stats.fetch_failures += 1
+                stats.fetch_backoff_seconds += \
+                    self.fetch_backoff_s * (2 ** attempt)
+                continue
+            blob = self.pool.get(r.req_id, node=inst.node)
+            if blob is None:
+                stats.pool_misses += 1
+                return None
+            if outcome == "corrupt":
+                # fault injection tampers the FETCHED copy's stamp (the
+                # pool keeps the intact entry, so a retry can succeed)
+                blob = dataclasses.replace(
+                    blob, checksum=(blob.checksum or 0) ^ 0x5A5A5A5A)
+            try:
+                blob.verify_checksum()
+            except BlobCorruptionError:
+                stats.corrupt_blobs += 1
+                stats.fetch_backoff_seconds += \
+                    self.fetch_backoff_s * (2 ** attempt)
+                continue
+            stats.pool_hits += 1
+            return blob
+        stats.fetch_degraded += 1
+        stats.pool_misses += 1
+        self.pool.drop(r.req_id)
+        return None
 
     def _sync_back(self, r: RolloutRequest, seq: EngineSeq) -> None:
         r.generated = list(seq.generated)
@@ -360,6 +444,116 @@ class SeerRollout:
         for req_id in blobs:
             sched.requeue(self._reqs[req_id])
         return len(blobs)
+
+    # -- fault recovery ----------------------------------------------------
+
+    def fail_instance(self, instance_id: str, *,
+                      lose_pool: bool = False) -> None:
+        """Kill an instance NOW and recover its requests (test/ops
+        hook).  Legal at any :meth:`run_stream` yield point — the same
+        no-ticket-in-flight contract as :meth:`inject` and
+        :meth:`refresh_params`.  ``lose_pool=True`` also drops the
+        victims' pool entries, forcing replay-based recovery."""
+        if self._stream_sched is None:
+            raise RuntimeError(
+                "fail_instance() outside an active run_stream()")
+        for i in self.instances:
+            if i.step_in_flight:
+                raise RuntimeError(
+                    "fail_instance() with a step ticket in flight")
+        inst = self._inst(instance_id)
+        if not inst.alive:
+            return
+        self._crash_instance(inst, self._stream_sched, self._stream_stats,
+                             lose_pool=lose_pool)
+
+    def _crash_instance(self, inst: Instance, sched: Scheduler,
+                        stats: RolloutStats, *,
+                        lose_pool: bool = False) -> None:
+        """Declare ``inst`` dead and reconstruct every live request it
+        held, token-losslessly:
+
+        * **blob path** — the pool still holds the request's blob at its
+          last chunk boundary (``peek_next_pos == r.next_pos``; pool
+          entries survive fetches, so this is the common case).  The
+          request stays at the boundary the host already synced; the
+          in-chunk tokens lost with the cache re-decode bit-identically
+          (position-keyed sampling) on the next instance, and their
+          ledger entries are trimmed so the re-decode re-records them.
+        * **replay path** — no usable blob (never exported, export
+          buffer lost with the crash, stale boundary, or
+          ``lose_pool``).  Rewind to the prompt and stash the full
+          generation (plus any pending revalidation tail) in
+          ``_pending_rewind``: the next admission replays it as verify
+          drafts, the PR 6 ``reval_queue`` path.  ``version_runs`` is
+          preserved whole — replayed tokens keep the param versions
+          they were originally sampled under, so the trainer's
+          staleness ledger stays sound for partially-recovered groups.
+
+        Re-decoded tokens re-feed ``update_cst``; duplicate CST updates
+        only perturb draft scores, never sampled tokens, so the
+        losslessness guarantee holds.  Recovered requests re-enter
+        through ``Scheduler.select_instance`` like any released chunk."""
+        victims: List[Tuple[RolloutRequest, Optional[EngineSeq]]] = []
+        for rid in [rid for rid, pl in self._placements.items()
+                    if pl[0] is inst]:
+            _, _, seq, _ = self._placements.pop(rid)
+            victims.append((self._reqs[rid], seq))
+        seen = {r.req_id for r, _ in victims}
+        for seq in inst._draining.values():
+            # draining seqs left placements at release; the host synced
+            # their state then, but their export was still pending
+            if seq.req_id not in seen:
+                victims.append((self._reqs[seq.req_id], seq))
+                seen.add(seq.req_id)
+        for rid in inst._export_buffer:
+            # gathered-early blobs (takeover snapshots) die with the
+            # instance before reaching the pool; their requests were
+            # synced at release but never requeued
+            if rid not in seen and rid in self._reqs:
+                victims.append((self._reqs[rid], None))
+                seen.add(rid)
+        inst.crash()
+        stats.instance_crashes += 1
+        self._watchdog.pop(inst.instance_id, None)
+        self._stuck_until.pop(inst.instance_id, None)
+        if not any(i.alive for i in self.instances):
+            raise RuntimeError(
+                "all instances dead: no capacity left to recover onto")
+        for r, seq in victims:
+            if r.finished:
+                continue
+            gen_now = len(seq.generated) if seq is not None \
+                else len(r.generated)
+            stats.faulted_remaining_tokens += \
+                max(0, r.max_new_tokens - gen_now)
+            blob_pos = self.pool.peek_next_pos(r.req_id)
+            if lose_pool:
+                self.pool.drop(r.req_id)
+                blob_pos = None
+            pending_reval = bool(seq is not None and seq.reval_queue)
+            if blob_pos is not None and blob_pos == r.next_pos \
+                    and r.next_pos > 0 and not pending_reval:
+                stats.recovered_via_blob += 1
+                stats.recovery_redecode_tokens += \
+                    max(0, gen_now - len(r.generated))
+                r.trim_version_runs(len(r.generated))
+            else:
+                stats.recovered_via_replay += 1
+                tail = list(seq.reval_queue) if pending_reval else []
+                if seq is not None:
+                    self._sync_back(r, seq)
+                self.pool.drop(r.req_id)
+                replay = list(r.generated) + tail
+                if replay:
+                    self._pending_rewind[r.req_id] = replay
+                stats.recovery_replay_tokens += len(replay)
+                r.generated = []
+                r.logprobs = []
+                r.last_token = r.prompt[-1]
+                r.next_pos = len(r.prompt) - 1
+            stats.recovered_requests += 1
+            sched.requeue(r)
 
     # -- drafts --------------------------------------------------------------------
 
@@ -456,6 +650,13 @@ class SeerRollout:
         at a :meth:`run_stream` yield point (no step ticket in flight)."""
         if self._stream_sched is None:
             raise RuntimeError("inject() outside an active run_stream()")
+        if self._stream_drained:
+            # the final ("result", ...) event is out: the loop will
+            # never tick again, so groups added now would silently
+            # vanish (the scheduler buffers them, nobody drains them)
+            raise RuntimeError(
+                "inject() into a drained stream: the final result was "
+                "already yielded; start a new run_stream() instead")
         now = time.monotonic()
         self._epoch += 1
         for g in groups:
@@ -507,6 +708,11 @@ class SeerRollout:
             if version is None else int(version)
         sched = self._stream_sched
         for inst in self.instances:
+            if not inst.alive:
+                # a crashed instance holds nothing: its requests were
+                # already recovered (and will re-prefill/replay under
+                # whatever params are live at their next admission)
+                continue
             # old-params KV must never land in the new-params cache
             inst.cancel_pending_imports()
             # draining slots: materialise the export (frees the slot)
@@ -620,6 +826,10 @@ class SeerRollout:
         self._stream_sched = sched
         self._stream_stats = stats
         self._stream_groups = all_groups
+        self._stream_drained = False
+        self._stuck_until = {}
+        self._watchdog = {}
+        self._cur_tick = 0
         self._reqs = {r.req_id: r for g in groups for r in g.requests}
         self._req_epoch = {rid: self._epoch for rid in self._reqs}
         yielded: set = set()
@@ -638,6 +848,25 @@ class SeerRollout:
                      all_groups: Dict[str, Group], yielded: set,
                      t0: float, progress_every: int):
         while not sched.all_finished:
+            # 0) tick boundary: apply this tick's scheduled faults.  No
+            # ticket is in flight, so a crash here is indistinguishable
+            # from one at a yield point — the deterministic injection
+            # point that makes fault schedules replayable.
+            tick = stats.ticks
+            stats.ticks += 1
+            self._cur_tick = tick
+            if self.faults is not None:
+                for ev in self.faults.begin_tick(tick):
+                    if ev.kind == "crash":
+                        inst = self._inst(ev.instance_id)
+                        if inst.alive:
+                            self._crash_instance(inst, sched, stats,
+                                                 lose_pool=ev.lose_pool)
+                    elif ev.kind == "stuck":
+                        self._stuck_until[ev.instance_id] = max(
+                            self._stuck_until.get(ev.instance_id, 0),
+                            tick + ev.ticks)
+
             # 1) step every instance — dispatch all device work first
             # (JAX async dispatch); everything below until the commits
             # runs in the overlap window behind it.  Drafts for this
@@ -645,8 +874,32 @@ class SeerRollout:
             # change sampled outputs (the losslessness guarantee:
             # drafts affect only acceptance).
             any_active = False
+            any_blocked = False
             tickets = []
             for inst in self.instances:
+                if not inst.alive:
+                    continue
+                if self._is_stuck(inst):
+                    # hung worker: no dispatch this tick (and no
+                    # placements — _views hides it).  Its capacity comes
+                    # back when it unsticks, so it always counts as
+                    # blocked for the deadlock guard.  The watchdog
+                    # counts consecutive ticks it sits on live work and
+                    # escalates to a crash (recovering its requests on
+                    # healthy instances) at watchdog_ticks; a shorter
+                    # hang just waits out — trivially lossless.
+                    any_blocked = True
+                    if inst.active_slots() or inst.draining_slots() \
+                            or inst.pending_takeovers():
+                        stats.stuck_ticks += 1
+                        wd = self._watchdog.get(inst.instance_id, 0) + 1
+                        self._watchdog[inst.instance_id] = wd
+                        if self.watchdog_ticks \
+                                and wd >= self.watchdog_ticks:
+                            stats.watchdog_escalations += 1
+                            self._crash_instance(inst, sched, stats)
+                    continue
+                self._watchdog.pop(inst.instance_id, None)
                 ticket, drafts = None, {}
                 if inst.active_slots() or inst.pending_takeovers():
                     drafts = self._collect_drafts(inst)
@@ -691,6 +944,8 @@ class SeerRollout:
             # the topology ranking of real placement choices.
             freed = 0
             for inst in self.instances:
+                if not inst.alive or self._is_stuck(inst):
+                    continue
                 freed += self._flush_releases(inst, sched)
             if freed:
                 for r, iid in sched.plan_admissions(
@@ -711,8 +966,17 @@ class SeerRollout:
                     d = drafts.get(slot, [])
                     n_draft = len(d)
                     stats.tokens += len(new_toks)
-                    r.note_version_tokens(self.param_version,
-                                          len(new_toks))
+                    # staleness ledger: note only genuinely-new tokens.
+                    # Replayed/re-decoded tokens from crash recovery are
+                    # already recorded under the param versions they
+                    # were originally sampled at; the ledger catches up
+                    # to len(seq.generated) and then records normally
+                    # (at the crossover commit, only the truly-new
+                    # suffix of new_toks is noted).
+                    fresh = len(seq.generated) - r.version_tokens_recorded()
+                    if fresh > 0:
+                        r.note_version_tokens(self.param_version,
+                                              min(fresh, len(new_toks)))
                     if seq.reval_queue:
                         # prefix revalidation: the drafts came from the
                         # old-params generation, not the CST.  Excluded
@@ -793,8 +1057,8 @@ class SeerRollout:
                 yield ("group", g)
 
             free = sum(v.free_slots for v in self._views())
-            if not any_active and not freed and not admitted \
-                    and not sched.all_finished:
+            if not any_active and not any_blocked and not freed \
+                    and not admitted and not sched.all_finished:
                 # nothing running, nothing freed, nothing admitted and
                 # nothing placeable.  Give the consumer one injection
                 # window (next-epoch work may fit where this epoch's
@@ -833,4 +1097,7 @@ class SeerRollout:
             if gid not in yielded and g.all_finished:
                 yielded.add(gid)
                 yield ("group", g)
+        # past this yield the loop never ticks again: inject() checks
+        # the flag and raises instead of letting groups vanish
+        self._stream_drained = True
         yield ("result", result)

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import heapq
 import math
+import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -274,6 +275,18 @@ class SimConfig:
     # actually recovers; calibrate with with_measured_barrier().
     async_overlap: bool = False
     barrier_reclaim: float = 1.0
+    # fault injection (cluster-scale recovery-overhead prediction): each
+    # completed segment fails with probability fault_rate (seeded,
+    # deterministic — the sim-side mirror of the engine's
+    # FaultInjector).  A failed segment's decoded tokens are lost with
+    # the worker: every running request requeues and resumes from its
+    # last chunk-boundary blob (token-lossless by the engine's recovery
+    # invariant — only time is lost), and the instance sits out
+    # mttr_ticks modeled decode steps of downtime before its next
+    # segment.  fault_* extras report events, redone work, downtime and
+    # the overhead fraction the recovery adds.
+    fault_rate: float = 0.0
+    mttr_ticks: int = 8
 
     def with_measured_overlap(self, fraction: float) -> "SimConfig":
         """Calibrate ``migration_overlap`` from an engine's measured
@@ -556,12 +569,41 @@ class ClusterSimulator:
             ctr += 1
 
         idle_wakes = 0
+        fault_rng = random.Random(sim.seed * 9176 + 11)
+        fault_events = 0
+        fault_lost = 0.0
+        fault_down = 0.0
         while finished < n_target and heap:
             now, _, k = heapq.heappop(heap)
             if idle_wakes > 200 * n_requests:
                 raise RuntimeError("simulation livelock (nothing placeable)")
             inst = instances[k]
             t0, dur, n_tok = inst._seg
+            if n_tok and sim.fault_rate > 0.0 \
+                    and fault_rng.random() < sim.fault_rate:
+                # instance crash at segment end: the segment burned its
+                # wall time but its tokens are lost with the worker.
+                # Every running request requeues (recovering from its
+                # last chunk-boundary pool blob — lossless, so lengths
+                # are simply re-decoded later) and the instance idles
+                # mttr_ticks modeled decode steps before its next
+                # segment.
+                inst.busy_time += dur
+                inst.last_busy_end = now
+                fault_events += 1
+                fault_lost += dur
+                downtime = sim.mttr_ticks * dur / max(n_tok, 1)
+                fault_down += downtime
+                inst.overhead += downtime
+                for rid in list(inst.running):
+                    s = inst.running.pop(rid)
+                    sched.requeue(s.req)
+                    s.req.instance_id = inst.iid
+                    if sim.mode == "divided":
+                        # the re-admission re-fetches the boundary blob
+                        inst.mig_blobs += 1
+                        inst.mig_bytes += s.ctx * self.kv_bytes_per_token
+                n_tok = 0
             if n_tok:
                 inst.busy_time += dur
                 inst.last_busy_end = now
@@ -676,6 +718,12 @@ class ClusterSimulator:
                 "barrier_stall_seconds": barrier_stall,
                 "barrier_stall_reclaimed": reclaimed,
                 "effective_time": effective_time,
+                "fault_events": fault_events,
+                "fault_lost_seconds": fault_lost,
+                "fault_downtime_seconds": fault_down,
+                "fault_recovery_seconds": fault_lost + fault_down,
+                "fault_overhead_frac":
+                    (fault_lost + fault_down) / max(busy, 1e-9),
             })
 
     # -- placement -----------------------------------------------------------------

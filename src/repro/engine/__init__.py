@@ -1,12 +1,14 @@
-from repro.engine.engine import (EngineSeq, Instance, KVBlob, StepFunctions,
-                                 StepTicket, donation_supported)
+from repro.engine.engine import (BlobCorruptionError, EngineSeq, Instance,
+                                 KVBlob, StepFunctions, StepTicket,
+                                 donation_supported)
 from repro.engine.sampling import (draft_acceptance, position_keys,
                                    sample_tokens, token_logprobs_at,
                                    tree_acceptance)
 from repro.engine.token_tree import (TokenTree, build_token_tree,
                                      chain_tree)
 
-__all__ = ["EngineSeq", "Instance", "KVBlob", "StepFunctions", "StepTicket",
+__all__ = ["BlobCorruptionError",
+           "EngineSeq", "Instance", "KVBlob", "StepFunctions", "StepTicket",
            "donation_supported", "draft_acceptance", "position_keys",
            "sample_tokens", "token_logprobs_at", "tree_acceptance",
            "TokenTree", "build_token_tree", "chain_tree"]

@@ -123,6 +123,7 @@ step) as the reference path for losslessness and perf comparisons.
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -605,6 +606,47 @@ class KVBlob:
     arrays: dict                  # cache leaves sliced at the slot
     next_pos: int
     nbytes: int
+    # CRC32 over the blob *header* (req_id, next_pos, nbytes and every
+    # leaf's name/shape/dtype) — the metadata that decides where import
+    # scatters the bytes.  A corrupted header is the failure mode that
+    # silently lands KV at garbage positions; content checksums over the
+    # device arrays would force a device->host sync per exported blob
+    # and break both export overlap and the 1-host-sync contract, so the
+    # header is the integrity boundary.  Stamped by the pool on put,
+    # verified by ``Instance`` before any import-side mutation.
+    checksum: Optional[int] = None
+
+    def header_crc(self) -> int:
+        parts = [self.req_id, str(self.next_pos), str(self.nbytes)]
+        for name in sorted(self.arrays):
+            leaf = self.arrays[name]
+            parts.append(f"{name}:{tuple(leaf.shape)}:{leaf.dtype}")
+        return zlib.crc32("|".join(parts).encode()) & 0xFFFFFFFF
+
+    def stamp_checksum(self) -> "KVBlob":
+        """Idempotent: (re)stamps ``checksum`` from the current header."""
+        self.checksum = self.header_crc()
+        return self
+
+    def verify_checksum(self) -> None:
+        """Raise :class:`BlobCorruptionError` on a stamp/header mismatch.
+        Unstamped blobs (``checksum is None``, e.g. hand-built in tests
+        or never pooled) pass — there is nothing to verify against."""
+        if self.checksum is not None and self.checksum != self.header_crc():
+            raise BlobCorruptionError(
+                f"KV blob for {self.req_id!r} failed checksum validation "
+                f"(stored 0x{self.checksum:08x} != computed "
+                f"0x{self.header_crc():08x}); refusing to import at "
+                f"possibly-garbage positions")
+
+
+class BlobCorruptionError(RuntimeError):
+    """A pooled KV blob's checksum no longer matches its header.
+
+    Raised instead of importing the blob — scattering bytes whose
+    position metadata is untrustworthy corrupts live cache rows.  The
+    rollout treats this like a failed fetch: retry with backoff, then
+    degrade to replay-based recovery."""
 
 
 # ---------------------------------------------------------------------------
@@ -758,6 +800,10 @@ class Instance:
             self.cache["cross_k"], self.cache["cross_v"] = ck, cv
         self.slots: List[Optional[EngineSeq]] = [None] * max_slots
         self._inflight: Optional[StepTicket] = None
+        # liveness: a crashed instance refuses all work until replaced.
+        # The rollout's recovery path flips this via ``crash()`` (fault
+        # injection / watchdog escalation) and re-homes every victim.
+        self.alive = True
         # KV migration state: draining slots hold a released-but-not-yet
         # -exported seq (rows masked out of steps, unavailable to admit);
         # pending imports are admitted blobs not yet scattered into the
@@ -773,6 +819,7 @@ class Instance:
         self._pending_clears: List[int] = []
         self._export_buffer: Dict[str, KVBlob] = {}
         # stats
+        self.crashes = 0
         self.tokens_generated = 0
         self.steps_run = 0
         self.prefill_tokens = 0
@@ -802,6 +849,8 @@ class Instance:
     # -- capacity ------------------------------------------------------------
 
     def free_slots(self) -> int:
+        if not self.alive:
+            return 0
         free = sum(s is None for s in self.slots)
         if self.admit_into_draining:
             # a draining slot is admittable one tick early: the next
@@ -866,6 +915,13 @@ class Instance:
             # compute.  The sync path keeps the guard: it block-waits
             # on the cache inside admit.
             raise RuntimeError("admit() while a step ticket is in flight")
+        if not self.alive:
+            raise RuntimeError("admit() on a crashed instance")
+        if blob is not None and blob.next_pos == seq.next_pos:
+            # integrity gate BEFORE any slot/cache mutation: a corrupt
+            # blob must leave the instance untouched so the caller can
+            # retry the fetch or re-admit with blob=None (replay path)
+            blob.verify_checksum()
         t0 = time.perf_counter()
         takeover = False
         free = [i for i, s in enumerate(self.slots) if s is None]
@@ -1007,6 +1063,31 @@ class Instance:
         self._pending_imports.clear()
         return slots
 
+    def crash(self) -> List[EngineSeq]:
+        """Lose the worker: cache contents, draining export buffers and
+        every piece of in-flight bookkeeping are gone.  Returns the seqs
+        that were live here (active, prefilling, draining, takeover
+        admissions — deduped) so the caller can re-home them; blobs
+        sitting in the export buffer are simply lost (their requests
+        must recover by replay).  A dead instance refuses ``admit`` and
+        ``dispatch_step`` and reports zero free slots until replaced."""
+        victims: List[EngineSeq] = []
+        seen = set()
+        for s in list(self.slots) + list(self._draining.values()):
+            if s is not None and id(s) not in seen:
+                seen.add(id(s))
+                victims.append(s)
+        self.alive = False
+        self.crashes += 1
+        self._inflight = None
+        self.slots = [None] * self.max_slots
+        self._draining.clear()
+        self._takeovers.clear()
+        self._pending_imports.clear()
+        self._pending_clears.clear()
+        self._export_buffer.clear()
+        return victims
+
     @property
     def step_in_flight(self) -> bool:
         return self._inflight is not None
@@ -1119,6 +1200,7 @@ class Instance:
         return KVBlob(seq.req_id, arrays, seq.next_pos, nbytes)
 
     def _import_kv(self, slot: int, blob: KVBlob) -> None:
+        blob.verify_checksum()     # defense in depth; admit gates too
         self._check_blob_fits(blob)
         for k in self.cache:
             ax = _slot_slice(k)
@@ -1299,6 +1381,8 @@ class Instance:
         """
         if self._inflight is not None:
             raise RuntimeError("dispatch_step() with a ticket in flight")
+        if not self.alive:
+            raise RuntimeError("dispatch_step() on a crashed instance")
         drafts = drafts or {}
         if self.prefill_mode == "sync":
             return _SyncTicket(self._run_step_sync(drafts))

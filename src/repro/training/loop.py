@@ -59,6 +59,15 @@ class RLConfig:
     # staleness recorded); "truncate" rewinds to the prompt and replays
     # the old generation as verify drafts (bit-exact with a fresh run)
     refresh_mode: str = "keep"
+    # -- fault tolerance ---------------------------------------------------
+    # deterministic fault schedule for the rollout stream (see
+    # repro.core.faults.FaultInjector): crashed instances recover
+    # token-losslessly, recovered tokens keep their original param
+    # versions, so partially-recovered groups train with a sound
+    # staleness ledger.  watchdog_ticks escalates a stuck instance to a
+    # crash after that many unproductive ticks.
+    fault_injector: Optional[object] = None
+    watchdog_ticks: int = 3
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     log: Callable[[str], None] = print
@@ -148,7 +157,9 @@ class RLTrainer:
             cfg, self.params, n_instances=rl.n_instances,
             max_slots=rl.max_slots, cache_len=rl.cache_len,
             chunk_size=rl.chunk_size, policy=rl.policy,
-            spec_decode=rl.spec_decode, base_seed=rl.seed)
+            spec_decode=rl.spec_decode, base_seed=rl.seed,
+            fault_injector=rl.fault_injector,
+            watchdog_ticks=rl.watchdog_ticks)
         self.updater = WeightUpdater(self.rollout.instances)
         self.rewards = RewardWorker(task)
         self.history: List[IterStats] = []

@@ -1,0 +1,507 @@
+"""Fault-tolerant divided rollout: deterministic fault injection and
+token-lossless request recovery.
+
+Unit level: KV-blob header checksums (stamp/verify/tamper), the pool's
+stamp-on-put + ``peek_next_pos`` probe, the staleness-ledger trim
+helpers, and ``FaultInjector`` schedule semantics (determinism, armed
+fetch events, never-kill-the-last-instance seeding).
+
+Engine level: a crashed :class:`Instance` refuses work and surrenders
+its victims; ``admit`` verifies a pooled blob's checksum before any
+cache mutation.
+
+Rollout level: every recovery path — blob resume at a chunk boundary,
+rewind + reval replay, retry-with-backoff on fetch faults, degrade to
+re-prefill, watchdog escalation of a hung instance — must reproduce the
+no-fault oracle's tokens exactly.  A fuzz suite crashes an instance at
+every tick of the oracle run (x lose_pool x spec_mode) with a 3-case
+tier-1 slice and the full sweep marked slow, mirroring the migration
+fuzz suite.
+
+Training level: a faulted trainer run must match the no-fault loss/
+reward/token trajectory (recovered tokens keep their original param
+versions, so the staleness ledger stays sound)."""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.faults import FAULT_KINDS, FaultEvent, FaultInjector
+from repro.core.kvpool import GlobalKVPool
+from repro.core.request import RolloutRequest, make_groups
+from repro.core.rollout import SeerRollout
+from repro.core.simulator import ClusterSimulator, SimConfig
+from repro.engine import (BlobCorruptionError, EngineSeq, Instance, KVBlob,
+                          StepFunctions)
+
+
+def _blob(rid="r0", next_pos=8, shape=(2, 8, 4)):
+    arr = np.zeros(shape, dtype=np.float32)
+    return KVBlob(req_id=rid, arrays={"k": arr, "v": arr},
+                  next_pos=next_pos, nbytes=2 * arr.nbytes)
+
+
+# ---------------- checksums --------------------------------------------------
+
+
+def test_blob_checksum_stamp_verify_tamper():
+    b = _blob()
+    assert b.checksum is None
+    b.verify_checksum()                       # unstamped passes
+    b.stamp_checksum()
+    crc = b.checksum
+    assert crc is not None
+    b.verify_checksum()
+    assert b.stamp_checksum().checksum == crc  # idempotent
+    # tampered header metadata (the bytes that decide import positions)
+    bad = dataclasses.replace(b, next_pos=b.next_pos + 1)
+    with pytest.raises(BlobCorruptionError, match="checksum"):
+        bad.verify_checksum()
+    # tampered stamp with intact header
+    bad2 = dataclasses.replace(b, checksum=crc ^ 1)
+    with pytest.raises(BlobCorruptionError):
+        bad2.verify_checksum()
+
+
+def test_pool_stamps_on_put_and_peeks_next_pos():
+    pool = GlobalKVPool(dram_capacity=1 << 30)
+    assert pool.peek_next_pos("r0") is None
+    b = _blob("r0", next_pos=12)
+    pool.put(b, node="n0")
+    assert b.checksum == b.header_crc()
+    assert pool.peek_next_pos("r0") == 12
+    got = pool.get("r0", node="n0")
+    got.verify_checksum()
+    # the entry survives the fetch (recovery relies on this)
+    assert pool.peek_next_pos("r0") == 12
+    pool.drop("r0")
+    assert pool.peek_next_pos("r0") is None
+    # put_batch stamps too
+    b2 = _blob("r1", next_pos=4)
+    pool.put_batch([b2], node="n0")
+    assert b2.checksum is not None
+
+
+# ---------------- staleness-ledger helpers -----------------------------------
+
+
+def test_version_runs_recorded_and_trim():
+    r = RolloutRequest("r0", "g0", [1, 2, 3], seed=0, max_new_tokens=16)
+    r.note_version_tokens(0, 4)
+    r.note_version_tokens(1, 3)
+    r.note_version_tokens(1, 2)               # merges into the last run
+    assert r.version_runs == [(0, 4), (1, 5)]
+    assert r.version_tokens_recorded() == 9
+    r.trim_version_runs(6)                    # shrink the tail run
+    assert r.version_runs == [(0, 4), (1, 2)]
+    r.trim_version_runs(3)                    # drop it, shrink the first
+    assert r.version_runs == [(0, 3)]
+    r.trim_version_runs(0)
+    assert r.version_runs == []
+
+
+# ---------------- injector semantics -----------------------------------------
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(tick=0, kind="meteor")
+    with pytest.raises(ValueError, match="instance_id"):
+        FaultEvent(tick=0, kind="crash")
+    with pytest.raises(ValueError, match="instance_id"):
+        FaultEvent(tick=0, kind="stuck")
+    for k in FAULT_KINDS:
+        FaultEvent(tick=0, kind=k, instance_id="inst0")
+
+
+def test_injector_armed_fetch_consumption():
+    inj = FaultInjector([
+        FaultEvent(tick=1, kind="fetch_fail", count=2),
+        FaultEvent(tick=1, kind="corrupt", req_id="r7"),
+        FaultEvent(tick=3, kind="crash", instance_id="inst0"),
+    ])
+    assert inj.begin_tick(0) == []
+    assert inj.begin_tick(1) == []            # fetch kinds arm internally
+    # armed events persist across ticks until consumed, oldest first
+    assert inj.fetch_outcome("rX") == "fail"
+    assert inj.begin_tick(2) == []
+    assert inj.fetch_outcome("rY") == "fail"
+    # the corrupt event is filtered to r7: other requests pass
+    assert inj.fetch_outcome("rX") == "ok"
+    assert inj.fetch_outcome("r7") == "corrupt"
+    assert inj.fetch_outcome("r7") == "ok"    # consumed
+    crash = inj.begin_tick(3)
+    assert [e.kind for e in crash] == ["crash"]
+    assert len(inj.fired) == 3
+    inj.reset()
+    assert inj.fired == []
+    assert inj.begin_tick(1) == []            # schedule replays after reset
+    assert inj.fetch_outcome("rZ") == "fail"
+
+
+def test_seeded_schedule_deterministic_and_spares_last_instance():
+    ids = ["inst0", "inst1", "inst2"]
+    kw = dict(crash_rate=0.2, stuck_rate=0.1, fetch_fail_rate=0.1,
+              corrupt_rate=0.05, lose_pool_frac=0.5)
+    a = FaultInjector.seeded(11, ids, horizon=40, **kw)
+    b = FaultInjector.seeded(11, ids, horizon=40, **kw)
+    assert a.events == b.events
+    assert a.events, "rates high enough that the schedule is non-empty"
+    c = FaultInjector.seeded(12, ids, horizon=40, **kw)
+    assert c.events != a.events
+    crashes = [e for e in a.events if e.kind == "crash"]
+    assert 0 < len(crashes) <= len(ids) - 1
+    assert len({e.instance_id for e in crashes}) == len(crashes)
+
+
+# ---------------- engine: crashed instances ----------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny(tiny_params_cache):
+    cfg, params = tiny_params_cache("granite-3-8b")
+    return cfg, params, StepFunctions(cfg)
+
+
+def test_crashed_instance_refuses_work(tiny):
+    cfg, params, steps = tiny
+    inst = Instance(cfg, params, steps, max_slots=2, cache_len=64,
+                    gamma_max=0, prefill_chunk=8, base_seed=7)
+    s = EngineSeq("r0", "g0", [2, 3, 4], seed=1, max_new_tokens=4)
+    inst.admit(s)
+    victims = inst.crash()
+    assert [v.req_id for v in victims] == ["r0"]
+    assert not inst.alive and inst.crashes == 1
+    assert inst.free_slots() == 0
+    with pytest.raises(RuntimeError, match="crashed instance"):
+        inst.admit(EngineSeq("r1", "g0", [2, 3], seed=1, max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="crashed instance"):
+        inst.dispatch_step()
+    assert inst.crash() == []                 # idempotent
+
+
+def test_admit_verifies_blob_checksum_before_mutation(tiny):
+    cfg, params, steps = tiny
+    a = Instance(cfg, params, steps, max_slots=1, cache_len=64,
+                 gamma_max=0, prefill_chunk=8, base_seed=7)
+    s = EngineSeq("r0", "g0", list(range(2, 12)), seed=3, max_new_tokens=4)
+    slot = a.admit(s)
+    while s.prefilling:
+        a.run_step()
+    a.run_step()
+    blob = a.release(slot, export=True)
+    blob.stamp_checksum()
+    bad = dataclasses.replace(blob, checksum=blob.checksum ^ 0xBEEF)
+    b = Instance(cfg, params, steps, max_slots=1, cache_len=64,
+                 gamma_max=0, prefill_chunk=8, base_seed=7)
+    with pytest.raises(BlobCorruptionError):
+        b.admit(s, bad)
+    assert b.free_slots() == 1                # nothing was mutated
+    b.admit(s, blob)                          # intact blob admits fine
+
+
+# ---------------- rollout: recovery vs the no-fault oracle -------------------
+
+
+def _prompts(cfg, n_groups=3):
+    return [[(7 * g + 3 * j) % (cfg.vocab_size - 2) + 1
+             for j in range(6 + 4 * g)]
+            for g in range(n_groups)]
+
+
+def _rollout(cfg, params, steps, injector=None, **kw):
+    defaults = dict(n_instances=2, max_slots=2, cache_len=64,
+                    chunk_size=5, prefill_chunk=8, policy="seer",
+                    spec_decode=False, gamma_max=8, base_seed=7,
+                    watchdog_ticks=3, fetch_retries=3,
+                    fault_injector=injector, steps=steps)
+    defaults.update(kw)
+    return SeerRollout(cfg, params, **defaults)
+
+
+def _run(cfg, params, steps, injector=None, max_new=12, **kw):
+    ro = _rollout(cfg, params, steps, injector, **kw)
+    res = ro.run(make_groups(_prompts(cfg), group_size=2,
+                             max_new_tokens=max_new, seed=5))
+    return res.responses(), res.stats, ro
+
+
+def test_inject_into_drained_stream_raises(tiny):
+    cfg, params, steps = tiny
+    ro = _rollout(cfg, params, steps)
+    groups = make_groups(_prompts(cfg), group_size=2, max_new_tokens=4,
+                         seed=5)
+    extra = make_groups(_prompts(cfg, 1), group_size=2, max_new_tokens=4,
+                        seed=9, prefix="x")
+    stream = ro.run_stream(groups)
+    for kind, _ in stream:
+        if kind == "result":
+            # the final result is out: injecting now must raise, not
+            # silently strand the groups in a dead scheduler
+            with pytest.raises(RuntimeError, match="drained stream"):
+                ro.inject(extra)
+    # once the generator is exhausted the stream handles are torn down:
+    # the (older) outside-a-stream guard takes over
+    with pytest.raises(RuntimeError, match="outside an active"):
+        ro.inject(extra)
+
+
+def _crash_case(cfg, params, steps, oracle, tick, lose_pool, **kw):
+    inj = FaultInjector([FaultEvent(tick=tick, kind="crash",
+                                    instance_id="inst0",
+                                    lose_pool=lose_pool)])
+    resp, stats, _ = _run(cfg, params, steps, inj, **kw)
+    assert resp == oracle, \
+        f"crash at tick {tick} (lose_pool={lose_pool}) lost tokens"
+    return stats
+
+
+def test_crash_recovery_token_lossless_quick(tiny):
+    """Tier-1 slice: three crash ticks (early/mid/late) x lose_pool,
+    all token-exact vs the no-fault oracle, with both recovery paths
+    exercised across the slice."""
+    cfg, params, steps = tiny
+    oracle, ostats, _ = _run(cfg, params, steps)
+    ticks = sorted({2, ostats.ticks // 2, max(2, ostats.ticks - 4)})
+    blob = replay = 0
+    for t in ticks:
+        s = _crash_case(cfg, params, steps, oracle, t, lose_pool=False)
+        assert s.instance_crashes == 1
+        blob += s.recovered_via_blob
+        replay += s.recovered_via_replay
+    s = _crash_case(cfg, params, steps, oracle, ticks[1], lose_pool=True)
+    assert s.recovered_via_blob == 0          # pool entries were dropped
+    replay += s.recovered_via_replay
+    assert blob > 0, "no case resumed from a pooled chunk blob"
+    assert replay > 0, "no case took the rewind+replay path"
+
+
+@pytest.mark.slow
+def test_crash_fuzz_every_tick_token_lossless(tiny):
+    """Crash inst0 at EVERY tick of the oracle run, x lose_pool, under
+    plain decode: recovery must be token-lossless everywhere."""
+    cfg, params, steps = tiny
+    oracle, ostats, _ = _run(cfg, params, steps)
+    blob = replay = redecode = 0
+    for t in range(ostats.ticks):
+        for lose_pool in (False, True):
+            s = _crash_case(cfg, params, steps, oracle, t,
+                            lose_pool=lose_pool)
+            blob += s.recovered_via_blob
+            replay += s.recovered_via_replay
+            redecode += s.recovery_redecode_tokens
+    assert blob > 0 and replay > 0
+    assert redecode > 0, "no crash caught a victim mid-chunk"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("spec_mode,top_k", [("linear", 1), ("tree", 2)])
+def test_crash_fuzz_spec_decode_token_lossless(tiny, spec_mode, top_k):
+    """Crashes under speculative decoding (linear and multi-path tree
+    drafts): the reval replay path must compose with live speculation."""
+    cfg, params, steps = tiny
+    kw = dict(spec_decode=True, spec_mode=spec_mode,
+              multipath_top_k=top_k, gamma_max=4)
+    oracle, ostats, _ = _run(cfg, params, steps, **kw)
+    recovered = 0
+    for t in range(0, ostats.ticks, 2):
+        for lose_pool in (False, True):
+            s = _crash_case(cfg, params, steps, oracle, t,
+                            lose_pool=lose_pool, **kw)
+            recovered += s.recovered_requests
+    assert recovered > 0
+
+
+def test_stuck_instance_waits_out_lossless(tiny):
+    """A short stall (below watchdog_ticks) stalls progress but never
+    loses tokens and never escalates."""
+    cfg, params, steps = tiny
+    oracle, _, _ = _run(cfg, params, steps)
+    inj = FaultInjector([FaultEvent(tick=3, kind="stuck",
+                                    instance_id="inst0", ticks=2)])
+    resp, stats, _ = _run(cfg, params, steps, inj)
+    assert resp == oracle
+    assert stats.watchdog_escalations == 0
+    assert stats.instance_crashes == 0
+    assert stats.stuck_ticks > 0
+
+
+def test_watchdog_escalates_long_stall_lossless(tiny):
+    """A stall past watchdog_ticks escalates to a crash; the victims
+    recover on the healthy instance with no token loss."""
+    cfg, params, steps = tiny
+    oracle, _, _ = _run(cfg, params, steps)
+    inj = FaultInjector([FaultEvent(tick=4, kind="stuck",
+                                    instance_id="inst0", ticks=30)])
+    resp, stats, _ = _run(cfg, params, steps, inj)
+    assert resp == oracle
+    assert stats.watchdog_escalations == 1
+    assert stats.instance_crashes == 1
+    assert stats.recovered_requests > 0
+
+
+def test_fetch_retry_corrupt_and_degrade_lossless(tiny):
+    """Fetch faults: failures within the retry budget recover by retry,
+    a corrupted blob is caught by its checksum (pool entry intact, the
+    retry succeeds), and failures past the budget degrade to the
+    pool-miss re-prefill path — all token-lossless."""
+    cfg, params, steps = tiny
+    oracle, _, _ = _run(cfg, params, steps)
+    inj = FaultInjector([
+        FaultEvent(tick=2, kind="fetch_fail", count=2),   # retry wins
+        FaultEvent(tick=6, kind="corrupt", count=1),      # checksum catch
+        FaultEvent(tick=9, kind="fetch_fail", count=3),   # degrade
+    ])
+    resp, stats, ro = _run(cfg, params, steps, inj)
+    assert resp == oracle
+    assert stats.fetch_failures >= 2
+    assert stats.corrupt_blobs >= 1
+    assert stats.fetch_degraded >= 1
+    assert stats.fetch_backoff_seconds > 0.0
+    assert stats.instance_crashes == 0
+
+
+def test_fail_instance_hook_and_all_dead_raises(tiny):
+    """The ops hook kills an instance at a yield point (lossless, like
+    a scheduled crash); killing the last instance raises instead of
+    hanging."""
+    cfg, params, steps = tiny
+    oracle, _, _ = _run(cfg, params, steps)
+    ro = _rollout(cfg, params, steps)
+    with pytest.raises(RuntimeError, match="outside an active"):
+        ro.fail_instance("inst0")
+    groups = make_groups(_prompts(cfg), group_size=2, max_new_tokens=12,
+                         seed=5)
+    stream = ro.run_stream(groups)
+    all_dead = False
+    for kind, _payload in stream:
+        if kind == "result":
+            break
+        ro.fail_instance("inst0")
+        ro.fail_instance("inst0")          # already dead: a no-op
+        with pytest.raises(RuntimeError, match="all instances dead"):
+            ro.fail_instance("inst1")
+        all_dead = True
+        break
+    assert all_dead, "stream yielded no mid-run event"
+    stream.close()
+    # a single (recoverable) scheduled crash of the same instance is
+    # lossless on a fresh rollout
+    inj = FaultInjector([FaultEvent(tick=5, kind="crash",
+                                    instance_id="inst1")])
+    resp, stats, _ = _run(cfg, params, steps, inj)
+    assert resp == oracle
+    assert stats.instance_crashes == 1
+
+
+def test_recovery_preserves_version_ledger(tiny):
+    """Crash-replayed tokens keep the param version they were sampled
+    under: after a mid-stream refresh AND a crash, every request's
+    ledger still covers its tokens with non-decreasing versions."""
+    cfg, params, steps = tiny
+    ro = _rollout(cfg, params, steps)
+    groups = make_groups(_prompts(cfg), group_size=2, max_new_tokens=12,
+                         seed=5)
+    events = 0
+    for kind, payload in ro.run_stream(groups):
+        if kind == "result":
+            result = payload
+        else:
+            events += 1
+            if events == 1:
+                ro.refresh_params(params, mode="keep", version=1)
+                ro.fail_instance("inst0")
+    reqs = [r for g in result.groups for r in g.requests]
+    assert all(r.finished for r in reqs)
+    for r in reqs:
+        versions = r.token_versions()
+        assert len(versions) == len(r.generated)
+        assert versions == sorted(versions), \
+            f"{r.req_id}: ledger versions regressed: {versions}"
+
+
+# ---------------- training under faults --------------------------------------
+
+
+def test_trainer_tolerates_faults_and_matches_no_fault_run():
+    """An RL run with a mid-rollout crash must produce the same losses,
+    rewards and reward-worker tokens as the no-fault run — recovery is
+    invisible to training — and keep the staleness ledger sound."""
+    from repro.configs import get_tiny_config
+    from repro.data.tasks import make_task
+    from repro.training.loop import RLConfig, RLTrainer
+
+    cfg = dataclasses.replace(get_tiny_config("granite-3-8b"),
+                              vocab_size=32)
+    task = make_task("copy", 32, prompt_len=4, response_len=8,
+                     content_vocab=8)
+
+    def run(injector=None, **kw):
+        rl = RLConfig(n_groups=3, group_size=2, max_new_tokens=8,
+                      iterations=2, n_instances=2, max_slots=2,
+                      cache_len=128, chunk_size=4, seed=3,
+                      spec_decode=False, fault_injector=injector,
+                      log=lambda s: None, **kw)
+        tr = RLTrainer(cfg, task, rl)
+        responses = {}
+        orig = tr.rewards.submit
+
+        def submit(rid, prompt, gen):
+            responses[rid] = list(gen)
+            return orig(rid, prompt, gen)
+
+        tr.rewards.submit = submit
+        hist = tr.run()
+        return hist, responses, tr
+
+    h0, r0, _ = run()
+    inj = FaultInjector([FaultEvent(tick=4, kind="crash",
+                                    instance_id="inst0")])
+    h1, r1, tr1 = run(inj)
+    assert r1 == r0
+    assert [h.loss for h in h1] == [h.loss for h in h0]
+    assert [h.mean_reward for h in h1] == [h.mean_reward for h in h0]
+    assert sum(i.crashes for i in tr1.rollout.instances) >= 1
+
+    # streaming overlap under faults: the run completes and the ledger
+    # (populated only in async mode) counts every trained token once
+    # within the staleness bound — recovered tokens kept their original
+    # param versions
+    inj2 = FaultInjector([FaultEvent(tick=4, kind="crash",
+                                     instance_id="inst0")])
+    h2, r2, tr2 = run(inj2, async_overlap=True, staleness_bound=1)
+    assert len(h2) == 2
+    assert sum(i.crashes for i in tr2.rollout.instances) >= 1
+    assert tr2.ledger.total_tokens() == sum(len(v) for v in r2.values())
+    assert tr2.ledger.max_staleness <= 1
+
+
+# ---------------- simulator fault model --------------------------------------
+
+
+def _sim_run(fault_rate, seed=0):
+    from repro.configs import get_config
+    from repro.data.workload import MOONLIGHT
+    from repro.data.workload import make_workload
+    spec = dataclasses.replace(MOONLIGHT, n_requests=24, group_size=4,
+                               n_instances=2, max_gen_length=4096,
+                               mean_gen_length=1200)
+    wl = make_workload(spec, seed=seed)
+    sim = SimConfig(mode="divided", policy="seer", max_slots=8,
+                    chips_per_instance=1, kv_capacity_tokens=40_000,
+                    chunk_size=512, fault_rate=fault_rate, mttr_ticks=8)
+    return ClusterSimulator(get_config("yi-6b"), spec, sim).run(wl)
+
+
+def test_sim_fault_model_deterministic_and_charged():
+    clean = _sim_run(0.0)
+    assert clean.extras["fault_events"] == 0
+    assert clean.extras["fault_recovery_seconds"] == 0.0
+    a = _sim_run(0.05)
+    b = _sim_run(0.05)
+    assert a.extras["fault_events"] == b.extras["fault_events"] > 0
+    assert a.total_time == b.total_time
+    assert a.extras["fault_overhead_frac"] > 0.0
+    # faults burn time: the faulted run finishes no sooner
+    assert a.total_time >= clean.total_time
