@@ -14,6 +14,15 @@ import os
 import time
 from typing import Callable, Dict, List, Optional
 
+# the tp benchmark needs a multi-device CPU mesh; the flag only works
+# if set before the FIRST jax import in the process (tests get this
+# from conftest.py — standalone `python benchmarks/common.py` runs get
+# it here).  A user XLA_FLAGS forcing a device count wins.
+_FORCE = "--xla_force_host_platform_device_count=8"
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (_FORCE + " " + _flags).strip()
+
 import numpy as np
 
 from repro.configs import get_config
@@ -837,12 +846,145 @@ def bench_engine_faults(n_groups: int = 3, group_size: int = 2,
     }
 
 
+def bench_engine_tp(n_new: int = 10, seed: int = 5) -> dict:
+    """Tensor-parallel engine step (tiny models, forced-multi-device CPU
+    mesh): one arch per family — dense transformer, MoE, SSM-hybrid —
+    each run unmeshed (the 1-chip oracle), at tp=1 (degenerate mesh) and
+    at tp=2 (head/ff column-parallel sharding).
+
+    Correctness gates (scripts/check_bench.py): tp=1 must be
+    bit-identical to the oracle (tokens, steps AND host syncs — its
+    constraints are pure annotations), tp=2 must commit the exact oracle
+    tokens under mixed plain + linear-spec decode while keeping the
+    <=1-host-sync-per-step contract, the MoE path must model nonzero
+    all-to-all collective bytes, and the simulator's per-instance cost
+    model must agree with the engine rollout's at the same tp degree.
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.core.sdmodel import TPU_V5E, ForwardCostModel
+    from repro.core.rollout import SeerRollout
+    from repro.core.simulator import ClusterSimulator, SimConfig
+    from repro.engine import EngineSeq, Instance, StepFunctions
+    from repro.models import init_params
+
+    FAMILIES = {"granite-3-8b": "dense", "mixtral-8x7b": "moe",
+                "zamba2-1.2b": "hybrid"}
+    TP = 2
+
+    def drive(cfg, params, steps, tp):
+        inst = Instance(cfg, params, steps, max_slots=2, cache_len=128,
+                        gamma_max=4, prefill_chunk=8, base_seed=7, tp=tp)
+        s0 = EngineSeq("r0", "g0", [2, 3, 4, 5, 6, 7], seed=3,
+                       temperature=1.0, max_new_tokens=n_new)
+        s1 = EngineSeq("r1", "g0", [5, 9, 2], seed=4, temperature=1.0,
+                       max_new_tokens=n_new)
+        slot0 = inst.admit(s0)
+        inst.admit(s1)
+        hs0 = steps.host_syncs
+        it = 0
+        t0 = time.perf_counter()
+        while not (s0.finished and s1.finished):
+            drafts = {slot0: [(s0.generated[-1] + 13) % cfg.vocab_size]
+                      * 2} if (s0.generated and not s0.finished
+                               and it % 2) else {}
+            inst.run_step(drafts)
+            it += 1
+            assert it < 200
+        return {
+            "tokens": [list(s0.generated), list(s1.generated)],
+            "engine_steps": it,
+            "host_syncs": steps.host_syncs - hs0,
+            "host_syncs_per_step": (steps.host_syncs - hs0) / max(it, 1),
+            "wall_seconds": time.perf_counter() - t0,
+        }
+
+    archs = {}
+    for arch, family in FAMILIES.items():
+        cfg = get_tiny_config(arch)
+        params, _ = init_params(cfg, jax.random.PRNGKey(1))
+        steps = StepFunctions(cfg)
+        ref = drive(cfg, params, steps, None)
+        tp1 = drive(cfg, params, steps, 1)
+        tp2 = drive(cfg, params, steps, TP)
+        fwd1 = ForwardCostModel(cfg, TPU_V5E, tp=1)
+        fwd2 = ForwardCostModel(cfg, TPU_V5E, tp=TP)
+        archs[arch] = {
+            "family": family,
+            "tp1_bit_identical":
+                tp1["tokens"] == ref["tokens"]
+                and tp1["engine_steps"] == ref["engine_steps"]
+                and tp1["host_syncs"] == ref["host_syncs"],
+            "tp2_token_exact": tp2["tokens"] == ref["tokens"],
+            "tp2_same_steps": tp2["engine_steps"] == ref["engine_steps"],
+            "engine_steps": ref["engine_steps"],
+            "host_syncs_per_step": {
+                "oracle": ref["host_syncs_per_step"],
+                "tp1": tp1["host_syncs_per_step"],
+                "tp2": tp2["host_syncs_per_step"],
+            },
+            "wall_seconds": {"oracle": ref["wall_seconds"],
+                             "tp1": tp1["wall_seconds"],
+                             "tp2": tp2["wall_seconds"]},
+            "collective_bytes_per_token": fwd2.collective_bytes(1),
+            "modeled_step_time_s": {
+                "tp1": fwd1.step_time(2, 1, 64.0),
+                "tp2": fwd2.step_time(2, 1, 64.0),
+            },
+        }
+
+    # sim <-> engine cost-model consistency: the rollout's per-instance
+    # model (SeerRollout(tp=...)) and the simulator's (SimConfig.tp)
+    # must be the same ForwardCostModel — scheduling decisions and
+    # simulated timings at tp>1 then agree by construction
+    cfg = get_tiny_config("granite-3-8b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(1))
+    ro = SeerRollout(cfg, params, n_instances=1, max_slots=2,
+                     cache_len=128, spec_decode=False, base_seed=7,
+                     tp=TP)
+    spec = dataclasses.replace(MOONLIGHT, n_requests=4, n_instances=1,
+                               max_gen_length=512, mean_gen_length=128)
+    sim = ClusterSimulator(cfg, spec, SimConfig(
+        mode="divided", hw=TPU_V5E, chips_per_instance=1, tp=TP,
+        kv_capacity_tokens=100_000))
+    engine_t = ro.sd_model.fwd.step_time(2, 1, 64.0)
+    sim_t = sim.fwd.step_time(2, 1, 64.0)
+
+    moe_cb = archs["mixtral-8x7b"]["collective_bytes_per_token"]
+    return {
+        "workload": {"n_new": n_new, "seed": seed, "tp": TP,
+                     "archs": sorted(FAMILIES)},
+        "archs": archs,
+        "tp1_token_exact":
+            all(a["tp1_bit_identical"] for a in archs.values()),
+        "tp2_token_exact":
+            all(a["tp2_token_exact"] and a["tp2_same_steps"]
+                for a in archs.values()),
+        "moe_collective_bytes":
+            moe_cb["all_gather"] + moe_cb["all_to_all"],
+        "engine_step_time_s": engine_t,
+        "sim_step_time_s": sim_t,
+        "sim_engine_ratio": sim_t / max(engine_t, 1e-30),
+    }
+
+
 _ENGINE_ROLLOUT_CACHE: Optional[dict] = None
 _ENGINE_MIGRATION_CACHE: Optional[dict] = None
 _ENGINE_TOPOLOGY_CACHE: Optional[dict] = None
 _ENGINE_TREE_CACHE: Optional[dict] = None
 _TRAIN_OVERLAP_CACHE: Optional[dict] = None
 _ENGINE_FAULTS_CACHE: Optional[dict] = None
+_ENGINE_TP_CACHE: Optional[dict] = None
+
+
+def ensure_engine_tp_record() -> dict:
+    """Run the tensor-parallel engine benchmark once per process and
+    write it to BENCH_rollout.json's 'engine_tp' section."""
+    global _ENGINE_TP_CACHE
+    if _ENGINE_TP_CACHE is None:
+        _ENGINE_TP_CACHE = bench_engine_tp()
+        update_bench_rollout("engine_tp", _ENGINE_TP_CACHE)
+    return _ENGINE_TP_CACHE
 
 
 def ensure_engine_faults_record() -> dict:
@@ -941,7 +1083,32 @@ if __name__ == "__main__":
         help="fault-injection smoke: run bench_engine_faults once, "
              "print the recovery summary, exit nonzero unless recovery "
              "was token-lossless (does NOT write the bench baseline)")
+    ap.add_argument(
+        "--tp", action="store_true",
+        help="tensor-parallel smoke: run bench_engine_tp once, print "
+             "per-arch exactness + host-sync + collective summaries, "
+             "exit nonzero unless tp=1 is bit-identical and tp=2 is "
+             "token-exact (does NOT write the bench baseline)")
     ns = ap.parse_args()
+    if ns.tp:
+        rec = bench_engine_tp()
+        table([
+            dict(arch=a, family=r["family"],
+                 tp1_bit_identical=r["tp1_bit_identical"],
+                 tp2_token_exact=r["tp2_token_exact"],
+                 syncs_tp2=r["host_syncs_per_step"]["tp2"],
+                 ag_bytes=r["collective_bytes_per_token"]["all_gather"],
+                 a2a_bytes=r["collective_bytes_per_token"]["all_to_all"])
+            for a, r in rec["archs"].items()
+        ], ["arch", "family", "tp1_bit_identical", "tp2_token_exact",
+            "syncs_tp2", "ag_bytes", "a2a_bytes"],
+            title="engine_tp smoke (tp=2 vs 1-chip oracle)")
+        print("sim/engine step-time ratio:",
+              f"{rec['sim_engine_ratio']:.6f}", flush=True)
+        ok = rec["tp1_token_exact"] and rec["tp2_token_exact"] and \
+            abs(rec["sim_engine_ratio"] - 1.0) < 1e-9
+        print("tp exactness:", "PASS" if ok else "FAIL", flush=True)
+        raise SystemExit(0 if ok else 1)
     if ns.faults:
         rec = bench_engine_faults()
         f = rec["faulted"]

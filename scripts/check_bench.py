@@ -109,6 +109,7 @@ def main(argv=None) -> int:
     base_tree = _section(args.baseline, "engine_tree")
     base_ovl = _section(args.baseline, "train_overlap")
     base_flt = _section(args.baseline, "engine_faults")
+    base_tp = _section(args.baseline, "engine_tp")
     if args.fresh:
         fresh = _section(args.fresh, "engine")
         fresh_mig = _section(args.fresh, "engine_migration")
@@ -116,6 +117,7 @@ def main(argv=None) -> int:
         fresh_tree = _section(args.fresh, "engine_tree")
         fresh_ovl = _section(args.fresh, "train_overlap")
         fresh_flt = _section(args.fresh, "engine_faults")
+        fresh_tp = _section(args.fresh, "engine_tp")
     else:
         # the benchmarks package lives at the repo root, one level up
         sys.path.insert(0, os.path.dirname(os.path.dirname(
@@ -124,6 +126,7 @@ def main(argv=None) -> int:
                                        bench_engine_migration,
                                        bench_engine_rollout,
                                        bench_engine_topology,
+                                       bench_engine_tp,
                                        bench_engine_tree,
                                        bench_train_overlap)
         fresh = bench_engine_rollout()
@@ -132,6 +135,7 @@ def main(argv=None) -> int:
         fresh_tree = bench_engine_tree()
         fresh_ovl = bench_train_overlap()
         fresh_flt = bench_engine_faults()
+        fresh_tp = bench_engine_tp()
 
     if fresh.get("workload") != base.get("workload"):
         print("[check_bench] FAIL workload mismatch: fresh "
@@ -165,6 +169,7 @@ def main(argv=None) -> int:
     checks += _tree_checks(fresh_tree, base_tree, args)
     checks += _train_overlap_checks(fresh_ovl, base_ovl, args)
     checks += _fault_checks(fresh_flt, base_flt, args)
+    checks += _tp_checks(fresh_tp, base_tp, args)
     ok = True
     for name, passed, detail in checks:
         status = "ok  " if passed else "FAIL"
@@ -367,6 +372,44 @@ def _fault_checks(fresh: dict, base: dict, args) -> list:
          sim["fault_events"] > 0 and sim["fault_overhead_frac"] > 0.0,
          f"sim fault events {sim['fault_events']} > 0, overhead frac "
          f"{sim['fault_overhead_frac']:.4f} > 0"),
+    ]
+
+
+def _tp_checks(fresh: dict, base: dict, args) -> list:
+    """Gates on the tensor-parallel engine benchmark.
+
+    Exactness is an absolute property of the fresh run: tp=1 must be
+    bit-identical to the unmeshed 1-chip oracle (tokens, steps AND
+    host-sync count) and tp=2 must commit exactly the oracle's tokens
+    on every arch family, with the <=1-host-sync-per-step contract
+    intact under sharding.  The MoE path must model nonzero collective
+    bytes (the all-to-all term exists), and the simulator's cost model
+    must agree with the engine rollout's at the same tp degree."""
+    if fresh.get("workload") != base.get("workload"):
+        return [("tp_workload", False,
+                 f"fresh {fresh.get('workload')} vs baseline "
+                 f"{base.get('workload')} — numbers are not comparable")]
+    archs = fresh["archs"]
+    worst_sync = max(a["host_syncs_per_step"]["tp2"]
+                     for a in archs.values())
+    moe = next(a for a in archs.values() if a["family"] == "moe")
+    a2a = moe["collective_bytes_per_token"]["all_to_all"]
+    ratio = fresh["sim_engine_ratio"]
+    return [
+        ("tp1_token_exact", fresh.get("tp1_token_exact") is True,
+         "tp=1 bit-identical to 1-chip oracle on " +
+         ", ".join(f"{a}({r['family']}): {r['tp1_bit_identical']}"
+                   for a, r in archs.items())),
+        ("tp2_token_exact", fresh.get("tp2_token_exact") is True,
+         "tp=2 token-exact (same tokens, same steps) on " +
+         ", ".join(f"{a}: {r['tp2_token_exact']}"
+                   for a, r in archs.items())),
+        ("tp_host_syncs_per_step", worst_sync <= 1.0 + 1e-9,
+         f"worst tp=2 host syncs/step {worst_sync} <= 1"),
+        ("tp_moe_collective_bytes", a2a > 0,
+         f"MoE all-to-all bytes/token {a2a} > 0 at tp=2"),
+        ("tp_sim_engine_consistency", abs(ratio - 1.0) <= 1e-9,
+         f"sim/engine modeled step-time ratio {ratio:.9f} == 1"),
     ]
 
 

@@ -136,6 +136,7 @@ class SeerRollout:
                  watchdog_ticks: int = 3,
                  fetch_retries: int = 3,
                  fetch_backoff_s: float = 0.05,
+                 tp: Optional[int] = None,
                  steps: Optional[StepFunctions] = None):
         self.cfg = cfg
         self.chunk_size = chunk_size
@@ -172,7 +173,11 @@ class SeerRollout:
         # callers may pass a shared StepFunctions so several rollouts of
         # the same config reuse compiled step/migration shapes
         self.steps = steps if steps is not None else StepFunctions(cfg)
-        fwd = ForwardCostModel(cfg, TPU_V5E)
+        # every instance runs the same tp degree: equal-tp instances
+        # share one engine mesh (lru-cached) and one set of compiled
+        # step shapes in self.steps (sctx-keyed by tp_size)
+        self.tp = tp
+        fwd = ForwardCostModel(cfg, TPU_V5E, tp=tp or 1)
         n_nodes = max(1, min(n_nodes, n_instances))
         self.instances = [
             Instance(cfg, params, self.steps, max_slots=max_slots,
@@ -185,6 +190,7 @@ class SeerRollout:
                      gamma_max=gamma_max, instance_id=f"inst{i}",
                      node=f"n{i * n_nodes // n_instances}",
                      admit_into_draining=admit_into_draining,
+                     tp=tp,
                      base_seed=base_seed)
             for i in range(n_instances)
         ]

@@ -45,12 +45,32 @@ TPU_V5E = HardwareSpec("tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
 @dataclass(frozen=True)
 class ForwardCostModel:
     """Analytic T(B, T_tokens) for one decode/verify forward of a model
-    sharded over ``chips`` chips (TP/EP within an instance)."""
+    sharded over ``chips`` chips (TP/EP within an instance).
+
+    ``tp`` is the engine's per-instance tensor-parallel degree (the
+    column-parallel head/ff sharding of launch.mesh.engine_mesh): it
+    multiplies the effective chip count for the compute and HBM terms
+    and adds a collective term on the ICI — an all-gather of the
+    head-sharded attention output and ff-sharded MLP hidden before each
+    row matmul, plus the expert all-to-all (dispatch + combine) on MoE
+    layers.  ``chips`` stays the legacy coarse knob; callers set one or
+    the other (the rollout passes tp)."""
     cfg: ModelConfig
     hw: HardwareSpec
     chips: int = 1
+    tp: int = 1
     mfu: float = 0.5             # achievable fraction of peak compute
     mbu: float = 0.7             # achievable fraction of HBM bandwidth
+
+    def __post_init__(self):
+        if self.tp < 1 or self.chips < 1:
+            raise ValueError(
+                f"tp/chips must be >= 1, got tp={self.tp} "
+                f"chips={self.chips}")
+
+    @property
+    def _n_chips(self) -> int:
+        return self.chips * self.tp
 
     # -- component byte/flop counts ---------------------------------------------
 
@@ -72,6 +92,60 @@ class ForwardCostModel:
     def flops_per_token(self) -> float:
         return 2.0 * self.cfg.active_params()
 
+    # -- tp collectives ----------------------------------------------------------
+
+    def _n_attn_layers(self) -> int:
+        cfg = self.cfg
+        if cfg.arch_type == "ssm":
+            return 0
+        if cfg.arch_type == "hybrid":
+            return cfg.num_layers // max(cfg.hybrid_attn_every, 1)
+        return cfg.num_layers
+
+    def _n_moe_layers(self) -> int:
+        cfg = self.cfg
+        if not cfg.num_experts:
+            return 0
+        return (cfg.num_layers - cfg.first_dense_layers
+                + cfg.moe_every - 1) // max(cfg.moe_every, 1)
+
+    def collective_bytes(self, n_tok: int) -> dict:
+        """Interconnect bytes one forward of ``n_tok`` tokens moves at
+        this tp degree, per chip (ring collectives move (tp-1)/tp of the
+        logical tensor past each chip).
+
+        ``all_gather``: the head-sharded attention output and the
+        ff-sharded MLP hidden, gathered before their row matmuls (the
+        engine's token-exact column-parallel scheme gathers instead of
+        psum-reducing).  ``all_to_all``: MoE token dispatch + combine —
+        top_k * d_model each way per token on every MoE layer."""
+        tp = self.tp
+        if tp <= 1 or n_tok <= 0:
+            return {"all_gather": 0, "all_to_all": 0}
+        cfg = self.cfg
+        frac = (tp - 1) / tp
+        elt = 2                                       # bf16
+        n_attn = self._n_attn_layers()
+        n_moe = self._n_moe_layers()
+        n_mlp = 0
+        if cfg.arch_type in ("dense", "vlm", "audio"):
+            n_mlp = cfg.num_layers
+        elif cfg.arch_type == "hybrid":
+            n_mlp = n_attn                            # shared block's MLP
+        elif cfg.arch_type == "moe":
+            n_mlp = cfg.num_layers - n_moe            # first dense layers
+        ag = n_attn * cfg.num_heads * cfg.head_dim    # o before wo
+        ag += n_mlp * cfg.d_ff                        # h before wd
+        if n_moe and cfg.num_shared_experts:
+            ag += n_moe * cfg.d_ff                    # shared-expert hidden
+        a2a = 2 * n_moe * cfg.moe_top_k * cfg.d_model  # dispatch + combine
+        return {"all_gather": int(n_tok * ag * elt * frac),
+                "all_to_all": int(n_tok * a2a * elt * frac)}
+
+    def collective_time(self, n_tok: int) -> float:
+        b = self.collective_bytes(n_tok)
+        return (b["all_gather"] + b["all_to_all"]) / self.hw.link_bw
+
     # -- forward time --------------------------------------------------------------
 
     def _attn_dim(self) -> float:
@@ -86,12 +160,13 @@ class ForwardCostModel:
         # compute term: linear in scored tokens + attention term
         flops = n_tok * self.flops_per_token()
         flops += 2.0 * n_tok * mean_ctx * self._attn_dim()
-        t_compute = flops / (self.chips * self.hw.peak_flops * self.mfu)
+        t_compute = flops / (self._n_chips * self.hw.peak_flops * self.mfu)
         # memory term: weights stream once per forward; KV streams per req
         mem = self.active_param_bytes()
         mem += batch * mean_ctx * self.kv_bytes_per_token()
-        t_mem = mem / (self.chips * self.hw.hbm_bw * self.mbu)
-        return max(t_compute, t_mem) + self.hw.launch_overhead
+        t_mem = mem / (self._n_chips * self.hw.hbm_bw * self.mbu)
+        return max(t_compute, t_mem) + self.collective_time(n_tok) \
+            + self.hw.launch_overhead
 
     def decode_time(self, batch: int, mean_ctx: float) -> float:
         return self.forward_time(batch, 1, mean_ctx)
@@ -174,12 +249,14 @@ class ForwardCostModel:
         flops = (n_dec + prefill_tokens) * self.flops_per_token()
         flops += 2.0 * n_dec * mean_ctx * self._attn_dim()
         flops += 2.0 * prefill_tokens * pctx * self._attn_dim()
-        t_compute = flops / (self.chips * self.hw.peak_flops * self.mfu)
+        t_compute = flops / (self._n_chips * self.hw.peak_flops * self.mfu)
         mem = self.active_param_bytes()
         mem += batch * mean_ctx * self.kv_bytes_per_token()
         mem += prefill_tokens * self.kv_bytes_per_token()   # KV writes
-        t_mem = mem / (self.chips * self.hw.hbm_bw * self.mbu)
-        return max(t_compute, t_mem) + self.hw.launch_overhead
+        t_mem = mem / (self._n_chips * self.hw.hbm_bw * self.mbu)
+        return max(t_compute, t_mem) \
+            + self.collective_time(n_dec + int(prefill_tokens)) \
+            + self.hw.launch_overhead
 
 
 @dataclass(frozen=True)

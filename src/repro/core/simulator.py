@@ -231,6 +231,11 @@ class SimConfig:
     kv_capacity_tokens: Optional[int] = None   # default: from HBM budget
     hw: HardwareSpec = H800
     chips_per_instance: int = 8
+    # per-instance tensor-parallel degree (the engine's column-parallel
+    # head/ff mesh): divides the compute/HBM roofline like extra chips
+    # but adds ForwardCostModel's collective term (activation
+    # all-gathers, MoE all-to-all) to every modeled forward
+    tp: int = 1
     hbm_per_chip: float = 80e9
     mba_lam: float = 2.0
     segment_cap: int = 1024         # max tokens per segment (model refresh)
@@ -340,15 +345,16 @@ class ClusterSimulator:
         self.spec = spec
         self.sim = sim
         self.fwd = ForwardCostModel(cfg, sim.hw,
-                                    chips=sim.chips_per_instance)
+                                    chips=sim.chips_per_instance,
+                                    tp=sim.tp)
         self.sd_model = SDThroughputModel(self.fwd)
         self.strategy = sd_strategy(sim.sd, cfg)
         kvb = self.fwd.kv_bytes_per_token()
         if sim.kv_capacity_tokens is not None:
             self.kv_capacity = sim.kv_capacity_tokens
         else:
-            budget = sim.chips_per_instance * sim.hbm_per_chip * 0.9 \
-                - self.fwd.param_bytes()
+            budget = sim.chips_per_instance * sim.tp \
+                * sim.hbm_per_chip * 0.9 - self.fwd.param_bytes()
             self.kv_capacity = int(max(budget, 1e9) / max(kvb, 1))
         self.kv_bytes_per_token = kvb
         worst = spec.prompt_len + spec.max_gen_length

@@ -125,11 +125,13 @@ from __future__ import annotations
 import time
 import zlib
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.engine.sampling import (draft_acceptance, position_keys,
@@ -137,8 +139,16 @@ from repro.engine.sampling import (draft_acceptance, position_keys,
                                    tree_acceptance)
 from repro.engine.token_tree import TokenTree, bucket_pow2, chain_tree
 from repro.models import build_cross_cache, forward, init_cache
+from repro.sharding import ShardCtx
 
 _INT32_MAX = np.iinfo(np.int32).max
+
+
+def _sctx_key(sctx: Optional[ShardCtx]):
+    """Step-cache key component for a sharding context.  Engine meshes
+    are cached per degree (``launch.mesh.engine_mesh``), so tp size is
+    the whole identity — instances of equal tp share compilations."""
+    return None if sctx is None else sctx.tp_size
 
 _DONATION_SUPPORTED: Optional[bool] = None
 
@@ -195,29 +205,31 @@ class StepFunctions:
             return fn(*args)
         return wrapper
 
-    def step(self, T: int):
+    def step(self, T: int, sctx: Optional[ShardCtx] = None):
         """Reference step (no donation, host-side acceptance):
         (params, cache, tokens(B,T), positions, mask, keys, temps,
         sample_rows(B,)) -> (sampled(B,T), logprobs(B,T), new_cache)."""
-        if T in self._step_cache:
-            return self._step_cache[T]
+        key = ("step", T, _sctx_key(sctx))
+        if key in self._step_cache:
+            return self._step_cache[key]
         cfg = self.cfg
 
         @jax.jit
         def fn(params, cache, tokens, positions, mask, keys, temps,
                sample_rows):
             logits, new_cache, _ = forward(
-                cfg, params, tokens, positions, cache, token_mask=mask)
+                cfg, params, tokens, positions, cache, token_mask=mask,
+                sctx=sctx)
             logits = logits.astype(jnp.float32)
             sampled = sample_tokens(logits, keys, temps, sample_rows)
             lp = token_logprobs_at(logits, sampled)
             return sampled, lp, new_cache
 
         counted = self._counted(fn, f"step:{T}")
-        self._step_cache[T] = counted
+        self._step_cache[key] = counted
         return counted
 
-    def tree_step(self, T: int):
+    def tree_step(self, T: int, sctx: Optional[ShardCtx] = None):
         """Reference *tree* step (no donation, host-side acceptance):
         (params, cache, tokens(B,T), positions(B,T), slot_index(B,T),
         mask(B,T), within(B,T,T), keys, temps, sample_rows(B,)) ->
@@ -227,7 +239,7 @@ class StepFunctions:
         the winning-branch KV compaction and node-slot invalidation run on
         the *host* (``_run_step_sync_tree``) so branching tree steps can be
         cross-checked token-exactly against the fused path."""
-        key = ("tree_ref", T)
+        key = ("tree_ref", T, _sctx_key(sctx))
         if key in self._step_cache:
             return self._step_cache[key]
         cfg = self.cfg
@@ -237,7 +249,7 @@ class StepFunctions:
                within, keys, temps, sample_rows):
             logits, new_cache, _ = forward(
                 cfg, params, tokens, positions, cache, token_mask=mask,
-                slot_index=slot_index, within_mask=within)
+                slot_index=slot_index, within_mask=within, sctx=sctx)
             logits = logits.astype(jnp.float32)
             sampled = sample_tokens(logits, keys, temps, sample_rows)
             lp = token_logprobs_at(logits, sampled)
@@ -247,7 +259,7 @@ class StepFunctions:
         self._step_cache[key] = counted
         return counted
 
-    def fused_step(self, T: int):
+    def fused_step(self, T: int, sctx: Optional[ShardCtx] = None):
         """Device-resident step with donated cache and on-device
         accept/commit.
 
@@ -264,7 +276,7 @@ class StepFunctions:
         state replayed over the accepted prefix only — the host never
         touches the cache between steps.
         """
-        key = ("fused", T)
+        key = ("fused", T, _sctx_key(sctx))
         if key in self._step_cache:
             return self._step_cache[key]
         cfg = self.cfg
@@ -275,7 +287,8 @@ class StepFunctions:
             pre_rec = {k: cache[k] for k in ("ssm", "conv")
                        if k in cache}
             logits, new_cache, _ = forward(
-                cfg, params, tokens, positions, cache, token_mask=mask)
+                cfg, params, tokens, positions, cache, token_mask=mask,
+                sctx=sctx)
             logits = logits.astype(jnp.float32)
             sampled = sample_tokens(logits, keys, temps, sample_rows)
             lp = token_logprobs_at(logits, sampled)
@@ -309,7 +322,8 @@ class StepFunctions:
                     c2 = dict(nc)
                     c2.update(pre_rec)
                     _, c3, _ = forward(cfg, params, tokens, positions,
-                                       c2, token_mask=acc_mask)
+                                       c2, token_mask=acc_mask,
+                                       sctx=sctx)
                     return c3
 
                 new_cache = jax.lax.cond(
@@ -322,7 +336,7 @@ class StepFunctions:
         self._step_cache[key] = counted
         return counted
 
-    def fused_tree_step(self, T: int):
+    def fused_tree_step(self, T: int, sctx: Optional[ShardCtx] = None):
         """Device-resident *tree*-verify step: multi-path CST drafts
         merged into one token tree per row, verified in a single fused
         forward with everything committed on device.
@@ -346,7 +360,7 @@ class StepFunctions:
         a single-path tree this computes bit-identically to
         :meth:`fused_step` (the exactness oracle tests assert it).
         """
-        key = ("tree", T)
+        key = ("tree", T, _sctx_key(sctx))
         if key in self._step_cache:
             return self._step_cache[key]
         cfg = self.cfg
@@ -360,7 +374,7 @@ class StepFunctions:
                        if k in cache}
             logits, new_cache, _ = forward(
                 cfg, params, tokens, positions, cache, token_mask=mask,
-                slot_index=slot_index, within_mask=within)
+                slot_index=slot_index, within_mask=within, sctx=sctx)
             logits = logits.astype(jnp.float32)
             sampled = sample_tokens(logits, keys, temps, sample_rows)
             lp = token_logprobs_at(logits, sampled)
@@ -419,7 +433,7 @@ class StepFunctions:
                     _, c3, _ = forward(cfg, params, tokens, positions,
                                        c2, token_mask=keep,
                                        slot_index=slot_index,
-                                       within_mask=within)
+                                       within_mask=within, sctx=sctx)
                     return c3
 
                 new_cache = jax.lax.cond(
@@ -432,8 +446,8 @@ class StepFunctions:
         self._step_cache[key] = counted
         return counted
 
-    def prefill(self, T: int):
-        key = ("prefill", T)
+    def prefill(self, T: int, sctx: Optional[ShardCtx] = None):
+        key = ("prefill", T, _sctx_key(sctx))
         if key in self._step_cache:
             return self._step_cache[key]
         cfg = self.cfg
@@ -441,14 +455,16 @@ class StepFunctions:
         @jax.jit
         def fn(params, cache, tokens, positions, mask):
             _, new_cache, _ = forward(
-                cfg, params, tokens, positions, cache, token_mask=mask)
+                cfg, params, tokens, positions, cache, token_mask=mask,
+                sctx=sctx)
             return new_cache
 
         counted = self._counted(fn, f"prefill:{T}")
         self._step_cache[key] = counted
         return counted
 
-    def export_batch(self, lives: Tuple[int, ...]):
+    def export_batch(self, lives: Tuple[int, ...],
+                     sctx: Optional[ShardCtx] = None):
         """Jitted multi-slot KV gather: ``(cache, slots(n,)) -> [blob
         leaf dict] * n``.
 
@@ -460,12 +476,23 @@ class StepFunctions:
         (donated) instance cache.  Compiled once per ``lives`` tuple;
         callers bucket each live extent (powers of two) and pass the
         tuple in canonical non-decreasing order so the key space is the
-        multiset of buckets, keeping compiled variants bounded."""
-        key = ("export", lives)
+        multiset of buckets, keeping compiled variants bounded.
+
+        On a meshed instance the blobs are forced fully replicated
+        (``out_shardings = P()``): the all-gather over the head axis
+        happens *inside* this jit, so exported blobs always carry the
+        canonical unsharded host layout regardless of the source's tp
+        degree — headers, nbytes and CRCs are tp-invariant, and any
+        instance (tp=1, tp=4, unmeshed) can import them."""
+        key = ("export", lives, _sctx_key(sctx))
         if key in self._step_cache:
             return self._step_cache[key]
 
-        @jax.jit
+        jit_kwargs = {}
+        if sctx is not None:
+            jit_kwargs["out_shardings"] = NamedSharding(sctx.mesh, P())
+
+        @partial(jax.jit, **jit_kwargs)
         def fn(cache, slots):
             gathered = {}
             for k, v in cache.items():
@@ -488,8 +515,7 @@ class StepFunctions:
         self._step_cache[key] = fn
         return fn
 
-    @property
-    def import_batch(self):
+    def import_batch(self, sctx: Optional[ShardCtx] = None):
         """Jitted multi-slot KV scatter: ``(cache, slots(n,), [blob leaf
         dict] * n) -> new_cache``.
 
@@ -498,8 +524,14 @@ class StepFunctions:
         zeros) and written with one scatter per leaf — K migrated
         arrivals cost one cache write per leaf, not K.  The cache is
         donated, matching the step path's in-place contract.  Shared
-        across batch sizes/extents (jit recompiles per shape)."""
-        key = "import_batch"
+        across batch sizes/extents (jit recompiles per shape).
+
+        Blobs arrive in the canonical replicated layout (see
+        :meth:`export_batch`); on a meshed instance the scatter output
+        keeps the destination cache's head-sharded placement (GSPMD
+        propagates it from the donated cache operand), so the re-shard
+        of imported bytes happens inside this jit with no host sync."""
+        key = ("import_batch", _sctx_key(sctx))
         if key in self._step_cache:
             return self._step_cache[key]
 
@@ -726,6 +758,7 @@ class Instance:
     """One inference instance (a model replica with its own KV buffer)."""
 
     def __init__(self, cfg: ModelConfig, params, steps: StepFunctions, *,
+                 tp: Optional[int] = None,
                  max_slots: int = 8, cache_len: int = 4096,
                  prefill_chunk: int = 64, gamma_max: int = 8,
                  prefill_mode: str = "batched",
@@ -789,6 +822,20 @@ class Instance:
         # tick early; the new seq's import/clear is deferred until the
         # next dispatch snapshots (exports) the draining rows first
         self.admit_into_draining = admit_into_draining
+        # tensor-parallel mesh: tp=None is today's unmeshed single-device
+        # path (sctx None end to end — bit-identical to the pre-tp
+        # engine); tp>=1 builds a per-instance (tp,)-over-"model" mesh,
+        # commits params + cache to head-sharded NamedShardings and
+        # threads the ShardCtx into every StepFunctions getter.  tp=1 is
+        # the degenerate meshed case: every constraint is a full-
+        # replication annotation, so the step math is bit-identical to
+        # tp=None (the oracle gate in check_bench.py asserts it).
+        self.tp = tp
+        if tp is None:
+            self._sctx: Optional[ShardCtx] = None
+        else:
+            from repro.launch.mesh import engine_mesh, make_engine_shard_ctx
+            self._sctx = make_engine_shard_ctx(engine_mesh(tp))
         self.base_key = jax.random.PRNGKey(base_seed)
         self.cache = init_cache(cfg, max_slots, cache_len)
         if cfg.arch_type in ("vlm", "audio"):
@@ -798,6 +845,13 @@ class Instance:
                     modality_inputs(cfg, max_slots).values()))
             ck, cv = build_cross_cache(cfg, params, modality_embeds)
             self.cache["cross_k"], self.cache["cross_v"] = ck, cv
+        if self._sctx is not None:
+            from repro.launch.steps import (engine_cache_shardings,
+                                            engine_param_shardings)
+            self.params = jax.device_put(
+                params, engine_param_shardings(cfg, self._sctx))
+            self.cache = jax.device_put(
+                self.cache, engine_cache_shardings(self._sctx, self.cache))
         self.slots: List[Optional[EngineSeq]] = [None] * max_slots
         self._inflight: Optional[StepTicket] = None
         # liveness: a crashed instance refuses all work until replaced.
@@ -1130,7 +1184,8 @@ class Instance:
                                                          slots[j]))
         slots = [slots[j] for j in order]
         seqs = [seqs[j] for j in order]
-        fn = self.steps.export_batch(tuple(lives[j] for j in order))
+        fn = self.steps.export_batch(tuple(lives[j] for j in order),
+                                     self._sctx)
         leaf_dicts = fn(self.cache, jnp.asarray(slots, jnp.int32))
         self.steps.count_migration(f"export:{len(slots)}")
         for seq, leaves in zip(seqs, leaf_dicts):
@@ -1178,6 +1233,29 @@ class Instance:
 
     # -- KV migration -----------------------------------------------------------
 
+    def _localize_blob_arrays(self, arrays: dict) -> dict:
+        """Re-place blob leaves for this instance's devices.
+
+        A blob exported by a meshed instance is replicated over *that*
+        instance's mesh; feeding it straight to a jit whose other
+        operands live on a different mesh (or a single device) raises.
+        Meshed target: commit every leaf replicated on our mesh — a
+        cross-tp-degree re-place with no host sync.  Unmeshed target:
+        pull multi-device leaves down to the default device; already-
+        local leaves (and hand-built numpy blobs) pass through
+        untouched, keeping the tp=None path exactly as before."""
+        if self._sctx is not None:
+            sh = NamedSharding(self._sctx.mesh, P())
+            return {k: jax.device_put(v, sh) for k, v in arrays.items()}
+
+        def one(v):
+            sharding = getattr(v, "sharding", None)
+            if sharding is None or len(sharding.device_set) <= 1:
+                return v
+            return jax.device_put(v, jax.devices()[0])
+
+        return {k: one(v) for k, v in arrays.items()}
+
     def _export_kv(self, slot: int, seq: EngineSeq) -> KVBlob:
         """Slice the slot's cache state, trimmed to the live prefix.
 
@@ -1197,14 +1275,20 @@ class Instance:
                 self.steps.count_migration("export_perslot")
             arrays[k] = sl
             nbytes += sl.size * sl.dtype.itemsize
+        if self._sctx is not None:
+            # canonicalize: gather the head shards so the blob carries
+            # the same replicated layout batched exports produce
+            sh = NamedSharding(self._sctx.mesh, P())
+            arrays = {k: jax.device_put(a, sh) for k, a in arrays.items()}
         return KVBlob(seq.req_id, arrays, seq.next_pos, nbytes)
 
     def _import_kv(self, slot: int, blob: KVBlob) -> None:
         blob.verify_checksum()     # defense in depth; admit gates too
         self._check_blob_fits(blob)
+        arrays = self._localize_blob_arrays(blob.arrays)
         for k in self.cache:
             ax = _slot_slice(k)
-            src = blob.arrays[k]
+            src = arrays[k]
             tshape = list(self.cache[k].shape)
             del tshape[ax]
             pax = _pos_axis(k)
@@ -1248,8 +1332,10 @@ class Instance:
             by_extent.setdefault(ext, []).append((slot, blob))
         for group in by_extent.values():
             slots = jnp.asarray([s for s, _ in group], jnp.int32)
-            blobs = [b.arrays for _, b in group]
-            self.cache = self.steps.import_batch(self.cache, slots, blobs)
+            blobs = [self._localize_blob_arrays(b.arrays)
+                     for _, b in group]
+            self.cache = self.steps.import_batch(self._sctx)(
+                self.cache, slots, blobs)
             self.steps.count_migration(f"import:{len(group)}")
         self.migration_host_seconds += time.perf_counter() - t0
 
@@ -1279,7 +1365,7 @@ class Instance:
             return
         B = self.max_slots
         c = self.prefill_chunk
-        fn = self.steps.prefill(c)
+        fn = self.steps.prefill(c, self._sctx)
         for off in range(0, len(tokens), c):
             chunk = tokens[off:off + c]
             buf = np.zeros((B, c), np.int32)
@@ -1473,7 +1559,7 @@ class Instance:
 
         keys = position_keys(self.base_key, jnp.asarray(seeds),
                              jnp.asarray(positions))
-        fn = self.steps.fused_step(T)
+        fn = self.steps.fused_step(T, self._sctx)
         sampled, lps, n_acc, self.cache = fn(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(mask), keys,
@@ -1516,7 +1602,7 @@ class Instance:
         bt = self._build_tree_batch(decode, plan, drafts)
         keys = position_keys(self.base_key, jnp.asarray(bt.seeds),
                              jnp.asarray(bt.positions))
-        fn = self.steps.fused_tree_step(bt.T)
+        fn = self.steps.fused_tree_step(bt.T, self._sctx)
         sampled, lps, n_acc, self.cache = fn(
             self.params, self.cache, jnp.asarray(bt.tokens),
             jnp.asarray(bt.positions), jnp.asarray(bt.slot_index),
@@ -1789,7 +1875,7 @@ class Instance:
 
         keys = position_keys(self.base_key, jnp.asarray(seeds),
                              jnp.asarray(positions))
-        fn = self.steps.step(T)
+        fn = self.steps.step(T, self._sctx)
         has_ssm = "ssm" in self.cache
         pre_ssm = (self.cache["ssm"], self.cache["conv"]) \
             if (has_ssm and gamma > 0) else None
@@ -1868,7 +1954,7 @@ class Instance:
         B, T = self.max_slots, bt.T
         keys = position_keys(self.base_key, jnp.asarray(bt.seeds),
                              jnp.asarray(bt.positions))
-        fn = self.steps.tree_step(T)
+        fn = self.steps.tree_step(T, self._sctx)
         sampled_d, lps_d, self.cache = fn(
             self.params, self.cache, jnp.asarray(bt.tokens),
             jnp.asarray(bt.positions), jnp.asarray(bt.slot_index),

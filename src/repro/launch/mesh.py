@@ -10,6 +10,7 @@ pure data parallelism (gradient all-reduce crosses DCN/ICI between pods).
 """
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Optional
 
 import jax
@@ -19,9 +20,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.sharding import ShardCtx
 
 
+def _check_devices(needed: int, what: str) -> None:
+    have = jax.device_count()
+    if needed > have:
+        raise ValueError(
+            f"{what} needs {needed} devices but jax sees only {have}; "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={needed} (or more) before the first jax import "
+            "(tests/conftest.py does this for tier-1)")
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    _check_devices(int(np.prod(shape)), f"production mesh {shape}")
     return jax.make_mesh(shape, axes)
 
 
@@ -37,4 +49,34 @@ def small_mesh(n_model: Optional[int] = None) -> Mesh:
     """Debug mesh over whatever devices exist (tests, CPU)."""
     n = len(jax.devices())
     m = n_model or 1
+    _check_devices(m, f"small mesh (model={m})")
     return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+# -------- per-instance engine meshes ----------------------------------------
+
+@lru_cache(maxsize=None)
+def engine_mesh(tp: int) -> Mesh:
+    """1-D tensor-parallel mesh for one rollout Instance.
+
+    The engine shards over KV heads only (no data axis: the slot batch
+    is tiny and rides replicated), so the mesh is just ``(tp,)`` over
+    the ``model`` axis.  Cached per degree — every tp=k instance shares
+    one Mesh object, so StepFunctions compilations are shared too.
+    """
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    _check_devices(tp, f"engine mesh (tp={tp})")
+    return jax.make_mesh((tp,), ("model",))
+
+
+def make_engine_shard_ctx(mesh: Mesh) -> ShardCtx:
+    """ShardCtx for the engine hot path: KV heads / column-parallel
+    weight outputs over ``model``, batch and sequence replicated
+    (dp=()/seq_shard=False make the decode-path batch ``constrain``
+    calls no-ops), and ``exact`` execution — column-parallel-only
+    contractions plus the dense (no capacity-drop) MoE combine, so a
+    tp>1 step samples bitwise the same tokens as the 1-chip oracle.
+    """
+    return ShardCtx(mesh=mesh, dp=(), tp="model", fsdp=None,
+                    seq_shard=False, exact=True)

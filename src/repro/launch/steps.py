@@ -65,6 +65,33 @@ def param_shardings(cfg: ModelConfig, sctx: ShardCtx, *, train: bool,
     return jax.tree.map(one, params_s, axes, is_leaf=is_ax), axes
 
 
+def engine_param_shardings(cfg: ModelConfig, sctx: ShardCtx):
+    """NamedSharding tree for the engine's token-exact tp mesh.
+
+    Unlike :func:`param_shardings` (production Megatron rules: wo/wd
+    row-parallel, psum after), the engine shards only column-parallel
+    output dims (see repro.sharding.exact_col_spec) so every matmul's
+    reduction dim stays unsharded — tp>1 samples bitwise the same
+    tokens as the 1-chip oracle."""
+    from repro.sharding import exact_col_spec
+    box = {}
+
+    def only_params(key):
+        p, a = init_params(cfg, key)
+        box["axes"] = a
+        return p
+
+    params_s = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    axes = box["axes"]
+
+    def one(spec, ax):
+        return NamedSharding(sctx.mesh, exact_col_spec(ax, spec.shape, sctx))
+
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(one, params_s, axes, is_leaf=is_ax)
+
+
 def _guard(size: int, axes, mesh: Mesh):
     if axes is None:
         return None
@@ -102,6 +129,29 @@ def cache_shardings(cfg: ModelConfig, sctx: ShardCtx, cache_tree):
         if key == "ssm":                 # (L, B, nh, P, N)
             return P(None, b_ax(1), t_ax(2), None, None)
         return P()
+
+    return {k: NamedSharding(mesh, spec_for(k, v.shape))
+            for k, v in cache_tree.items()}
+
+
+def engine_cache_shardings(sctx: ShardCtx, cache_tree):
+    """Head-sharded engine cache (per-instance tp mesh).
+
+    Unlike :func:`cache_shardings` (production prefill/serve lowering,
+    which shards the *cache_seq* axis), the engine's donated decode
+    cache shards the KV-head axis: every step's K/V writes are per-head
+    local, so acceptance/rollback/compaction inside the fused jit touch
+    no cross-device traffic.  Non-attention leaves (slot_pos, recurrent
+    ssm/conv state, cross-attn memory) ride replicated — they are tiny
+    next to K/V and several are index/bookkeeping planes every device
+    needs whole."""
+    from repro.sharding import head_axis
+    mesh = sctx.mesh
+
+    def spec_for(key: str, shape) -> P:
+        if key in ("k", "v"):            # (L, B, S, Hkv, hd)
+            return P(None, None, None, head_axis(sctx, shape[3]), None)
+        return P(*([None] * len(shape)))
 
     return {k: NamedSharding(mesh, spec_for(k, v.shape))
             for k, v in cache_tree.items()}

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import Builder, lin
-from repro.sharding import ShardCtx
+from repro.sharding import ShardCtx, constrain, resolve_shard_map
 
 
 def init_moe(b: Builder, d: int, eff: int, n_expert: int, n_shared: int):
@@ -67,29 +67,56 @@ def _expert_ffn(buf, wg, wu, wd):
     return jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd.astype(dt))
 
 
-def moe_dense_all(x, p, cfg):
-    """Exact MoE: all experts on all tokens (single-device path)."""
+def _dense_hidden_axis(eff, sctx):
+    """Mesh axis (or None) for the per-expert hidden dim of the dense
+    path's (E, T, f) intermediates — matching the engine's exact
+    column-parallel param rules (wg/wu shard their last dim ``eff``)."""
+    if sctx is None:
+        return None
+    if eff % sctx.tp_size == 0:
+        return sctx.tp
+    return None
+
+
+def moe_dense_all(x, p, cfg, sctx: Optional[ShardCtx] = None):
+    """Exact MoE: all experts on all tokens.  With an ``sctx`` the
+    all-expert up-projections run column-parallel (per-expert hidden dim
+    sharded — reduction over ``d`` unsharded, bitwise-exact) and the
+    intermediates are all-gathered before the down-projection so that
+    reduction stays unsharded too: no capacity buffer, no dropped
+    tokens, and the same tokens at any tp degree.  At tp=1 every
+    constraint is a pure annotation (bit-identical to the unsharded
+    path)."""
     B, S, d = x.shape
     xf = x.reshape(-1, d)
     w, ids, probs = _route(xf.astype(jnp.float32), p["router"], cfg.moe_top_k)
     aux = _aux_loss(probs, ids, cfg.num_experts)
-    # (E,T,d) all-expert outputs
+    f_ax = _dense_hidden_axis(p["wg"].shape[-1], sctx)
+    # (E,T,f) all-expert intermediates, hidden dim sharded
     h = jnp.einsum("td,edf->etf", xf, p["wg"].astype(xf.dtype))
     u = jnp.einsum("td,edf->etf", xf, p["wu"].astype(xf.dtype))
-    y_all = jnp.einsum("etf,efd->etd", jax.nn.silu(h) * u,
-                       p["wd"].astype(xf.dtype))
+    h = constrain(h, sctx, None, None, f_ax)
+    u = constrain(u, sctx, None, None, f_ax)
+    g = jax.nn.silu(h) * u
+    # all-gather the hidden shards before the down-projection: its
+    # reduction (over f) must stay unsharded for bitwise exactness
+    g = constrain(g, sctx, None, None, None)
+    y_all = jnp.einsum("etf,efd->etd", g, p["wd"].astype(xf.dtype))
     # combine selected experts
     onehot = jax.nn.one_hot(ids, cfg.num_experts, dtype=jnp.float32)  # (T,k,E)
     comb = jnp.einsum("tke,tk->te", onehot, w)                        # (T,E)
     y = jnp.einsum("te,etd->td", comb.astype(x.dtype), y_all)
-    y = y + _shared(xf, p)
+    y = y + _shared(xf, p, sctx)
     return y.reshape(B, S, d), aux
 
 
-def _shared(xf, p):
+def _shared(xf, p, sctx: Optional[ShardCtx] = None):
     if "sg" not in p:
         return 0.0
-    return lin(jax.nn.silu(lin(xf, p["sg"])) * lin(xf, p["su"]), p["sd"])
+    g = jax.nn.silu(lin(xf, p["sg"])) * lin(xf, p["su"])
+    # same all-gather-before-down-proj boundary as the routed experts
+    g = constrain(g, sctx, None, None)
+    return lin(g, p["sd"])
 
 
 def _capacity(T, k, E_loc, factor):
@@ -163,6 +190,11 @@ def moe_forward(x, p, cfg, sctx: Optional[ShardCtx]):
     """x: (B,S,d) -> (y, aux)."""
     if sctx is None:
         return moe_dense_all(x, p, cfg)
+    if sctx.exact:
+        # engine hot path: token-exact sharded combine (no capacity
+        # drops — acceptance inside the fused step must see the same
+        # logits as the 1-chip oracle)
+        return moe_dense_all(x, p, cfg, sctx)
 
     B, S, d = x.shape
     E, tp = cfg.num_experts, sctx.tp_size
@@ -215,7 +247,12 @@ def moe_forward(x, p, cfg, sctx: Optional[ShardCtx]):
     sd = p.get("sd", jnp.zeros((), x.dtype))
 
     y_spec = P(dp if dp else None, sctx.tp, None) if scatter else x_spec
-    y, aux = jax.shard_map(
+    shard_map = resolve_shard_map()
+    if shard_map is None:
+        raise RuntimeError(
+            "no shard_map in this jax (neither jax.shard_map nor "
+            "jax.experimental.shard_map) — MoE ep/tp dispatch needs it")
+    y, aux = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, P(None, None), wg_spec, wg_spec, wd_spec,
                   *shared_specs),

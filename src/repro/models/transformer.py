@@ -29,7 +29,8 @@ from repro.models import attention as attn_mod
 from repro.models.common import Builder, apply_rope, lin, rms_norm
 from repro.models.mamba2 import init_mamba_block, mamba_block
 from repro.models.moe import init_moe, moe_forward
-from repro.sharding import ShardCtx, batch_axes, constrain, seq_axis
+from repro.sharding import (ShardCtx, batch_axes, constrain, head_axis,
+                            seq_axis)
 
 
 # Dry-run roofline support: XLA cost_analysis counts a while-loop body
@@ -247,6 +248,23 @@ def _self_attn(p, x, cfg, positions, slots, ck, cv, slot_pos, token_mask,
     sibling draft nodes share absolute positions."""
     xn = rms_norm(x, p["ln"], cfg.rms_eps)
     q, k, v = _project_qkv(p, xn, cfg, positions)
+    # engine tensor-parallel (exact mode): q/k/v and the KV cache shard
+    # over heads, so the per-head attention below runs with zero
+    # cross-device traffic; o is then all-gathered BEFORE the wo matmul
+    # so that contraction's reduction dim stays unsharded — bitwise the
+    # same output as the 1-chip path (row-parallel + psum would drift by
+    # an ulp and flip sampled tokens).  Non-exact contexts (training /
+    # production serve) keep their own GSPMD layout untouched.
+    exact = sctx is not None and sctx.exact
+    h_ax = head_axis(sctx, cfg.num_heads) if exact else None
+    kv_ax = head_axis(sctx, cfg.num_kv_heads) if exact else None
+
+    def con(t, *spec_axes):
+        return constrain(t, sctx, *spec_axes) if exact else t
+
+    q = con(q, None, None, h_ax, None)
+    k = con(k, None, None, kv_ax, None)
+    v = con(v, None, None, kv_ax, None)
     window = cfg.sliding_window
     B, T = x.shape[:2]
     if ck is None:
@@ -269,41 +287,52 @@ def _self_attn(p, x, cfg, positions, slots, ck, cv, slot_pos, token_mask,
             # scatter.  Attention runs over the full pre-ring K/V (the
             # window mask on absolute positions handles causality).
             shift = (T - S) % S
-            nk = jnp.roll(k[:, T - S:].astype(ck.dtype), shift, axis=1)
-            nv = jnp.roll(v[:, T - S:].astype(cv.dtype), shift, axis=1)
+            nk = con(jnp.roll(k[:, T - S:].astype(ck.dtype), shift,
+                              axis=1), None, None, kv_ax, None)
+            nv = con(jnp.roll(v[:, T - S:].astype(cv.dtype), shift,
+                              axis=1), None, None, kv_ax, None)
             o = attn_mod.attention(q, k, v, positions, positions,
                                    causal=causal, window=window,
                                    softcap=cfg.attn_logit_softcap)
         else:
             start = positions[0, 0]
             zero = jnp.zeros((), start.dtype)
-            nk = jax.lax.dynamic_update_slice(
-                ck, k.astype(ck.dtype), (zero, start, zero, zero))
-            nv = jax.lax.dynamic_update_slice(
-                cv, v.astype(cv.dtype), (zero, start, zero, zero))
+            nk = con(jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (zero, start, zero, zero)),
+                None, None, kv_ax, None)
+            nv = con(jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (zero, start, zero, zero)),
+                None, None, kv_ax, None)
             kv_valid = slot_pos >= 0
             o = attn_mod.attention(q, nk, nv, positions, slot_pos,
                                    causal=causal, window=window,
                                    kv_valid=kv_valid,
                                    softcap=cfg.attn_logit_softcap)
-        o = lin(o.reshape(B, T, -1), p["wo"])
+        o = con(o, None, None, h_ax, None)
+        o = con(o.reshape(B, T, -1), None, None, None)
+        o = lin(o, p["wo"])
         return x + o, nk, nv
     else:
         bidx = jnp.arange(B)[:, None]
-        nk = ck.at[bidx, slots].set(k.astype(ck.dtype), mode="drop")
-        nv = cv.at[bidx, slots].set(v.astype(cv.dtype), mode="drop")
+        nk = con(ck.at[bidx, slots].set(k.astype(ck.dtype), mode="drop"),
+                 None, None, kv_ax, None)
+        nv = con(cv.at[bidx, slots].set(v.astype(cv.dtype), mode="drop"),
+                 None, None, kv_ax, None)
         kv_valid = slot_pos >= 0
         o = attn_mod.attention(q, nk, nv, positions, slot_pos,
                                causal=causal, window=window,
                                kv_valid=kv_valid,
                                softcap=cfg.attn_logit_softcap,
                                allowed_mask=attn_allowed)
-    o = lin(o.reshape(B, T, -1), p["wo"])
+    o = con(o, None, None, h_ax, None)
+    o = con(o.reshape(B, T, -1), None, None, None)
+    o = lin(o, p["wo"])
     return x + o, nk, nv
 
 
-def _cross_attn(p, x, cfg, kv_or_embeds, from_cache: bool):
+def _cross_attn(p, x, cfg, kv_or_embeds, from_cache: bool, sctx=None):
     """Cross attention to static memory (image/audio embeddings)."""
+    exact = sctx is not None and sctx.exact
     xn = rms_norm(x, p["ln"], cfg.rms_eps)
     B, T, _ = xn.shape
     hd = cfg.head_dim
@@ -317,12 +346,26 @@ def _cross_attn(p, x, cfg, kv_or_embeds, from_cache: bool):
     q_pos = jnp.zeros((B, T), jnp.int32)
     k_pos = jnp.zeros((B, k.shape[1]), jnp.int32)
     o = attn_mod.attention(q, k, v, q_pos, k_pos, causal=False, window=0)
-    return x + lin(o.reshape(B, T, -1), p["wo"]), k, v
+    o = o.reshape(B, T, -1)
+    if exact:
+        # all-gather head shards before the row-parallel wo matmul so
+        # its reduction dim stays unsharded (bitwise-exact; see
+        # _self_attn)
+        o = constrain(o, sctx, None, None, None)
+    return x + lin(o, p["wo"]), k, v
 
 
-def _mlp(p, x, cfg):
+def _mlp(p, x, cfg, sctx=None):
+    exact = sctx is not None and sctx.exact
     xn = rms_norm(x, p["ln"], cfg.rms_eps)
     h = jax.nn.silu(lin(xn, p["wg"])) * lin(xn, p["wu"])
+    if exact:
+        # column-parallel up-projections leave h sharded on the hidden
+        # dim; all-gather it before the down-projection so that
+        # contraction's reduction stays unsharded (bitwise-exact)
+        h = constrain(h, sctx, None, None,
+                      head_axis(sctx, h.shape[-1]))
+        h = constrain(h, sctx, None, None, None)
     return x + lin(h, p["wd"])
 
 
@@ -331,7 +374,7 @@ def _dense_layer(p, x, cfg, positions, slots, ck, cv, slot_pos, token_mask,
     x, nk, nv = _self_attn(p["attn"], x, cfg, positions, slots, ck, cv,
                            slot_pos, token_mask, sctx=sctx,
                            attn_allowed=attn_allowed)
-    x = _mlp(p["mlp"], x, cfg)
+    x = _mlp(p["mlp"], x, cfg, sctx)
     return x, nk, nv
 
 
@@ -609,7 +652,7 @@ def _hybrid_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
         x, nk, nv = _self_attn(shared_attn, x, cfg, positions, slots,
                                ck, cv, slot_pos, token_mask, sctx=sctx,
                                attn_allowed=attn_allowed)
-        x = _mlp(shared_mlp, x, cfg)
+        x = _mlp(shared_mlp, x, cfg, sctx)
         if has_cache:
             return x, (nconv, nssm, nk, nv)
         return x, (nconv, nssm)
@@ -701,10 +744,11 @@ def _vlm_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
         xs2 = (cell_p["self"],) + ((ck, cv) if has_cache else ())
         x, inner_ys = _scan(inner, x, xs2)
         if has_cache:
-            x, _, _ = _cross_attn(cell_p["cross"], x, cfg, (xk, xv), True)
+            x, _, _ = _cross_attn(cell_p["cross"], x, cfg, (xk, xv), True,
+                                  sctx)
             nk, nv = inner_ys
             return x, (nk, nv)
-        x, _, _ = _cross_attn(cell_p["cross"], x, cfg, embeds, False)
+        x, _, _ = _cross_attn(cell_p["cross"], x, cfg, embeds, False, sctx)
         return x, (jnp.zeros(()),)
 
     body_fn = _remat(cell_body) if train else cell_body
@@ -763,10 +807,10 @@ def _audio_stack(cfg, params, x, positions, slots, slot_pos, token_mask,
                                ck, cv, slot_pos, token_mask, sctx=sctx,
                                attn_allowed=attn_allowed)
         if has_cache:
-            x, _, _ = _cross_attn(p["cross"], x, cfg, (xk, xv), True)
+            x, _, _ = _cross_attn(p["cross"], x, cfg, (xk, xv), True, sctx)
         else:
-            x, _, _ = _cross_attn(p["cross"], x, cfg, enc_out, False)
-        x = _mlp(p["mlp"], x, cfg)
+            x, _, _ = _cross_attn(p["cross"], x, cfg, enc_out, False, sctx)
+        x = _mlp(p["mlp"], x, cfg, sctx)
         if has_cache:
             return x, (nk, nv)
         return x, (jnp.zeros(()),)

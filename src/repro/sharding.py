@@ -15,6 +15,38 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+# -------- shard_map compat shim ---------------------------------------------
+# jax promoted shard_map out of jax.experimental at different versions;
+# this container's jax has only the experimental entry point.  Everything
+# in this repo resolves shard_map through here — never test
+# ``hasattr(jax, "shard_map")`` directly (that alias is absent on jax
+# versions where the experimental shard_map works fine).
+
+def resolve_shard_map():
+    """Return a shard_map callable with the modern keyword signature
+    ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``,
+    or None when jax has neither entry point.  The experimental function
+    spells the replication-check kwarg ``check_rep``; the wrapper
+    translates so call sites are version-agnostic."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    try:
+        from jax.experimental.shard_map import shard_map as _exp
+    except ImportError:
+        return None
+
+    def _compat(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _exp(f, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_rep=check_vma)
+
+    return _compat
+
+
+def shard_map_available() -> bool:
+    return resolve_shard_map() is not None
+
+
 # Logical axis vocabulary used by model init:
 #   layers        stacked-layer axis (never sharded)
 #   embed         d_model rows (FSDP target in train mode)
@@ -34,6 +66,13 @@ class ShardCtx:
     tp: str = "model"              # tensor/expert-parallel mesh axis
     fsdp: Optional[str] = None     # mesh axis for param FSDP (train mode)
     seq_shard: bool = True         # Megatron-style residual seq sharding
+    exact: bool = False            # token-exact sharded execution (engine):
+                                   # column-parallel contractions only, with
+                                   # explicit all-gathers before every
+                                   # sharded-input matmul, and the dense
+                                   # (no capacity-drop) MoE combine — every
+                                   # FP reduction keeps the single-device
+                                   # order, so tp>1 is bitwise-identical
 
     @property
     def tp_size(self) -> int:
@@ -130,6 +169,8 @@ def batch_axes(sctx: Optional[ShardCtx], batch_size: int):
     if sctx is None:
         return None
     axes = tuple(a for a in sctx.dp)
+    if not axes:
+        return None
     size = _mesh_axis_size(sctx.mesh, axes)
     if size and batch_size % size == 0:
         return axes
@@ -147,3 +188,37 @@ def seq_axis(sctx: Optional[ShardCtx], seq_len: int):
     if seq_len % sctx.tp_size == 0:
         return sctx.tp
     return None
+
+
+def head_axis(sctx: Optional[ShardCtx], n_heads: int):
+    """Mesh axis for an attention-head dim, guarded on divisibility
+    (e.g. 4 kv heads on a 16-way axis stay replicated)."""
+    if sctx is None:
+        return None
+    if n_heads % sctx.tp_size == 0:
+        return sctx.tp
+    return None
+
+
+# -------- token-exact (engine) param rules ----------------------------------
+# The engine's tp mesh must produce the *same tokens* as the 1-chip
+# oracle.  Floating-point reductions are order-sensitive, so any matmul
+# whose contraction dim is sharded (row-parallel + psum) drifts by an
+# ulp and flips sampled tokens.  Column-parallel matmuls — only the
+# *output* dim sharded — keep every output element's reduction identical
+# to the single-device computation, hence bitwise-exact.  So the exact
+# rules shard a weight dim iff it is the leaf's LAST dim and one of the
+# contraction-output axes below; the row-parallel counterparts (wo, wd)
+# stay replicated, and the model code all-gathers the matching
+# activations before those matmuls (see transformer._self_attn/_mlp).
+
+_EXACT_COL_AXES = frozenset({"heads", "kv", "ff", "eff", "vocab"})
+
+
+def exact_col_spec(axes: tuple, shape: tuple, sctx: ShardCtx) -> P:
+    """Column-parallel-only PartitionSpec for one param leaf."""
+    out = [None] * len(shape)
+    if axes and axes[-1] in _EXACT_COL_AXES \
+            and shape[-1] % sctx.tp_size == 0:
+        out[-1] = sctx.tp
+    return P(*out)

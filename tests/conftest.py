@@ -1,9 +1,21 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 device;
-only the dry-run forces 512 placeholder devices (in its own process).
+"""Shared fixtures.
+
+XLA_FLAGS must be set before the FIRST jax import anywhere in the test
+process: mesh/tp tests need real multi-device CPU meshes, and the host
+platform only splits into N placeholder devices if the flag is present
+at backend init.  A user-provided XLA_FLAGS is preserved; if it already
+forces a device count, that value wins and ours is not added.
 """
-import jax
-import numpy as np
-import pytest
+import os
+
+_FORCE = "--xla_force_host_platform_device_count=8"
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (_FORCE + " " + _flags).strip()
+
+import jax  # noqa: E402  (import must follow the XLA_FLAGS setup)
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -277,6 +277,28 @@ def test_crash_recovery_token_lossless_quick(tiny):
     assert replay > 0, "no case took the rewind+replay path"
 
 
+def test_crash_recovery_token_lossless_tp2(tiny):
+    """Fault recovery under sharded KV: tp=2 instances crash and the
+    victims resume (pooled blob or rewind+replay) token-exact vs the
+    *unmeshed* no-fault oracle — re-imported blobs re-shard onto the
+    survivor's mesh without perturbing a single sampled token."""
+    cfg, params, steps = tiny
+    oracle, _, _ = _run(cfg, params, steps)       # unmeshed, no faults
+    tp_resp, tp_stats, _ = _run(cfg, params, steps, tp=2)
+    assert tp_resp == oracle                      # no-fault tp=2 parity
+    ticks = sorted({2, tp_stats.ticks // 2})
+    recovered = 0
+    for t in ticks:
+        s = _crash_case(cfg, params, steps, oracle, t, lose_pool=False,
+                        tp=2)
+        assert s.instance_crashes == 1
+        recovered += s.recovered_requests
+    s = _crash_case(cfg, params, steps, oracle, ticks[-1],
+                    lose_pool=True, tp=2)
+    recovered += s.recovered_requests
+    assert recovered > 0
+
+
 @pytest.mark.slow
 def test_crash_fuzz_every_tick_token_lossless(tiny):
     """Crash inst0 at EVERY tick of the oracle run, x lose_pool, under
