@@ -45,6 +45,17 @@ oracle, ``tokens_lost == 0``), every recovery path must actually fire
 overhead must stay under 2x the faulted requests' remaining decode
 budget, and the 1-host-sync-per-step contract must hold under faults.
 
+And the open-loop serving benchmark (``serving`` section): with seeded
+Poisson arrivals feeding the stream loop, the arrivals-at-t0 path must
+reproduce the legacy fixed-list run exactly; at the sustainable rate
+nothing is shed, at 2x overload the SLO-aware admission sheds
+some-but-not-all groups with finite p50/p99/p999 tail latency and
+nonzero goodput; shedding must be bit-deterministic across repeat runs
+(a pure function of seed + config), weight-normalized per-tenant
+goodput spread must stay bounded, and the <=1-host-sync-per-step
+contract must hold under open-loop arrivals.  The simulator mirror
+must show the same overload shape deterministically.
+
 Exit status 0 iff every check passes — invoked from the verify skill so
 perf regressions fail tier-1 review, not just eyeballs.
 
@@ -97,6 +108,10 @@ def main(argv=None) -> int:
                     help="fresh batched migration stall seconds must be "
                          "<= this fraction of the same run's per-slot "
                          "path")
+    ap.add_argument("--tenant-spread", type=float, default=4.0,
+                    help="weight-normalized per-tenant goodput spread "
+                         "(max/min) at the sustainable rate must be <= "
+                         "this bound")
     ap.add_argument("--recovery-overhead", type=float, default=2.0,
                     help="faulted-run extra engine steps must be <= this "
                          "multiple of the faulted requests' remaining "
@@ -110,6 +125,7 @@ def main(argv=None) -> int:
     base_ovl = _section(args.baseline, "train_overlap")
     base_flt = _section(args.baseline, "engine_faults")
     base_tp = _section(args.baseline, "engine_tp")
+    base_srv = _section(args.baseline, "serving")
     if args.fresh:
         fresh = _section(args.fresh, "engine")
         fresh_mig = _section(args.fresh, "engine_migration")
@@ -118,6 +134,7 @@ def main(argv=None) -> int:
         fresh_ovl = _section(args.fresh, "train_overlap")
         fresh_flt = _section(args.fresh, "engine_faults")
         fresh_tp = _section(args.fresh, "engine_tp")
+        fresh_srv = _section(args.fresh, "serving")
     else:
         # the benchmarks package lives at the repo root, one level up
         sys.path.insert(0, os.path.dirname(os.path.dirname(
@@ -128,6 +145,7 @@ def main(argv=None) -> int:
                                        bench_engine_topology,
                                        bench_engine_tp,
                                        bench_engine_tree,
+                                       bench_serving,
                                        bench_train_overlap)
         fresh = bench_engine_rollout()
         fresh_mig = bench_engine_migration()
@@ -136,6 +154,7 @@ def main(argv=None) -> int:
         fresh_ovl = bench_train_overlap()
         fresh_flt = bench_engine_faults()
         fresh_tp = bench_engine_tp()
+        fresh_srv = bench_serving()
 
     if fresh.get("workload") != base.get("workload"):
         print("[check_bench] FAIL workload mismatch: fresh "
@@ -170,6 +189,7 @@ def main(argv=None) -> int:
     checks += _train_overlap_checks(fresh_ovl, base_ovl, args)
     checks += _fault_checks(fresh_flt, base_flt, args)
     checks += _tp_checks(fresh_tp, base_tp, args)
+    checks += _serving_checks(fresh_srv, base_srv, args)
     ok = True
     for name, passed, detail in checks:
         status = "ok  " if passed else "FAIL"
@@ -410,6 +430,65 @@ def _tp_checks(fresh: dict, base: dict, args) -> list:
          f"MoE all-to-all bytes/token {a2a} > 0 at tp=2"),
         ("tp_sim_engine_consistency", abs(ratio - 1.0) <= 1e-9,
          f"sim/engine modeled step-time ratio {ratio:.9f} == 1"),
+    ]
+
+
+def _serving_checks(fresh: dict, base: dict, args) -> list:
+    """Gates on the open-loop serving benchmark.
+
+    Shedding decisions are a pure function of (seed, config) — the
+    benchmark repeats the 2x-overload run and demands bit-identical
+    shed indices and latencies, so determinism is a yes/no fact of the
+    fresh run.  The SLO deadline is self-calibrated from a deadline-
+    free run at the sustainable rate, so the graceful-overload shape
+    (admit everything at 1x, shed some-but-not-all at 2x with finite
+    tail latency) holds across boxes; the committed baseline pins the
+    workload so the numbers stay comparable across PRs."""
+    if fresh.get("workload") != base.get("workload"):
+        return [("serving_workload", False,
+                 f"fresh {fresh.get('workload')} vs baseline "
+                 f"{base.get('workload')} — numbers are not comparable")]
+    one, two = fresh["one_x"], fresh["two_x"]
+    lat2 = two["latency_ticks"]
+    s1, s2 = fresh["sim"]["one_x"], fresh["sim"]["two_x"]
+    worst_sync = max(one["host_syncs_per_step"],
+                     two["host_syncs_per_step"])
+    return [
+        ("serving_closed_loop_equivalent",
+         fresh.get("closed_loop_equivalent") is True,
+         "arrivals-at-t0 stream == legacy fixed-list run (tokens, "
+         f"steps, host syncs): {fresh.get('closed_loop_equivalent')}"),
+        ("serving_shed_only_when_overloaded",
+         one["shed_groups"] == 0 and two["shed_groups"] > 0,
+         f"1x shed {one['shed_groups']} == 0, 2x shed "
+         f"{two['shed_groups']} > 0"),
+        ("serving_p99_finite_under_overload",
+         0.0 < lat2["p50"] <= lat2["p99"] <= lat2["p999"] < float("inf"),
+         f"2x latency ticks p50 {lat2['p50']} <= p99 {lat2['p99']} <= "
+         f"p999 {lat2['p999']} all finite"),
+        ("serving_goodput_under_overload",
+         two["goodput_tokens_per_tick"] > 0.0,
+         f"2x goodput {two['goodput_tokens_per_tick']:.3f} tok/tick "
+         "> 0 (graceful, not collapsed)"),
+        ("serving_deterministic", fresh.get("deterministic") is True,
+         "repeat 2x run bit-identical (shed indices, latencies, "
+         f"admits): {fresh.get('deterministic')}"),
+        ("serving_tenant_goodput_spread",
+         fresh["tenant_goodput_spread"] <= args.tenant_spread,
+         f"weight-normalized spread {fresh['tenant_goodput_spread']:.2f}"
+         f" <= {args.tenant_spread}"),
+        ("serving_host_syncs_per_step", worst_sync <= 1.0 + 1e-9,
+         f"worst open-loop host syncs/step {worst_sync} <= 1"),
+        ("serving_sim_overload_shape",
+         s1["shed_groups"] == 0 and s2["shed_groups"] > 0
+         and s2["latency_s"]["p99"] < float("inf"),
+         f"sim 1x shed {s1['shed_groups']} == 0, 2x shed "
+         f"{s2['shed_groups']} > 0, 2x p99 "
+         f"{s2['latency_s']['p99']:.2f}s finite"),
+        ("serving_sim_deterministic",
+         fresh["sim"].get("deterministic") is True,
+         "sim repeat 2x run bit-identical: "
+         f"{fresh['sim'].get('deterministic')}"),
     ]
 
 

@@ -10,6 +10,11 @@ from repro.core.rollout import RolloutResult, RolloutStats, SeerRollout
 from repro.core.scheduler import InstanceView, Scheduler
 from repro.core.sdmodel import (H800, TPU_V5E, ForwardCostModel,
                                 HardwareSpec, SDThroughputModel)
+from repro.core.workload import (Arrival, ArrivalFeed, ArrivalProcess,
+                                 ArrivalQueue, ArrivalSpec, LengthSampler,
+                                 PoissonArrivals, TenantRateLimiter,
+                                 TenantSpec, TraceArrivals,
+                                 latency_percentiles, serve)
 
 __all__ = [
     "ContextManager", "GroupContext", "DraftPath", "GroupCST", "SuffixTree",
@@ -18,4 +23,7 @@ __all__ = [
     "RolloutRequest", "make_groups", "RolloutResult", "RolloutStats",
     "SeerRollout", "InstanceView", "Scheduler", "H800", "TPU_V5E",
     "ForwardCostModel", "HardwareSpec", "SDThroughputModel",
+    "Arrival", "ArrivalFeed", "ArrivalProcess", "ArrivalQueue",
+    "ArrivalSpec", "LengthSampler", "PoissonArrivals", "TenantRateLimiter",
+    "TenantSpec", "TraceArrivals", "latency_percentiles", "serve",
 ]

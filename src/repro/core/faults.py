@@ -32,11 +32,16 @@ Event kinds
 Events are armed at their tick and, for the fetch kinds, stay armed
 until consumed — a fetch at tick 7 can be failed by an event armed at
 tick 5 if no fetch happened in between, which keeps schedules
-meaningful on workloads whose fetch timing shifts.
+meaningful on workloads whose fetch timing shifts.  Armed fetch events
+are consumed *oldest first, one per fetch attempt* (retries included),
+so two fetch events arming on the same tick land on successive retries
+of one fetch rather than on two distinct fetches; the constructor
+warns (``RuntimeWarning``) when a schedule does that.
 """
 from __future__ import annotations
 
 import random
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -82,6 +87,25 @@ class FaultInjector:
         self._by_tick: Dict[int, List[FaultEvent]] = {}
         for ev in self.events:
             self._by_tick.setdefault(ev.tick, []).append(ev)
+        for tick, evs in sorted(self._by_tick.items()):
+            fetchy = [ev for ev in evs
+                      if ev.kind in ("fetch_fail", "corrupt")]
+            if len(fetchy) > 1:
+                # gotcha: same-tick fetch events arm together, and
+                # fetch_outcome consumes oldest-first per retry — so the
+                # SECOND event here only fires once the first's count is
+                # exhausted, which usually means on retries of the SAME
+                # fetch, not on a later fetch as schedules tend to
+                # intend.  Legal (consumption order is documented and
+                # pinned by tests) but rarely what you want.
+                warnings.warn(
+                    f"FaultInjector: {len(fetchy)} fetch-kind events "
+                    f"({', '.join(ev.kind for ev in fetchy)}) arm on the "
+                    f"same tick {tick}; they are consumed oldest-first "
+                    "per fetch attempt, so later events land on retries "
+                    "of the same fetch — stagger ticks if each event "
+                    "should hit a distinct fetch", RuntimeWarning,
+                    stacklevel=2)
         self._armed: List[_ArmedFetch] = []
         self.fired: List[FaultEvent] = []
 

@@ -90,6 +90,15 @@ class RolloutStats:
     fetch_degraded: int = 0      # fetches that gave up -> replay recovery
     corrupt_blobs: int = 0       # checksum-rejected fetched blobs
     fetch_backoff_seconds: float = 0.0  # modeled retry backoff
+    # -- open-loop serving (run_stream(arrivals=...)) ----------------------
+    arrived_groups: int = 0      # groups the arrival feed released
+    shed_groups: int = 0         # groups the SLO admission refused
+    idle_ticks: int = 0          # ticks with nothing running, arrivals due
+    queue_depth_peak: int = 0    # max ready-buffer depth observed
+    # largest modeled admission delay seen at an offer (0 when no SLO
+    # offers happened) — benches calibrate slo_deadline_s from a
+    # deadline-free run's value
+    offer_delay_max: float = 0.0
 
     @property
     def mean_acceptance(self) -> float:
@@ -799,7 +808,9 @@ class SeerRollout:
                 result = payload
         return result
 
-    def run_stream(self, groups: Sequence[Group], progress_every: int = 0):
+    def run_stream(self, groups: Sequence[Group], progress_every: int = 0,
+                   *, arrivals=None,
+                   slo_deadline_s: Optional[float] = None):
         """Generator-shaped rollout: yields ``(kind, payload)`` events.
 
         * ``("group", Group)`` — a GRPO group just finished (all its
@@ -818,6 +829,17 @@ class SeerRollout:
         Every yield happens with no step ticket in flight, so
         :meth:`inject` and :meth:`refresh_params` are legal at ANY yield
         point, not just bubbles.
+
+        ``arrivals`` (an :class:`~repro.core.workload.ArrivalFeed`)
+        switches the loop open-loop: the feed is polled at every tick
+        boundary — the same no-ticket-in-flight contract as
+        :meth:`inject` — and released groups go through the scheduler's
+        SLO admission (queue vs shed on the modeled total-delay vs
+        ``slo_deadline_s``).  The loop then outlives the current work:
+        ticks with nothing running advance the arrival clock
+        (``idle_ticks``) until the trace is exhausted AND everything
+        admitted finished.  With ``arrivals=None`` every branch below is
+        a no-op and the run is bit-identical to the closed-loop path.
         """
         t0 = time.monotonic()
         stats = RolloutStats()
@@ -827,7 +849,8 @@ class SeerRollout:
                           fetch_cost=(self._fetch_cost
                                       if self.topology_aware else None),
                           rank_mode=self.admission_rank,
-                          queue_cost_per_token=self._queue_cost_per_token)
+                          queue_cost_per_token=self._queue_cost_per_token,
+                          slo_deadline_s=slo_deadline_s)
         all_groups = {g.group_id: g for g in groups}
         self._stream_sched = sched
         self._stream_stats = stats
@@ -844,7 +867,8 @@ class SeerRollout:
 
         try:
             yield from self._stream_loop(sched, stats, all_groups,
-                                         yielded, t0, progress_every)
+                                         yielded, t0, progress_every,
+                                         feed=arrivals)
         finally:
             self._stream_sched = None
             self._stream_stats = None
@@ -852,8 +876,9 @@ class SeerRollout:
 
     def _stream_loop(self, sched: Scheduler, stats: RolloutStats,
                      all_groups: Dict[str, Group], yielded: set,
-                     t0: float, progress_every: int):
-        while not sched.all_finished:
+                     t0: float, progress_every: int, feed=None):
+        while not sched.all_finished or \
+                (feed is not None and not feed.exhausted()):
             # 0) tick boundary: apply this tick's scheduled faults.  No
             # ticket is in flight, so a crash here is indistinguishable
             # from one at a yield point — the deterministic injection
@@ -861,6 +886,31 @@ class SeerRollout:
             tick = stats.ticks
             stats.ticks += 1
             self._cur_tick = tick
+            if feed is not None:
+                # 0b) open-loop arrivals: released groups enter through
+                # the scheduler's SLO admission at the tick boundary —
+                # the same no-ticket-in-flight contract as inject(), so
+                # an open-loop run replays exactly from (seed, config).
+                # Feed-admitted groups stay in the CURRENT inject epoch:
+                # they are this iteration's traffic, not next-epoch tail
+                # packing, so overlap accounting is untouched.
+                now = time.monotonic()
+                for arr, g in feed.poll(tick):
+                    stats.arrived_groups += 1
+                    if sched.offer_group(g, self._views()):
+                        all_groups[g.group_id] = g
+                        for r in g.requests:
+                            r.t_submitted = now
+                            self._reqs[r.req_id] = r
+                            self._req_epoch[r.req_id] = self._epoch
+                        feed.note_admitted(arr, g, tick)
+                    else:
+                        stats.shed_groups += 1
+                        feed.note_shed(arr, g, tick)
+                depth = sched.ready_count()
+                stats.queue_depth_peak = max(stats.queue_depth_peak,
+                                             depth)
+                feed.note_tick(tick, depth)
             if self.faults is not None:
                 for ev in self.faults.begin_tick(tick):
                     if ev.kind == "crash":
@@ -1032,6 +1082,10 @@ class SeerRollout:
                         self.pool.drop(r.req_id)
                         r.finish(time.monotonic())
                         sched.on_finished(r)
+                        if feed is not None:
+                            feed.note_request_finished(
+                                r.req_id, r.group_id, tick,
+                                len(r.generated))
                         g = all_groups.get(r.group_id)
                         if g is not None and g.all_finished \
                                 and r.group_id not in yielded:
@@ -1086,6 +1140,12 @@ class SeerRollout:
                 yield ("bubble", {"free_slots": free,
                                   "pending": sched.pending_count(),
                                   "stalled": False})
+            elif feed is not None and not any_active and not any_blocked \
+                    and sched.all_finished:
+                # open-loop idle gap: nothing to run yet, but the
+                # arrival trace has more traffic — the tick clock keeps
+                # advancing so future arrivals come due
+                stats.idle_ticks += 1
             if progress_every and stats.steps % progress_every == 0:
                 done = len(self._reqs) - sched.pending_count()
                 print(f"[rollout] steps={stats.steps} done={done}/"
@@ -1093,6 +1153,7 @@ class SeerRollout:
                       f"acc={stats.mean_acceptance:.2f}")
 
         stats.wall_seconds = time.monotonic() - t0
+        stats.offer_delay_max = max(sched.offer_delays, default=0.0)
         result = RolloutResult(
             groups=list(all_groups.values()), stats=stats,
             ctx_stats=self.ctx.stats(), pool_stats=self.pool.stats(),

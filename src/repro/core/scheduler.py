@@ -59,7 +59,8 @@ class Scheduler:
                  fetch_cost: Optional[
                      Callable[[RolloutRequest, str], float]] = None,
                  rank_mode: str = "total_delay",
-                 queue_cost_per_token: float = 0.0):
+                 queue_cost_per_token: float = 0.0,
+                 slo_deadline_s: Optional[float] = None):
         self.policy = policy
         self.chunk_size = chunk_size
         self.ctx = ctx
@@ -78,6 +79,20 @@ class Scheduler:
         # placed chunk by (marginal mixed-step cost); 0 = queue depth
         # doesn't enter the delay ranking
         self.queue_cost_per_token = queue_cost_per_token
+        # SLO-aware admission (open-loop serving): an offered group is
+        # shed instead of queued when its modeled admission delay — the
+        # same total-delay unit select_instance ranks placements by,
+        # plus the ready-buffer backlog ahead of it — exceeds this
+        # deadline.  None = queue forever (the closed-loop default);
+        # the decision is a pure function of scheduler state, so a
+        # seeded arrival trace sheds identically on every run.
+        self.slo_deadline_s = slo_deadline_s
+        self.shed_groups = 0
+        self.shed_requests = 0
+        # modeled delay of every offer_group decision, in offer order
+        # (admitted and shed alike) — the serving bench derives its SLO
+        # deadline from the 1x run's spread
+        self.offer_delays: List[float] = []
         self.groups: Dict[str, Group] = {}
         self._starvation_every = starvation_every
         self._decisions = 0
@@ -349,6 +364,64 @@ class Scheduler:
             plan.append((r, iid))
         plan.sort(key=lambda p: (views[p[1]].node, p[1]))
         return plan
+
+    # -- SLO-aware admission (open-loop serving) ---------------------------------
+
+    def ready_backlog_tokens(self) -> int:
+        """Chunk tokens buffered ahead of a new offer (ready requests
+        not yet running) — the queue component of the admission delay."""
+        return sum(min(self.chunk_size, r.remaining_tokens)
+                   for r in self._ready())
+
+    def modeled_admission_delay(self, instances: Sequence[InstanceView],
+                                r: RolloutRequest) -> float:
+        """Modeled seconds before a newly offered request's first chunk
+        would run: the PR 6 total-delay placement unit (KV-fetch cost +
+        the target's queued-prefill serialization) for the best
+        candidate instance, plus the ready-buffer backlog draining in
+        parallel across the fleet.  This is the deadline test's input —
+        deliberately the same currency ``select_instance`` ranks
+        placements by, so queue-vs-shed and placement agree on what
+        "busy" means."""
+        n = max(len(instances), 1)
+        backlog = self.ready_backlog_tokens() * self.queue_cost_per_token / n
+        # in-flight chunks also stand ahead of the offer once every slot
+        # is taken: charge the mean remaining chunk as queued work
+        occupied = sum(iv.active_requests for iv in instances)
+        has_free = any(iv.free_slots > 0 for iv in instances)
+        if not has_free:
+            backlog += occupied * self.chunk_size \
+                * self.queue_cost_per_token / n
+        best = None
+        for iv in instances:
+            cost = self.fetch_cost(r, iv.node) if self.fetch_cost else 0.0
+            delay = cost + iv.queued_prefill_tokens \
+                * self.queue_cost_per_token
+            if best is None or delay < best:
+                best = delay
+        return (best or 0.0) + backlog
+
+    def offer_group(self, g: Group,
+                    instances: Sequence[InstanceView]) -> bool:
+        """Open-loop admission: queue ``g`` (True) or shed it (False).
+
+        With no ``slo_deadline_s`` every offer queues — bit-identical to
+        :meth:`add_groups` — but the modeled delay is still recorded in
+        ``offer_delays``, so a deadline-free calibration run can derive
+        a realistic deadline for the gated runs.  Otherwise the group is
+        shed when its modeled admission delay exceeds the deadline; shed
+        groups never enter the buffer (``all_finished`` ignores them)
+        and only the counters remember them."""
+        if g.requests:
+            delay = self.modeled_admission_delay(instances, g.requests[0])
+            self.offer_delays.append(delay)
+            if self.slo_deadline_s is not None \
+                    and delay > self.slo_deadline_s:
+                self.shed_groups += 1
+                self.shed_requests += len(g.requests)
+                return False
+        self.add_groups([g])
+        return True
 
     # -- lifecycle callbacks -----------------------------------------------------
 

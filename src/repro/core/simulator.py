@@ -55,6 +55,8 @@ from repro.core.request import Group, ReqState, RolloutRequest
 from repro.core.scheduler import InstanceView, Scheduler
 from repro.core.sdmodel import (H800, ForwardCostModel, HardwareSpec,
                                 SDThroughputModel)
+from repro.core.workload import (Arrival, ArrivalQueue, ArrivalSpec,
+                                 TenantRateLimiter, latency_percentiles)
 from repro.data.workload import Workload, WorkloadSpec
 
 
@@ -292,6 +294,15 @@ class SimConfig:
     # the overhead fraction the recovery adds.
     fault_rate: float = 0.0
     mttr_ticks: int = 8
+    # open-loop serving (divided mode only): instead of submitting the
+    # whole workload at t=0, groups are offered at their seeded arrival
+    # times (Poisson rate source + per-tenant token-rate limits) through
+    # the scheduler's SLO admission (queue vs shed on the modeled
+    # total-delay vs ``arrival.slo_deadline_s``).  Cluster-scale
+    # latency percentiles, shed counts and per-tenant goodput land in
+    # ``SimResult.extras["serving"]``; shedding decisions are a pure
+    # function of (seed, config) — the overload-determinism invariant.
+    arrival: Optional[ArrivalSpec] = None
 
     def with_measured_overlap(self, fraction: float) -> "SimConfig":
         """Calibrate ``migration_overlap`` from an engine's measured
@@ -545,12 +556,35 @@ class ClusterSimulator:
         # decode forward (same unit the engine tier derives)
         q_cost = max(0.0, self.fwd.mixed_step_time(1, 1, chunk, 0.0)
                      - self.fwd.step_time(1, 1, 0.0)) / max(chunk, 1)
-        sched = Scheduler(groups, ctxmgr, policy=policy, chunk_size=chunk,
+        # open-loop arrivals: groups are NOT pre-buffered — each is
+        # offered to the scheduler's SLO admission at its (seeded)
+        # release time.  Arrival times/tenants come from the spec's
+        # Poisson process; the token demand each group places on its
+        # tenant's rate limiter uses the workload's real shape (prompt
+        # plus mean true generation length), so client-side metering
+        # matches the work actually offered.
+        arrival_q = None
+        if sim.arrival is not None:
+            if sim.mode != "divided":
+                raise ValueError("SimConfig.arrival requires divided mode")
+            proc = sim.arrival.process(len(groups))
+            trace = [Arrival(t=a.t, index=a.index, tenant=a.tenant,
+                             prompt_len=self.spec.prompt_len,
+                             max_new_tokens=int(round(float(
+                                 np.mean(wl.lengths[a.index])))))
+                     for a in proc.trace()]
+            limiter = TenantRateLimiter(sim.arrival.tenant_specs(),
+                                        burst_s=sim.arrival.burst_s)
+            arrival_q = ArrivalQueue(trace, limiter, self.spec.group_size)
+        sched = Scheduler([] if arrival_q is not None else groups,
+                          ctxmgr, policy=policy, chunk_size=chunk,
                           oracle_lengths=(true_len if policy in
                                           ("lfs", "sfs") else None),
                           fetch_cost=fetch_cost,
                           rank_mode=sim.admission_rank,
-                          queue_cost_per_token=q_cost)
+                          queue_cost_per_token=q_cost,
+                          slo_deadline_s=(sim.arrival.slo_deadline_s
+                                          if sim.arrival else None))
         self._assign_static(groups, instances, true_len)
 
         group_refs: Dict[str, int] = {}     # completed requests per group
@@ -562,25 +596,100 @@ class ClusterSimulator:
         migrations = 0
         now = 0.0
         finished = 0
-        # event heap: (time, seq#, instance index)
+        # event heap: (time, seq#, instance index); index -1 marks an
+        # arrival-release event (open-loop mode)
         heap: List[Tuple[float, int, int]] = []
         ctr = 0
-        for k, inst in enumerate(instances):
-            self._fill(inst, sched, instances, now, true_len)
-            dur, n = self._segment(inst, ctxmgr, group_refs)
-            dur += inst.overhead
-            inst.overhead = 0.0
-            inst._seg = (now, dur, n)
-            heapq.heappush(heap, (now + (dur if n else 1e-3), ctr, k))
+        # -- open-loop accounting ------------------------------------------
+        idle_set: set = set()          # parked instances (no heap entry)
+        admitted_reqs = 0              # dynamic finish target
+        t_admit: Dict[str, float] = {}
+        tenant_of: Dict[str, str] = {}
+        shed_idx: List[int] = []
+        srv_offered = srv_admitted = srv_shed = 0
+        qd_peak, qd_sum, qd_samples = 0, 0.0, 0
+        srv_tenants: Dict[str, Dict[str, float]] = {}
+        if arrival_q is not None:
+            srv_tenants = {ts.name: {"arrived": 0, "admitted": 0,
+                                     "shed": 0, "goodput_tokens": 0.0}
+                           for ts in sim.arrival.tenant_specs()}
+            # every instance starts parked; arrivals wake them
+            idle_set = set(range(len(instances)))
+            for inst in instances:
+                inst._seg = (0.0, 0.0, 0)
+            nx = arrival_q.next_release_time(0.0)
+            heapq.heappush(heap, (max(nx or 0.0, 0.0), ctr, -1))
             ctr += 1
+        else:
+            for k, inst in enumerate(instances):
+                self._fill(inst, sched, instances, now, true_len)
+                dur, n = self._segment(inst, ctxmgr, group_refs)
+                dur += inst.overhead
+                inst.overhead = 0.0
+                inst._seg = (now, dur, n)
+                heapq.heappush(heap, (now + (dur if n else 1e-3), ctr, k))
+                ctr += 1
 
         idle_wakes = 0
         fault_rng = random.Random(sim.seed * 9176 + 11)
         fault_events = 0
         fault_lost = 0.0
         fault_down = 0.0
-        while finished < n_target and heap:
+        while heap:
+            if arrival_q is not None:
+                # dynamic target: everything admitted so far, plus what
+                # the still-pending arrivals could admit (shed groups
+                # leave the target)
+                n_target = admitted_reqs + self.spec.group_size * \
+                    arrival_q.pending_count()
+            if finished >= n_target:
+                break
             now, _, k = heapq.heappop(heap)
+            if k < 0:
+                # arrival-release event: offer every releasable group
+                # through the SLO admission, wake parked instances if
+                # anything was admitted, schedule the next release
+                woke = False
+                for arr in arrival_q.release_ready(now + 1e-9):
+                    g = groups[arr.index]
+                    views = [InstanceView(i.iid, i.free_slots(),
+                                          int(i.kv_free()),
+                                          active_requests=len(i.running),
+                                          queued_prefill_tokens=int(
+                                              i.prefill_backlog),
+                                          node=i.node)
+                             for i in instances]
+                    srv_offered += 1
+                    pt = srv_tenants.setdefault(
+                        arr.tenant, {"arrived": 0, "admitted": 0,
+                                     "shed": 0, "goodput_tokens": 0.0})
+                    pt["arrived"] += 1
+                    if sched.offer_group(g, views):
+                        srv_admitted += 1
+                        pt["admitted"] += 1
+                        tenant_of[g.group_id] = arr.tenant
+                        for r in g.requests:
+                            t_admit[r.req_id] = now
+                        admitted_reqs += len(g.requests)
+                        woke = True
+                    else:
+                        srv_shed += 1
+                        pt["shed"] += 1
+                        shed_idx.append(arr.index)
+                depth = sched.ready_count()
+                qd_peak = max(qd_peak, depth)
+                qd_sum += depth
+                qd_samples += 1
+                if woke and idle_set:
+                    for ki in sorted(idle_set):
+                        heapq.heappush(heap, (now, ctr, ki))
+                        ctr += 1
+                    idle_set.clear()
+                nx = arrival_q.next_release_time(now)
+                if nx is not None:
+                    heapq.heappush(heap, (max(nx, now + 1e-9), ctr, -1))
+                    ctr += 1
+                continue
             if idle_wakes > 200 * n_requests:
                 raise RuntimeError("simulation livelock (nothing placeable)")
             inst = instances[k]
@@ -656,6 +765,15 @@ class ClusterSimulator:
                     self._preempt(inst)
             migrations += self._fill(inst, sched, instances, now,
                                      true_len)
+            if idle_set:
+                # _fill may cross-admit onto a parked instance (the
+                # topology ranking can prefer it); give it a heap entry
+                # or its segment would never run
+                for ki in [ki for ki in sorted(idle_set)
+                           if instances[ki].running]:
+                    idle_set.discard(ki)
+                    heapq.heappush(heap, (now, ctr, ki))
+                    ctr += 1
             dur, n = self._segment(inst, ctxmgr, group_refs)
             dur += inst.overhead
             inst.overhead = 0.0
@@ -669,6 +787,11 @@ class ClusterSimulator:
                                             else n_requests - n_target):
                     heapq.heappush(heap, (now + 0.05, ctr, k))
                     idle_wakes += 1
+                elif arrival_q is not None and not arrival_q.empty:
+                    # open-loop idle gap: no spin — the next arrival
+                    # event wakes the park (keeps cluster-scale runs
+                    # cheap through sparse traffic)
+                    idle_set.add(k)
             ctr += 1
             if not heap and finished < n_target:
                 raise RuntimeError("simulation stalled")
@@ -702,7 +825,7 @@ class ClusterSimulator:
         reclaimed = barrier_stall * sim.barrier_reclaim \
             if sim.async_overlap else 0.0
         effective_time = t_end - reclaimed / max(len(instances), 1)
-        return SimResult(
+        res = SimResult(
             total_time=t_end, tokens=tokens, n_requests=len(completion),
             completion_times=comp, output_lengths=out_lens,
             preemptions=sum(i.preemptions for i in instances),
@@ -731,6 +854,40 @@ class ClusterSimulator:
                 "fault_overhead_frac":
                     (fault_lost + fault_down) / max(busy, 1e-9),
             })
+        if arrival_q is not None:
+            # graceful-overload accounting: per-request latency is
+            # admit -> completion in modeled seconds; goodput counts
+            # only tokens of requests that finished (shed work is not
+            # goodput by construction — it never ran)
+            req_map = {r.req_id: r for r in all_reqs}
+            lat = [completion[rid] - t_admit[rid]
+                   for rid in completion if rid in t_admit]
+            horizon = max(t_end, 1e-9)
+            good_total = 0.0
+            for rid in completion:
+                r = req_map[rid]
+                tn = tenant_of.get(r.group_id)
+                if tn is not None:
+                    srv_tenants[tn]["goodput_tokens"] += r.gen_len
+                    good_total += r.gen_len
+            per_tenant = {
+                name: dict(pt, goodput_tokens_per_sec=(
+                    pt["goodput_tokens"] / horizon))
+                for name, pt in srv_tenants.items()}
+            res.extras["serving"] = {
+                "offered_groups": srv_offered,
+                "admitted_groups": srv_admitted,
+                "shed_groups": srv_shed,
+                "shed_indices": shed_idx,
+                "latency_s": latency_percentiles(lat),
+                "completed_requests": len(lat),
+                "goodput_tokens_per_sec": good_total / horizon,
+                "per_tenant": per_tenant,
+                "queue_depth_peak": qd_peak,
+                "queue_depth_mean": qd_sum / max(qd_samples, 1),
+                "offer_delay_max": max(sched.offer_delays, default=0.0),
+            }
+        return res
 
     # -- placement -----------------------------------------------------------------
 

@@ -23,6 +23,7 @@ reward/token trajectory (recovered tokens keep their original param
 versions, so the staleness ledger stays sound)."""
 import dataclasses
 import random
+import warnings
 
 import numpy as np
 import pytest
@@ -116,11 +117,15 @@ def test_fault_event_validation():
 
 
 def test_injector_armed_fetch_consumption():
-    inj = FaultInjector([
-        FaultEvent(tick=1, kind="fetch_fail", count=2),
-        FaultEvent(tick=1, kind="corrupt", req_id="r7"),
-        FaultEvent(tick=3, kind="crash", instance_id="inst0"),
-    ])
+    with pytest.warns(RuntimeWarning, match="same tick 1"):
+        # the same-tick pair is deliberate here: this test IS the pin on
+        # the oldest-first-per-retry consumption order the warning
+        # documents
+        inj = FaultInjector([
+            FaultEvent(tick=1, kind="fetch_fail", count=2),
+            FaultEvent(tick=1, kind="corrupt", req_id="r7"),
+            FaultEvent(tick=3, kind="crash", instance_id="inst0"),
+        ])
     assert inj.begin_tick(0) == []
     assert inj.begin_tick(1) == []            # fetch kinds arm internally
     # armed events persist across ticks until consumed, oldest first
@@ -138,6 +143,45 @@ def test_injector_armed_fetch_consumption():
     assert inj.fired == []
     assert inj.begin_tick(1) == []            # schedule replays after reset
     assert inj.fetch_outcome("rZ") == "fail"
+
+
+def test_injector_warns_on_same_tick_fetch_faults():
+    """Schedule validation: >1 fetch-kind events arming on one tick is
+    the classic schedule-authoring gotcha — the second event is consumed
+    on RETRIES of the first's fetch, not on a later fetch.  Construction
+    warns; staggered ticks (and same-tick crash/stuck mixes) stay
+    silent."""
+    with pytest.warns(RuntimeWarning, match="oldest-first"):
+        FaultInjector([FaultEvent(tick=2, kind="fetch_fail"),
+                       FaultEvent(tick=2, kind="fetch_fail")])
+    with pytest.warns(RuntimeWarning, match="fetch_fail, corrupt"):
+        FaultInjector([FaultEvent(tick=5, kind="fetch_fail"),
+                       FaultEvent(tick=5, kind="corrupt")])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        FaultInjector([FaultEvent(tick=1, kind="fetch_fail"),
+                       FaultEvent(tick=2, kind="corrupt"),
+                       FaultEvent(tick=2, kind="crash",
+                                  instance_id="i0"),
+                       FaultEvent(tick=2, kind="stuck",
+                                  instance_id="i1")])
+
+
+def test_same_tick_fetch_events_land_on_retries_of_one_fetch():
+    """Pin the documented consumption order: with fail+corrupt armed on
+    the same tick, one request's retry sequence eats BOTH events before
+    any other fetch sees either."""
+    with pytest.warns(RuntimeWarning):
+        inj = FaultInjector([
+            FaultEvent(tick=0, kind="fetch_fail", count=1),
+            FaultEvent(tick=0, kind="corrupt", count=1),
+        ])
+    inj.begin_tick(0)
+    # rA's first attempt fails; its retry hits the corrupt event —
+    # the second event never reaches a different request's fetch
+    assert inj.fetch_outcome("rA") == "fail"
+    assert inj.fetch_outcome("rA") == "corrupt"
+    assert inj.fetch_outcome("rB") == "ok"
 
 
 def test_seeded_schedule_deterministic_and_spares_last_instance():

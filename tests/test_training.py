@@ -180,6 +180,94 @@ def test_ledger_gates_bound_violation():
         led.record(1, 3, {"r0": [1]})          # staleness 2 > bound
 
 
+def test_stream_bound2_ledger_histogram_matches_versions(rl_fixture):
+    """staleness_bound=2 end-to-end: slot-rich instances let iteration
+    j+2 inject while iteration j is still rolling, so genuinely
+    2-version-stale tokens get trained.  The ledger's per-iteration
+    histogram must be exactly the recomputation from the raw per-token
+    versions the rollout stamped (no token dropped, none double
+    counted), and the bound must hold."""
+    cfg, task = rl_fixture
+    from repro.training.loop import RLConfig, RLTrainer
+    rl = RLConfig(n_groups=2, group_size=2, max_new_tokens=8,
+                  iterations=3, n_instances=2, max_slots=6,
+                  cache_len=128, chunk_size=8, seed=3,
+                  log=lambda s: None, async_overlap=True,
+                  staleness_bound=2)
+    tr = RLTrainer(cfg, task, rl)
+    recorded = []
+    orig = tr.ledger.record
+
+    def record(it, train_version, versions):
+        recorded.append((it, train_version,
+                         {k: list(v) for k, v in versions.items()}))
+        return orig(it, train_version, versions)
+
+    tr.ledger.record = record
+    hist, responses = _run_recording(tr)
+    assert len(hist) == 3
+    assert len(recorded) == 3
+    for it, tv, versions in recorded:
+        counts = {}
+        for vs in versions.values():
+            for v in vs:
+                assert tv - 2 <= v <= tv       # the bound, per raw token
+                s = max(0, tv - v)
+                counts[s] = counts.get(s, 0) + 1
+        assert tr.ledger.per_iteration[it] == counts
+    trained = sum(len(v) for v in responses.values())
+    assert tr.ledger.total_tokens() == trained
+    assert tr.ledger.max_staleness == 2        # skew-2 actually happened
+    assert tr.ledger.total_tokens(2) > 0
+    assert tr.ledger.total_tokens(0) > 0       # ...but not everywhere
+
+
+def test_grpo_staleness_plane_masks_correctly(tiny_params_cache):
+    """The batch's staleness plane must engage exactly like a manual
+    loss-mask edit: capping max_token_staleness == zeroing stale tokens'
+    mask; staleness_discount == scaling the mask by discount**s.  Tokens
+    masked by the cap must have NO gradient path (perturbing their old
+    logprobs cannot move the loss)."""
+    from repro.training.grpo import grpo_loss
+    cfg, params = tiny_params_cache("granite-3-8b")
+    prompts = {f"g0.r{i}": [3, 1, 4] for i in range(2)}
+    responses = {"g0.r0": [5, 9, 2, 6], "g0.r1": [2, 7, 1, 8]}
+    logprobs = {"g0.r0": [-0.1, -0.2, -0.3, -0.4],
+                "g0.r1": [-0.2, -0.1, -0.4, -0.3]}
+    rewards = {"g0.r0": 1.0, "g0.r1": 0.0}
+    # r0's tail (last 2 tokens) is 2 versions stale; r1 fully fresh
+    versions = {"g0.r0": [2, 2, 0, 0], "g0.r1": [2, 2, 2, 2]}
+    kw = dict(group_size=2, max_len=8)
+    batch = pack_experience(cfg, responses, prompts, rewards, logprobs,
+                            token_versions=versions, train_version=2,
+                            **kw)
+    stale = np.asarray(batch["staleness"])
+    np.testing.assert_array_equal(
+        stale[0, 3:7], [0, 0, 2, 2])           # plane sits on responses
+    np.testing.assert_array_equal(stale[1, 3:7], [0, 0, 0, 0])
+    assert stale[:, :3].sum() == 0             # prompts carry none
+
+    for gk, scale in ((dict(max_token_staleness=1), stale <= 1),
+                      (dict(staleness_discount=0.5), 0.5 ** stale)):
+        gcfg = GRPOConfig(**gk)
+        loss_a, _ = grpo_loss(cfg, params, batch, gcfg=gcfg)
+        manual = pack_experience(cfg, responses, prompts, rewards,
+                                 logprobs, **kw)   # no staleness key
+        manual["loss_mask"] = manual["loss_mask"] * scale
+        loss_b, _ = grpo_loss(cfg, params, manual, gcfg=GRPOConfig())
+        np.testing.assert_allclose(np.asarray(loss_a),
+                                   np.asarray(loss_b), rtol=1e-6)
+
+    # no gradient path through capped-out tokens
+    gcfg = GRPOConfig(max_token_staleness=1)
+    perturbed = dict(batch)
+    perturbed["old_logprobs"] = batch["old_logprobs"] + \
+        jnp.asarray(stale > 1, jnp.float32) * 7.0
+    la, _ = grpo_loss(cfg, params, batch, gcfg=gcfg)
+    lb, _ = grpo_loss(cfg, params, perturbed, gcfg=gcfg)
+    assert float(la) == float(lb)
+
+
 # -- weight refresh while requests are in flight ----------------------------
 
 
