@@ -611,16 +611,13 @@ def bench_train_overlap(n_groups: int = 3, group_size: int = 2,
     sync, sync_resp, _ = one()
     s0, s0_resp, _ = one(async_overlap=True, staleness_bound=0)
     s1, s1_resp, tr1 = one(async_overlap=True, staleness_bound=1)
-    stats1 = [r.stats for r in tr1.stream_results]
-    overlap = {
-        "streams": len(stats1),
-        "overlap_steps": sum(s.overlap_steps for s in stats1),
-        "reclaimed_rows": sum(s.reclaimed_rows for s in stats1),
-        "refreshes": sum(s.refreshes for s in stats1),
-        "injected_groups": sum(s.injected_groups for s in stats1),
-        "reval_tokens": sum(s.reval_tokens for s in stats1),
-        "reval_accepted": sum(s.reval_accepted for s in stats1),
-    }
+    # unified stats surface: per-stream RolloutStats snapshots (plain
+    # dicts), summed by key instead of ad-hoc attribute reads
+    snaps = [r.stats.snapshot() for r in tr1.stream_results]
+    overlap = {"streams": len(snaps)}
+    for key in ("overlap_steps", "reclaimed_rows", "refreshes",
+                "injected_groups", "reval_tokens", "reval_accepted"):
+        overlap[key] = sum(s[key] for s in snaps)
 
     # cluster-scale barrier stall (divided-mode sim, same shape idea):
     # how many instance-seconds the iteration barrier wastes, and what
@@ -733,29 +730,27 @@ def bench_engine_faults(n_groups: int = 3, group_size: int = 2,
         res = ro.run(groups())
         wall = time.perf_counter() - t0
         engine_steps = sum(i.steps_run for i in ro.instances) - steps0
-        s = res.stats
-        return {
+        # unified stats surface: read the fault/recovery counters off
+        # the RolloutStats snapshot (one consistent dict) rather than
+        # attribute-by-attribute
+        s = res.stats.snapshot()
+        rec = {
             "engine_steps": engine_steps,
-            "ticks": s.ticks,
+            "ticks": s["ticks"],
             "host_syncs_per_step":
                 (ro.steps.host_syncs - hs0) / max(engine_steps, 1),
-            "tokens_per_sec": s.tokens / max(wall, 1e-9),
+            "tokens_per_sec": s["tokens"] / max(wall, 1e-9),
             "wall_seconds": wall,
-            "instance_crashes": s.instance_crashes,
-            "watchdog_escalations": s.watchdog_escalations,
-            "stuck_ticks": s.stuck_ticks,
-            "recovered_requests": s.recovered_requests,
-            "recovered_via_blob": s.recovered_via_blob,
-            "recovered_via_replay": s.recovered_via_replay,
-            "recovery_redecode_tokens": s.recovery_redecode_tokens,
-            "recovery_replay_tokens": s.recovery_replay_tokens,
-            "faulted_remaining_tokens": s.faulted_remaining_tokens,
-            "fetch_failures": s.fetch_failures,
-            "fetch_degraded": s.fetch_degraded,
-            "corrupt_blobs": s.corrupt_blobs,
-            "fetch_backoff_seconds": s.fetch_backoff_seconds,
-            "responses": res.responses(),
         }
+        rec.update((k, s[k]) for k in (
+            "instance_crashes", "watchdog_escalations", "stuck_ticks",
+            "recovered_requests", "recovered_via_blob",
+            "recovered_via_replay", "recovery_redecode_tokens",
+            "recovery_replay_tokens", "faulted_remaining_tokens",
+            "fetch_failures", "fetch_degraded", "corrupt_blobs",
+            "fetch_backoff_seconds"))
+        rec["responses"] = res.responses()
+        return rec
 
     ro_o = make()
     oracle = one(ro_o)
@@ -1160,6 +1155,194 @@ def bench_serving(n_groups: int = 12, group_size: int = 2,
     }
 
 
+def bench_observability(n_groups: int = 3, group_size: int = 2,
+                        max_new_tokens: int = 14, n_instances: int = 2,
+                        max_slots: int = 2, chunk_size: int = 5,
+                        prefill_chunk: int = 8, seed: int = 5) -> dict:
+    """Flight-recorder benchmark: the tracing layer's standing
+    invariants on a real-engine rollout, plus a fault+overload serving
+    run's tail-latency attribution and the engine-vs-simulator schema
+    match.
+
+    Gates (scripts/check_bench.py):
+
+    * tracing **off** is the absence of the feature: a traced run's
+      tokens, engine steps and host syncs are bit-identical to an
+      untraced run of the same seeded workload;
+    * tracing **on** adds zero host syncs (the per-step ratio is
+      unchanged — every hook records host-side metadata only);
+    * span conservation: every finished request's phase spans tile its
+      wall interval exactly, in ticks and in modeled seconds;
+    * trace bit-determinism: two traced runs of the same (seed, config)
+      serialize to identical event lists, and the Chrome JSON export
+      round-trips losslessly;
+    * a seeded fault + overload serving run yields a tail attribution
+      with shed requests and a nonzero ``recovery`` phase;
+    * the simulator emits the same event schema (keys and phase
+      vocabulary) as the engine tier.
+    """
+    import dataclasses as _dc
+    import json as _json
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.core.faults import FaultEvent, FaultInjector
+    from repro.core.request import make_groups
+    from repro.core.rollout import SeerRollout
+    from repro.core.workload import (LengthSampler, PoissonArrivals,
+                                     TenantSpec, serve)
+    from repro.engine import StepFunctions
+    from repro.models import init_params
+    from repro.obs import (PHASES, Tracer, tail_attribution,
+                           timelines_from_events)
+    from repro.obs.trace import SCHEMA_KEYS, schema_keys
+
+    cfg = get_tiny_config("granite-3-8b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(1))
+    steps = StepFunctions(cfg)
+    plens = [6 + 4 * g for g in range(n_groups)]
+    prompts = [[(7 * g + 3 * j) % (cfg.vocab_size - 2) + 1
+                for j in range(plens[g])] for g in range(n_groups)]
+
+    def make(tracer=None, injector=None, **kw):
+        kwargs = dict(
+            n_instances=n_instances, max_slots=max_slots,
+            cache_len=max(plens) + max_new_tokens + 32,
+            chunk_size=chunk_size, prefill_chunk=prefill_chunk,
+            admit_into_draining=False, final_chunk_inplace=False,
+            policy="seer", spec_decode=False, gamma_max=8, base_seed=7,
+            fault_injector=injector, watchdog_ticks=3, fetch_retries=3,
+            steps=steps, tracer=tracer)
+        kwargs.update(kw)
+        return SeerRollout(cfg, params, **kwargs)
+
+    def groups():
+        return make_groups(prompts, group_size=group_size,
+                           max_new_tokens=max_new_tokens, seed=seed)
+
+    def one(tracer=None):
+        ro = make(tracer)
+        hs0 = steps.host_syncs
+        st0 = sum(i.steps_run for i in ro.instances)
+        res = ro.run(groups())
+        engine_steps = sum(i.steps_run for i in ro.instances) - st0
+        return res, engine_steps, steps.host_syncs - hs0
+
+    # -- trace-off bit-identity + zero extra host syncs ----------------
+    res_off, steps_off, syncs_off = one()
+    tr = Tracer()
+    res_on, steps_on, syncs_on = one(tracer=tr)
+    bit_identical = (res_off.responses() == res_on.responses()
+                     and steps_off == steps_on
+                     and syncs_off == syncs_on)
+
+    # -- conservation + determinism + chrome round-trip ----------------
+    evs = tr.events()
+    tls = timelines_from_events(evs)
+    rep = tail_attribution(tls)
+    tick_tiling = all(
+        sum(b - a for _, a, b in tl.segments)
+        == tl.end_tick - tl.submit_tick
+        for tl in tls.values() if tl.finished)
+    tr2 = Tracer()
+    one(tracer=tr2)
+    deterministic = tr2.events() == evs
+    roundtrip = Tracer.from_chrome(
+        _json.loads(_json.dumps(tr.to_chrome()))) == evs
+    engine_phases = sorted({e["name"] for e in evs
+                            if e["cat"] == "request" and e["ph"] == "X"})
+
+    # -- fault + overload serving run ----------------------------------
+    tenants = (TenantSpec("a", weight=2.0, token_rate=200.0),
+               TenantSpec("b", weight=1.0, token_rate=200.0))
+    lengths = LengthSampler(prompt_len=8, gen_mean=10, gen_sigma=0.0)
+
+    def feed():
+        from repro.core.workload import ArrivalFeed
+        return ArrivalFeed(
+            PoissonArrivals(0.8, 10, seed=seed, tenants=tenants,
+                            lengths=lengths),
+            vocab_size=cfg.vocab_size, group_size=group_size,
+            ticks_per_second=1.0, seed=seed)
+
+    probe = serve(make(), feed())
+    probe_res = probe.pop("result")
+    # a deadline below the probe's worst modeled delay guarantees sheds
+    # on the (identical) gated arrival trace
+    deadline = 0.5 * max(probe_res.stats.offer_delay_max, 1e-9)
+    crash_tick = max(2, probe["elapsed_ticks"] // 3)
+    inj = FaultInjector([FaultEvent(tick=crash_tick, kind="crash",
+                                    instance_id="inst0")])
+    tr_ov = Tracer()
+    rep_ov = serve(make(tracer=tr_ov, injector=inj), feed(),
+                   slo_deadline_s=deadline)
+    res_ov = rep_ov.pop("result")
+    tls_ov = timelines_from_events(tr_ov.events())
+    attribution = tail_attribution(tls_ov)
+
+    # -- simulator: same schema on an equivalent divided workload ------
+    spec = _dc.replace(MOONLIGHT, n_requests=48, group_size=4,
+                       n_instances=2, max_gen_length=8192,
+                       mean_gen_length=2000)
+    wl = make_workload(spec, seed=seed)
+    tr_sim = Tracer()
+    sim = ClusterSimulator(
+        get_config("yi-6b"), spec,
+        SimConfig(mode="divided", policy="seer", max_slots=16,
+                  chips_per_instance=1, kv_capacity_tokens=40_000,
+                  chunk_size=512, fault_rate=0.02, seed=seed),
+        tracer=tr_sim)
+    sim.run(wl)
+    sim_evs = tr_sim.events()
+    sim_tls = timelines_from_events(sim_evs)
+    sim_rep = tail_attribution(sim_tls)
+    sim_phases = sorted({e["name"] for e in sim_evs
+                         if e["cat"] == "request" and e["ph"] == "X"})
+
+    return {
+        "workload": {
+            "n_groups": n_groups, "group_size": group_size,
+            "max_new_tokens": max_new_tokens,
+            "n_instances": n_instances, "max_slots": max_slots,
+            "chunk_size": chunk_size, "prefill_chunk": prefill_chunk,
+            "seed": seed, "arch": "granite-3-8b",
+        },
+        "trace_off_bit_identical": bit_identical,
+        "host_syncs_per_step": {
+            "untraced": syncs_off / max(steps_off, 1),
+            "traced": syncs_on / max(steps_on, 1),
+        },
+        "events": len(evs),
+        "span_conservation": rep["conserved"],
+        "tick_tiling_exact": tick_tiling,
+        "trace_deterministic": deterministic,
+        "chrome_roundtrip": roundtrip,
+        "attribution": rep,
+        "overload_faults": {
+            "slo_deadline_s": deadline,
+            "crash_tick": crash_tick,
+            "shed_groups": rep_ov["shed_groups"],
+            "instance_crashes": res_ov.stats.snapshot()[
+                "instance_crashes"],
+            "attribution": attribution,
+        },
+        "schema": {
+            "keys": sorted(SCHEMA_KEYS),
+            "engine_keys": schema_keys(evs),
+            "sim_keys": schema_keys(sim_evs),
+            "match": schema_keys(evs) == schema_keys(sim_evs)
+            == sorted(SCHEMA_KEYS),
+            "engine_phases": engine_phases,
+            "sim_phases": sim_phases,
+            "phases_in_vocab":
+                set(engine_phases) <= set(PHASES)
+                and set(sim_phases) <= set(PHASES),
+        },
+        "sim": {"events": len(sim_evs),
+                "span_conservation": sim_rep["conserved"],
+                "requests": sim_rep["requests"]},
+    }
+
+
 _ENGINE_ROLLOUT_CACHE: Optional[dict] = None
 _ENGINE_MIGRATION_CACHE: Optional[dict] = None
 _ENGINE_TOPOLOGY_CACHE: Optional[dict] = None
@@ -1168,6 +1351,17 @@ _TRAIN_OVERLAP_CACHE: Optional[dict] = None
 _ENGINE_FAULTS_CACHE: Optional[dict] = None
 _ENGINE_TP_CACHE: Optional[dict] = None
 _SERVING_CACHE: Optional[dict] = None
+_OBSERVABILITY_CACHE: Optional[dict] = None
+
+
+def ensure_observability_record() -> dict:
+    """Run the flight-recorder benchmark once per process and write it
+    to BENCH_rollout.json's 'observability' section."""
+    global _OBSERVABILITY_CACHE
+    if _OBSERVABILITY_CACHE is None:
+        _OBSERVABILITY_CACHE = bench_observability()
+        update_bench_rollout("observability", _OBSERVABILITY_CACHE)
+    return _OBSERVABILITY_CACHE
 
 
 def ensure_serving_record() -> dict:
@@ -1293,12 +1487,53 @@ if __name__ == "__main__":
              "exit nonzero unless shedding is SLO-shaped and "
              "deterministic (does NOT write the bench baseline)")
     ap.add_argument(
+        "--trace", action="store_true",
+        help="flight-recorder smoke: run bench_observability once, "
+             "print the tail-attribution table, exit nonzero unless "
+             "tracing is bit-transparent (tokens/steps/host-syncs), "
+             "spans conserve, traces are deterministic and engine/sim "
+             "emit the same schema (does NOT write the bench baseline)")
+    ap.add_argument(
         "--tp", action="store_true",
         help="tensor-parallel smoke: run bench_engine_tp once, print "
              "per-arch exactness + host-sync + collective summaries, "
              "exit nonzero unless tp=1 is bit-identical and tp=2 is "
              "token-exact (does NOT write the bench baseline)")
     ns = ap.parse_args()
+    if ns.trace:
+        from repro.obs import format_attribution
+        rec = bench_observability()
+        ov = rec["overload_faults"]
+        print("== tail attribution (fault + overload serving run)",
+              flush=True)
+        print(format_attribution(ov["attribution"]), flush=True)
+        table([{
+            "bit_identical": rec["trace_off_bit_identical"],
+            "syncs_untraced": rec["host_syncs_per_step"]["untraced"],
+            "syncs_traced": rec["host_syncs_per_step"]["traced"],
+            "conserved": rec["span_conservation"],
+            "tick_exact": rec["tick_tiling_exact"],
+            "deterministic": rec["trace_deterministic"],
+            "schema_match": rec["schema"]["match"],
+        }], ["bit_identical", "syncs_untraced", "syncs_traced",
+             "conserved", "tick_exact", "deterministic",
+             "schema_match"], title="flight-recorder invariants")
+        ok = (rec["trace_off_bit_identical"]
+              and rec["host_syncs_per_step"]["traced"]
+              == rec["host_syncs_per_step"]["untraced"]
+              and rec["span_conservation"]
+              and rec["tick_tiling_exact"]
+              and rec["trace_deterministic"]
+              and rec["chrome_roundtrip"]
+              and rec["schema"]["match"]
+              and rec["schema"]["phases_in_vocab"]
+              and rec["sim"]["span_conservation"]
+              and ov["attribution"]["conserved"]
+              and ov["shed_groups"] > 0
+              and ov["attribution"]["phase_totals_s"].get(
+                  "recovery", 0.0) > 0.0)
+        print("trace smoke:", "PASS" if ok else "FAIL", flush=True)
+        raise SystemExit(0 if ok else 1)
     if ns.serving:
         rec = bench_serving()
         rows = []

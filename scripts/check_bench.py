@@ -126,6 +126,7 @@ def main(argv=None) -> int:
     base_flt = _section(args.baseline, "engine_faults")
     base_tp = _section(args.baseline, "engine_tp")
     base_srv = _section(args.baseline, "serving")
+    base_obs = _section(args.baseline, "observability")
     if args.fresh:
         fresh = _section(args.fresh, "engine")
         fresh_mig = _section(args.fresh, "engine_migration")
@@ -135,6 +136,7 @@ def main(argv=None) -> int:
         fresh_flt = _section(args.fresh, "engine_faults")
         fresh_tp = _section(args.fresh, "engine_tp")
         fresh_srv = _section(args.fresh, "serving")
+        fresh_obs = _section(args.fresh, "observability")
     else:
         # the benchmarks package lives at the repo root, one level up
         sys.path.insert(0, os.path.dirname(os.path.dirname(
@@ -145,6 +147,7 @@ def main(argv=None) -> int:
                                        bench_engine_topology,
                                        bench_engine_tp,
                                        bench_engine_tree,
+                                       bench_observability,
                                        bench_serving,
                                        bench_train_overlap)
         fresh = bench_engine_rollout()
@@ -155,6 +158,7 @@ def main(argv=None) -> int:
         fresh_flt = bench_engine_faults()
         fresh_tp = bench_engine_tp()
         fresh_srv = bench_serving()
+        fresh_obs = bench_observability()
 
     if fresh.get("workload") != base.get("workload"):
         print("[check_bench] FAIL workload mismatch: fresh "
@@ -190,6 +194,7 @@ def main(argv=None) -> int:
     checks += _fault_checks(fresh_flt, base_flt, args)
     checks += _tp_checks(fresh_tp, base_tp, args)
     checks += _serving_checks(fresh_srv, base_srv, args)
+    checks += _observability_checks(fresh_obs, base_obs, args)
     ok = True
     for name, passed, detail in checks:
         status = "ok  " if passed else "FAIL"
@@ -489,6 +494,68 @@ def _serving_checks(fresh: dict, base: dict, args) -> list:
          fresh["sim"].get("deterministic") is True,
          "sim repeat 2x run bit-identical: "
          f"{fresh['sim'].get('deterministic')}"),
+    ]
+
+
+def _observability_checks(fresh: dict, base: dict, args) -> list:
+    """Gates on the flight-recorder benchmark.
+
+    Tracing is pure observation: a traced run must be bit-identical to
+    an untraced one (tokens, engine steps, host syncs), and attaching
+    the tracer must not change the host-syncs-per-step ratio — every
+    hook records host-side metadata the rollout already holds.  The
+    trace itself is a pure function of (seed, config): two traced runs
+    serialize identically and the Chrome export round-trips losslessly.
+    Span conservation (phase spans tile each finished request's wall
+    interval exactly) is what makes tail attribution trustworthy, and
+    the seeded fault+overload run must actually produce a tail to
+    attribute: shed requests and a nonzero recovery phase.  Engine and
+    simulator tiers must emit the same event schema so one report tool
+    reads both."""
+    if fresh.get("workload") != base.get("workload"):
+        return [("obs_workload", False,
+                 f"fresh {fresh.get('workload')} vs baseline "
+                 f"{base.get('workload')} — numbers are not comparable")]
+    hs = fresh["host_syncs_per_step"]
+    ov = fresh["overload_faults"]
+    recovery_s = ov["attribution"]["phase_totals_s"].get("recovery", 0.0)
+    schema = fresh["schema"]
+    return [
+        ("obs_trace_off_bit_identical",
+         fresh.get("trace_off_bit_identical") is True,
+         "traced run == untraced run (tokens, steps, host syncs): "
+         f"{fresh.get('trace_off_bit_identical')}"),
+        ("obs_zero_extra_host_syncs",
+         hs["traced"] == hs["untraced"] and hs["traced"] <= 1.0 + 1e-9,
+         f"host syncs/step traced {hs['traced']} == untraced "
+         f"{hs['untraced']} <= 1"),
+        ("obs_span_conservation",
+         fresh.get("span_conservation") is True
+         and fresh.get("tick_tiling_exact") is True,
+         "phase spans tile wall intervals (seconds and ticks): "
+         f"{fresh.get('span_conservation')}, "
+         f"{fresh.get('tick_tiling_exact')}"),
+        ("obs_trace_deterministic",
+         fresh.get("trace_deterministic") is True
+         and fresh.get("chrome_roundtrip") is True,
+         "repeat run event-identical and Chrome JSON round-trips: "
+         f"{fresh.get('trace_deterministic')}, "
+         f"{fresh.get('chrome_roundtrip')}"),
+        ("obs_overload_attribution",
+         ov["attribution"]["conserved"] and ov["shed_groups"] > 0
+         and ov["instance_crashes"] > 0 and recovery_s > 0.0,
+         f"fault+overload run: shed {ov['shed_groups']} > 0, crashes "
+         f"{ov['instance_crashes']} > 0, recovery {recovery_s:.4f}s > 0, "
+         f"conserved {ov['attribution']['conserved']}"),
+        ("obs_schema_match",
+         schema["match"] is True and schema["phases_in_vocab"] is True,
+         "engine and sim emit the same event keys and in-vocab phases: "
+         f"match={schema['match']}, "
+         f"phases_in_vocab={schema['phases_in_vocab']}"),
+        ("obs_sim_span_conservation",
+         fresh["sim"]["span_conservation"] is True,
+         f"sim conservation over {fresh['sim']['requests']} requests: "
+         f"{fresh['sim']['span_conservation']}"),
     ]
 
 

@@ -108,6 +108,9 @@ class FaultInjector:
                     stacklevel=2)
         self._armed: List[_ArmedFetch] = []
         self.fired: List[FaultEvent] = []
+        # optional flight-recorder hook (repro.obs.Tracer) — set by
+        # run_stream; each armed event emits a fault_<kind> instant
+        self.tracer = None
 
     def reset(self) -> None:
         self._armed = []
@@ -121,6 +124,11 @@ class FaultInjector:
         out: List[FaultEvent] = []
         for ev in self._by_tick.get(tick, ()):  # schedule order is stable
             self.fired.append(ev)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    f"fault_{ev.kind}", "fault",
+                    ev.instance_id or "pool", tick=tick,
+                    lose_pool=ev.lose_pool, count=ev.count)
             if ev.kind in ("fetch_fail", "corrupt"):
                 self._armed.append(_ArmedFetch(ev.kind, ev.req_id, ev.count))
             else:

@@ -114,6 +114,9 @@ class GlobalKVPool:
         # at export time instead of at fetch time
         self.export_placed_remote = 0
         self.export_placed_remote_bytes = 0
+        # optional flight-recorder hook (repro.obs.Tracer) — set by
+        # run_stream; put/get/miss traffic emits instant events
+        self.tracer = None
 
     # -- per-node accounting ---------------------------------------------------
 
@@ -192,6 +195,10 @@ class GlobalKVPool:
         self.transfer_seconds += t
         self.bytes_moved += blob.nbytes
         self.bytes_put += blob.nbytes
+        if self.tracer is not None:
+            self.tracer.instant("pool_put", "pool", home,
+                                req=blob.req_id, nbytes=blob.nbytes,
+                                remote=home != node, seconds=t)
 
     def _evict(self, node: str) -> None:
         # one pass per tier over the recency order (oldest first): a
@@ -248,11 +255,18 @@ class GlobalKVPool:
         entry = self._entries.get(req_id)
         if entry is None:
             self.misses += 1
+            if self.tracer is not None:
+                self.tracer.instant("pool_miss", "pool", node, req=req_id)
             return None
         self.hits += 1
         cross = entry.home_node != node
-        self.transfer_seconds += self.costs.fetch_seconds(
-            entry.nbytes, entry.tier, cross)
+        fetch_s = self.costs.fetch_seconds(entry.nbytes, entry.tier, cross)
+        if self.tracer is not None:
+            self.tracer.instant("pool_get", "pool", node,
+                                req=req_id, nbytes=entry.nbytes,
+                                tier=entry.tier, cross=cross,
+                                seconds=fetch_s)
+        self.transfer_seconds += fetch_s
         self.bytes_moved += entry.nbytes
         self.bytes_fetched += entry.nbytes
         if cross:

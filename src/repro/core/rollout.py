@@ -46,63 +46,81 @@ from repro.engine.engine import (BlobCorruptionError, EngineSeq, Instance,
 from repro.engine.token_tree import TokenTree, build_token_tree
 
 
+def _stat(default, doc: str):
+    """A documented counter field.  Every ``RolloutStats`` field carries
+    a one-line ``doc`` in its metadata; the reflection test in
+    ``tests/test_obs.py`` pins that every field is documented AND still
+    read somewhere outside its definition (dead counters rot silently
+    otherwise — this is the audit, mechanized)."""
+    return field(default=default, metadata={"doc": doc})
+
+
 @dataclass
 class RolloutStats:
-    steps: int = 0
-    tokens: int = 0
-    drafted: int = 0
-    accepted: int = 0
-    chunks: int = 0
-    migrations: int = 0
-    pool_hits: int = 0
-    pool_misses: int = 0
-    # final chunks renewed in place (eviction-aware export: no release,
-    # no pool round-trip for a request about to finish)
-    inplace_renewals: int = 0
-    wall_seconds: float = 0.0
+    steps: int = _stat(0, "fused engine steps committed")
+    tokens: int = _stat(0, "tokens committed across all requests")
+    drafted: int = _stat(0, "CST draft tokens submitted to verify steps")
+    accepted: int = _stat(0, "draft tokens accepted by verification")
+    chunks: int = _stat(0, "request chunks completed (releases + renewals)")
+    migrations: int = _stat(0, "chunk re-admissions on a different instance")
+    pool_hits: int = _stat(0, "KV-pool fetches that found a blob")
+    pool_misses: int = _stat(0, "KV-pool fetches that re-prefilled instead")
+    inplace_renewals: int = _stat(
+        0, "final chunks renewed in place (no pool round-trip)")
+    wall_seconds: float = _stat(0.0, "host wall-clock of the whole run")
     # -- streaming / bounded-staleness accounting --------------------------
-    refreshes: int = 0           # in-flight weight refreshes survived
-    injected_groups: int = 0     # groups injected mid-stream
+    refreshes: int = _stat(0, "in-flight weight refreshes survived")
+    injected_groups: int = _stat(0, "groups injected mid-stream")
     # prefix revalidation (truncate-mode refresh): old-params tokens
-    # replayed as verify drafts under the new params, and how many were
-    # re-accepted.  Excluded from drafted/accepted — they would pollute
-    # the β acceptance profile MBA budgets are driven by.
-    reval_tokens: int = 0
-    reval_accepted: int = 0
-    # tail packing: engine steps whose batch mixed requests from more
-    # than one inject epoch, and the newer-epoch rows in those steps —
-    # rows of next-iteration work that rode inside what would have been
-    # the iteration barrier's tail bubble
-    overlap_steps: int = 0
-    reclaimed_rows: int = 0
+    # replayed as verify drafts under the new params.  Excluded from
+    # drafted/accepted — they would pollute the β acceptance profile
+    # MBA budgets are driven by.
+    reval_tokens: int = _stat(0, "old-params tokens replayed as drafts")
+    reval_accepted: int = _stat(0, "replayed tokens re-accepted in bulk")
+    overlap_steps: int = _stat(
+        0, "steps whose batch mixed inject epochs (tail packing)")
+    reclaimed_rows: int = _stat(
+        0, "newer-epoch rows run inside the would-be tail bubble")
     # -- fault tolerance ---------------------------------------------------
-    ticks: int = 0               # stream-loop ticks run (fault-schedule axis)
-    instance_crashes: int = 0
-    stuck_ticks: int = 0         # ticks a hung instance sat on live work
-    watchdog_escalations: int = 0
-    recovered_requests: int = 0
-    recovered_via_blob: int = 0      # resumed from the pooled chunk blob
-    recovered_via_replay: int = 0    # rewound + replayed as verify drafts
-    recovery_redecode_tokens: int = 0  # in-chunk tokens re-decoded (blob path)
-    recovery_replay_tokens: int = 0    # tokens replayed as verify drafts
-    faulted_remaining_tokens: int = 0  # victims' remaining budget at crash
-    fetch_failures: int = 0      # injected pool-fetch failures retried
-    fetch_degraded: int = 0      # fetches that gave up -> replay recovery
-    corrupt_blobs: int = 0       # checksum-rejected fetched blobs
-    fetch_backoff_seconds: float = 0.0  # modeled retry backoff
+    ticks: int = _stat(0, "stream-loop ticks run (fault-schedule axis)")
+    instance_crashes: int = _stat(0, "instances declared dead")
+    stuck_ticks: int = _stat(0, "ticks a hung instance sat on live work")
+    watchdog_escalations: int = _stat(0, "stuck instances escalated to crash")
+    recovered_requests: int = _stat(0, "live requests reconstructed")
+    recovered_via_blob: int = _stat(0, "resumed from the pooled chunk blob")
+    recovered_via_replay: int = _stat(0, "rewound + replayed as drafts")
+    recovery_redecode_tokens: int = _stat(
+        0, "in-chunk tokens re-decoded (blob path)")
+    recovery_replay_tokens: int = _stat(
+        0, "tokens replayed as verify drafts")
+    faulted_remaining_tokens: int = _stat(
+        0, "victims' remaining decode budget at crash")
+    fetch_failures: int = _stat(0, "injected pool-fetch failures retried")
+    fetch_degraded: int = _stat(0, "fetches that gave up -> replay recovery")
+    corrupt_blobs: int = _stat(0, "checksum-rejected fetched blobs")
+    fetch_backoff_seconds: float = _stat(0.0, "modeled retry backoff")
     # -- open-loop serving (run_stream(arrivals=...)) ----------------------
-    arrived_groups: int = 0      # groups the arrival feed released
-    shed_groups: int = 0         # groups the SLO admission refused
-    idle_ticks: int = 0          # ticks with nothing running, arrivals due
-    queue_depth_peak: int = 0    # max ready-buffer depth observed
+    idle_ticks: int = _stat(0, "ticks with nothing running, arrivals due")
     # largest modeled admission delay seen at an offer (0 when no SLO
     # offers happened) — benches calibrate slo_deadline_s from a
     # deadline-free run's value
-    offer_delay_max: float = 0.0
+    offer_delay_max: float = _stat(0.0, "max modeled admission delay offered")
 
     @property
     def mean_acceptance(self) -> float:
         return self.accepted / max(self.drafted, 1)
+
+    def snapshot(self) -> dict:
+        """The unified stats surface: every counter by its field name,
+        plus derived values.  Benches and gates consume this instead of
+        ad-hoc attribute reads, so the JSON key set is pinned to the
+        dataclass by construction."""
+        out = dataclasses.asdict(self)
+        out["mean_acceptance"] = self.mean_acceptance
+        return out
+
+    # alias: dict-shaped consumers (bench records) read as_dict()
+    as_dict = snapshot
 
 
 @dataclass
@@ -116,6 +134,17 @@ class RolloutResult:
     def responses(self) -> Dict[str, List[int]]:
         return {r.req_id: list(r.generated)
                 for g in self.groups for r in g.requests}
+
+    def snapshot(self) -> dict:
+        """One nested dict for every stats surface the rollout exposes:
+        ``rollout`` (RolloutStats), ``context`` (ContextManager),
+        ``pool`` (GlobalKVPool) and ``dgds`` (DraftServer)."""
+        return {
+            "rollout": self.stats.snapshot(),
+            "context": dict(self.ctx_stats),
+            "pool": dict(self.pool_stats),
+            "dgds": dict(self.dgds_stats),
+        }
 
 
 class SeerRollout:
@@ -146,6 +175,7 @@ class SeerRollout:
                  fetch_retries: int = 3,
                  fetch_backoff_s: float = 0.05,
                  tp: Optional[int] = None,
+                 tracer=None,
                  steps: Optional[StepFunctions] = None):
         self.cfg = cfg
         self.chunk_size = chunk_size
@@ -273,6 +303,15 @@ class SeerRollout:
         self._watchdog: Dict[str, int] = {}      # consecutive stuck ticks
         self._cur_tick = 0
         self._stream_drained = False
+        # -- observability ----------------------------------------------
+        # optional repro.obs.trace.Tracer: all hooks are host-side
+        # metadata recorded at tick boundaries — tracing adds ZERO
+        # device reads, and a traced run is bit-identical (tokens,
+        # steps, host syncs) to an untraced one.  Settable between
+        # runs, like ``faults``.
+        self.tracer = tracer
+        self._fwd = fwd              # modeled-clock source for the tracer
+        self._stream_rec = None      # live TimelineRecorder (in-stream)
 
     # -- scheduling glue ---------------------------------------------------------
 
@@ -352,6 +391,9 @@ class SeerRollout:
             r.t_first_scheduled = time.monotonic()
         chunk = sched.chunk_tokens(r)
         self._placements[r.req_id] = (inst, slot, seq, chunk)
+        if self._stream_rec is not None:
+            self._stream_rec.on_admit(r.req_id, instance_id,
+                                      self._cur_tick)
         rewound = self._pending_rewind.pop(r.req_id, None)
         if rewound:
             # truncate-mode refresh rewound this buffered request to its
@@ -418,6 +460,8 @@ class SeerRollout:
             self.pool.put(blob, node=inst.node)
         stats.chunks += 1
         r.chunks_run += 1
+        if export and self._stream_rec is not None:
+            self._stream_rec.on_release(r.req_id, self._cur_tick)
 
     def _begin_release(self, r: RolloutRequest, stats: RolloutStats
                        ) -> None:
@@ -431,6 +475,8 @@ class SeerRollout:
         inst.release_async(slot)
         stats.chunks += 1
         r.chunks_run += 1
+        if self._stream_rec is not None:
+            self._stream_rec.on_release(r.req_id, self._cur_tick)
 
     def _flush_releases(self, inst: Instance, sched: Scheduler) -> int:
         """Export the instance's draining slots (one batched gather),
@@ -553,6 +599,9 @@ class SeerRollout:
                 stats.recovery_redecode_tokens += \
                     max(0, gen_now - len(r.generated))
                 r.trim_version_runs(len(r.generated))
+                if self._stream_rec is not None:
+                    self._stream_rec.on_crash(r.req_id, self._cur_tick,
+                                              "blob")
             else:
                 stats.recovered_via_replay += 1
                 tail = list(seq.reval_queue) if pending_reval else []
@@ -567,6 +616,9 @@ class SeerRollout:
                 r.logprobs = []
                 r.last_token = r.prompt[-1]
                 r.next_pos = len(r.prompt) - 1
+                if self._stream_rec is not None:
+                    self._stream_rec.on_crash(r.req_id, self._cur_tick,
+                                              "replay")
             stats.recovered_requests += 1
             sched.requeue(r)
 
@@ -683,6 +735,15 @@ class SeerRollout:
         self._stream_sched.add_groups(list(groups))
         self._stream_stats.injected_groups += len(groups)
         self._injected_since_bubble = True
+        if self.tracer is not None:
+            self.tracer.instant("inject", "train", "trainer",
+                                tick=self._cur_tick,
+                                groups=len(groups), epoch=self._epoch)
+            if self._stream_rec is not None:
+                for g in groups:
+                    for r in g.requests:
+                        self._stream_rec.on_submit(
+                            r.req_id, g.group_id, self._cur_tick)
 
     def refresh_params(self, params, *, version: Optional[int] = None,
                        mode: str = "keep") -> None:
@@ -758,6 +819,14 @@ class SeerRollout:
         self.reset_acceptance_profile()
         if self._stream_stats is not None:
             self._stream_stats.refreshes += 1
+        if self.tracer is not None:
+            self.tracer.instant("refresh_params", "train", "trainer",
+                                tick=self._cur_tick,
+                                version=self.param_version, mode=mode)
+            if self._stream_rec is not None:
+                self._stream_rec.on_refresh(
+                    [rid for rid, r in self._reqs.items()
+                     if not r.finished], self._cur_tick)
 
     def _revalidate_slot(self, inst: Instance, slot: int,
                          mode: str) -> None:
@@ -865,6 +934,28 @@ class SeerRollout:
         for r in self._reqs.values():
             r.t_submitted = t0
 
+        # observability: propagate the tracer (or clear a previous
+        # run's) through every collaborator and open the per-request
+        # timeline recorder.  All hooks downstream are guarded on the
+        # attribute being non-None, so the untraced path is untouched.
+        tr = self.tracer
+        for inst in self.instances:
+            inst.tracer = tr
+        self.pool.tracer = tr
+        sched.tracer = tr
+        if self.faults is not None:
+            self.faults.tracer = tr
+        if arrivals is not None:
+            arrivals.tracer = tr
+        rec = None
+        if tr is not None:
+            from repro.obs.timeline import TimelineRecorder
+            rec = TimelineRecorder(tr)
+            for g in groups:
+                for r in g.requests:
+                    rec.on_submit(r.req_id, g.group_id, 0)
+        self._stream_rec = rec
+
         try:
             yield from self._stream_loop(sched, stats, all_groups,
                                          yielded, t0, progress_every,
@@ -873,19 +964,26 @@ class SeerRollout:
             self._stream_sched = None
             self._stream_stats = None
             self._stream_groups = None
+            self._stream_rec = None
 
     def _stream_loop(self, sched: Scheduler, stats: RolloutStats,
                      all_groups: Dict[str, Group], yielded: set,
                      t0: float, progress_every: int, feed=None):
+        tr = self.tracer
+        rec = self._stream_rec
         while not sched.all_finished or \
                 (feed is not None and not feed.exhausted()):
             # 0) tick boundary: apply this tick's scheduled faults.  No
             # ticket is in flight, so a crash here is indistinguishable
             # from one at a yield point — the deterministic injection
-            # point that makes fault schedules replayable.
+            # point that makes fault schedules replayable.  Trace
+            # recording shares exactly this contract: every event below
+            # is host-side metadata stamped between tickets.
             tick = stats.ticks
             stats.ticks += 1
             self._cur_tick = tick
+            if tr is not None:
+                tr.begin_tick(tick)
             if feed is not None:
                 # 0b) open-loop arrivals: released groups enter through
                 # the scheduler's SLO admission at the tick boundary —
@@ -896,21 +994,23 @@ class SeerRollout:
                 # packing, so overlap accounting is untouched.
                 now = time.monotonic()
                 for arr, g in feed.poll(tick):
-                    stats.arrived_groups += 1
                     if sched.offer_group(g, self._views()):
                         all_groups[g.group_id] = g
                         for r in g.requests:
                             r.t_submitted = now
                             self._reqs[r.req_id] = r
                             self._req_epoch[r.req_id] = self._epoch
+                            if rec is not None:
+                                rec.on_submit(r.req_id, g.group_id,
+                                              tick, tenant=arr.tenant)
                         feed.note_admitted(arr, g, tick)
                     else:
-                        stats.shed_groups += 1
+                        if rec is not None:
+                            for r in g.requests:
+                                rec.on_shed(r.req_id, g.group_id, tick,
+                                            tenant=arr.tenant)
                         feed.note_shed(arr, g, tick)
-                depth = sched.ready_count()
-                stats.queue_depth_peak = max(stats.queue_depth_peak,
-                                             depth)
-                feed.note_tick(tick, depth)
+                feed.note_tick(tick, sched.ready_count())
             if self.faults is not None:
                 for ev in self.faults.begin_tick(tick):
                     if ev.kind == "crash":
@@ -932,6 +1032,7 @@ class SeerRollout:
             any_active = False
             any_blocked = False
             tickets = []
+            tick_dt = 0.0     # modeled seconds this tick covers
             for inst in self.instances:
                 if not inst.alive:
                     continue
@@ -953,17 +1054,40 @@ class SeerRollout:
                         if self.watchdog_ticks \
                                 and wd >= self.watchdog_ticks:
                             stats.watchdog_escalations += 1
+                            if tr is not None:
+                                tr.instant("watchdog_escalation",
+                                           "fault", inst.instance_id,
+                                           stuck_ticks=wd)
                             self._crash_instance(inst, sched, stats)
                     continue
                 self._watchdog.pop(inst.instance_id, None)
-                ticket, drafts = None, {}
+                ticket, drafts, cost_in = None, {}, None
                 if inst.active_slots() or inst.pending_takeovers():
                     drafts = self._collect_drafts(inst)
+                    if tr is not None:
+                        # modeled-clock inputs, captured BEFORE dispatch
+                        # consumes the prefill queues (host-side reads
+                        # only — the tracer never touches the device)
+                        dec = inst.decode_slots()
+                        cost_in = (
+                            len(dec),
+                            sum(min(inst.slots[i].next_pos,
+                                    inst.cache_len) for i in dec),
+                            max((len(drafts.get(i, [])) for i in dec),
+                                default=0),
+                            sum(min(len(inst.slots[i].prefill_queue),
+                                    inst.prefill_chunk)
+                                for i in inst.prefilling_slots()))
                     ticket = inst.dispatch_step(drafts)
                 if ticket is None:
                     continue
                 any_active = True
                 tickets.append((inst, drafts, ticket))
+                if tr is not None and cost_in is not None:
+                    n_dec, ctx_sum, gamma, pf_tokens = cost_in
+                    mean_ctx = ctx_sum / max(n_dec, 1)
+                    tick_dt = max(tick_dt, self._fwd.mixed_step_time(
+                        max(n_dec, 1), 1 + gamma, pf_tokens, mean_ctx))
                 if self._epoch:
                     # tail-packing currency: a step whose batch mixes
                     # inject epochs is running next-iteration rows in
@@ -1082,6 +1206,8 @@ class SeerRollout:
                         self.pool.drop(r.req_id)
                         r.finish(time.monotonic())
                         sched.on_finished(r)
+                        if rec is not None:
+                            rec.on_finish(r.req_id, tick)
                         if feed is not None:
                             feed.note_request_finished(
                                 r.req_id, r.group_id, tick,
@@ -1105,6 +1231,8 @@ class SeerRollout:
                             stats.chunks += 1
                             stats.inplace_renewals += 1
                             r.chunks_run += 1
+                            if rec is not None:
+                                rec.on_renew(r.req_id, tick)
                         elif inst.migration_mode == "batched":
                             self._begin_release(r, stats)
                         else:
@@ -1152,8 +1280,30 @@ class SeerRollout:
                       f"{len(self._reqs)} tokens={stats.tokens} "
                       f"acc={stats.mean_acceptance:.2f}")
 
+            # end of tick: classify every open request into exactly one
+            # phase (span conservation holds by construction — one
+            # segment per live request per tick) and advance the
+            # modeled clock by the tick's widest dispatched step (an
+            # idle tick costs one nominal decode step).
+            if tr is not None:
+                if rec is not None:
+                    placed = {}
+                    for rid, (inst, slot, _seq, _c) in \
+                            self._placements.items():
+                        if self._is_stuck(inst):
+                            placed[rid] = "stuck"
+                        elif slot in inst.decode_slots():
+                            placed[rid] = "decode"
+                        else:
+                            placed[rid] = "prefill"
+                    rec.end_tick(tick, placed)
+                tr.advance_tick(tick_dt if tick_dt > 0.0
+                                else self._fwd.step_time(1, 1, 0.0))
+
         stats.wall_seconds = time.monotonic() - t0
         stats.offer_delay_max = max(sched.offer_delays, default=0.0)
+        if rec is not None:
+            rec.finalize()
         result = RolloutResult(
             groups=list(all_groups.values()), stats=stats,
             ctx_stats=self.ctx.stats(), pool_stats=self.pool.stats(),

@@ -87,6 +87,9 @@ class Scheduler:
         # the decision is a pure function of scheduler state, so a
         # seeded arrival trace sheds identically on every run.
         self.slo_deadline_s = slo_deadline_s
+        # optional flight-recorder hook (repro.obs.Tracer) — set by
+        # run_stream; offer/select decisions emit instant events
+        self.tracer = None
         self.shed_groups = 0
         self.shed_requests = 0
         # modeled delay of every offer_group decision, in offer order
@@ -296,6 +299,9 @@ class Scheduler:
                 key = (0, effective_free, -cost)
             if best_key is None or key > best_key:
                 best, best_key = iv.instance_id, key
+        if best is not None and self.tracer is not None:
+            self.tracer.instant("select", "scheduler", "scheduler",
+                                req=r.req_id, instance=best)
         return best
 
     def predict_resume_node(self, instances: Sequence[InstanceView],
@@ -419,7 +425,15 @@ class Scheduler:
                     and delay > self.slo_deadline_s:
                 self.shed_groups += 1
                 self.shed_requests += len(g.requests)
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "offer", "scheduler", "scheduler",
+                        group=g.group_id, delay_s=delay, admitted=False)
                 return False
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "offer", "scheduler", "scheduler",
+                    group=g.group_id, delay_s=delay, admitted=True)
         self.add_groups([g])
         return True
 

@@ -351,10 +351,17 @@ class SimResult:
 
 class ClusterSimulator:
     def __init__(self, cfg: ModelConfig, spec: WorkloadSpec,
-                 sim: SimConfig):
+                 sim: SimConfig, *, tracer=None):
         self.cfg = cfg
         self.spec = spec
         self.sim = sim
+        # optional flight recorder (repro.obs.Tracer): the sim emits the
+        # SAME event schema as the engine tier — request phase spans
+        # drawn from repro.obs.timeline.PHASES with explicit modeled
+        # timestamps ("tick" is the event-heap pop ordinal)
+        self.tracer = tracer
+        self._tl = None
+        self._tl_tick = 0
         self.fwd = ForwardCostModel(cfg, sim.hw,
                                     chips=sim.chips_per_instance,
                                     tp=sim.tp)
@@ -587,6 +594,26 @@ class ClusterSimulator:
                                           if sim.arrival else None))
         self._assign_static(groups, instances, true_len)
 
+        # -- flight recorder ------------------------------------------------
+        # Same event schema as the engine tier, explicit modeled
+        # timestamps.  Per request ONE phase span is open at any time
+        # (start time/tick + its phase in "pending"); every lifecycle
+        # transition closes it at `now` and opens the next, so a
+        # finished request's spans tile [submit, completion) exactly —
+        # the engine TimelineRecorder's conservation invariant.
+        tr = self.tracer
+        self._tl = None if tr is None else {
+            "last": {}, "tick": {}, "pending": {}, "tenant": {}}
+        self._tl_tick = 0
+        if tr is not None:
+            sched.tracer = tr
+            if arrival_q is None:
+                # closed loop: every request is buffered at t=0
+                for r in all_reqs:
+                    self._tl["last"][r.req_id] = 0.0
+                    self._tl["tick"][r.req_id] = 0
+                    self._tl["pending"][r.req_id] = "queue"
+
         group_refs: Dict[str, int] = {}     # completed requests per group
         self._seg_stats = {"steps": 0.0, "drafted": 0.0, "accepted": 0.0,
                            "mig_time": 0.0, "mig_bytes": 0.0,
@@ -645,6 +672,7 @@ class ClusterSimulator:
             if finished >= n_target:
                 break
             now, _, k = heapq.heappop(heap)
+            self._tl_tick += 1
             if k < 0:
                 # arrival-release event: offer every releasable group
                 # through the SLO admission, wake parked instances if
@@ -670,12 +698,23 @@ class ClusterSimulator:
                         tenant_of[g.group_id] = arr.tenant
                         for r in g.requests:
                             t_admit[r.req_id] = now
+                            if self._tl is not None:
+                                self._tl["last"][r.req_id] = now
+                                self._tl["tick"][r.req_id] = self._tl_tick
+                                self._tl["pending"][r.req_id] = "queue"
+                                self._tl["tenant"][r.req_id] = arr.tenant
                         admitted_reqs += len(g.requests)
                         woke = True
                     else:
                         srv_shed += 1
                         pt["shed"] += 1
                         shed_idx.append(arr.index)
+                        if tr is not None:
+                            for r in g.requests:
+                                tr.instant(
+                                    "shed", "request", r.req_id,
+                                    tick=self._tl_tick, t=now,
+                                    group=g.group_id, tenant=arr.tenant)
                 depth = sched.ready_count()
                 qd_peak = max(qd_peak, depth)
                 qd_sum += depth
@@ -718,6 +757,14 @@ class ClusterSimulator:
                         # the re-admission re-fetches the boundary blob
                         inst.mig_blobs += 1
                         inst.mig_bytes += s.ctx * self.kv_bytes_per_token
+                    if self._tl is not None:
+                        # the burned segment (and the wait until the
+                        # re-admission) is time lost to the fault
+                        self._tl_close(s.req, now, "recovery",
+                                       phase="recovery")
+                        tr.instant("recovery", "request", rid,
+                                   tick=self._tl_tick, t=now,
+                                   kind="blob")
                 n_tok = 0
             if n_tok:
                 inst.busy_time += dur
@@ -729,6 +776,11 @@ class ClusterSimulator:
                     s.ctx += take
                     s.chunk_left -= take
                     inst.tokens_out += take
+                    if self._tl is not None:
+                        # segment end: close the open span (its phase is
+                        # "prefill" for a fresh admission's first
+                        # segment, "decode" after) and keep decoding
+                        self._tl_close(s.req, now, "decode")
                     if s.total_left <= 0:
                         del inst.running[rid]
                         s.req.finish(now)
@@ -738,6 +790,11 @@ class ClusterSimulator:
                         group_refs[s.req.group_id] = \
                             group_refs.get(s.req.group_id, 0) + 1
                         finished += 1
+                        if self._tl is not None:
+                            self._tl["last"].pop(rid, None)
+                            tr.instant("finish", "request", rid,
+                                       tick=self._tl_tick, t=now,
+                                       group=s.req.group_id)
                     elif s.chunk_left <= 0:
                         if sim.final_chunk_inplace and \
                                 sim.mode == "divided" and \
@@ -759,6 +816,10 @@ class ClusterSimulator:
                             inst.mig_blobs += 1
                             inst.mig_bytes += s.ctx * \
                                 self.kv_bytes_per_token
+                        if self._tl is not None:
+                            # off-slot until re-admission: export +
+                            # pool residence + fetch = migrate window
+                            self._tl["pending"][rid] = "migrate"
                 # KV-pressure preemption (non-divided modes only)
                 if sim.mode in ("group", "request", "streamrl", "partial") \
                         and inst.kv_free() < len(inst.running):
@@ -843,7 +904,6 @@ class ClusterSimulator:
                 "migration_cross_bytes":
                     self._seg_stats["mig_cross_bytes"],
                 "migration_batches": self._seg_stats["mig_batches"],
-                "busy_frac": busy / max(t_end * len(instances), 1e-9),
                 "barrier_stall_seconds": barrier_stall,
                 "barrier_stall_reclaimed": reclaimed,
                 "effective_time": effective_time,
@@ -1010,6 +1070,26 @@ class ClusterSimulator:
                 self._admit(inst, r, sched, true_len, now, local=True)
         return migrations
 
+    def _tl_close(self, r: RolloutRequest, t1: float, next_phase: str,
+                  phase: Optional[str] = None) -> None:
+        """Close ``r``'s open phase span at ``t1`` (emitting it when it
+        has nonzero width) and open the next one.  ``phase`` overrides
+        the recorded pending phase (fault attribution)."""
+        tl = self._tl
+        rid = r.req_id
+        t0 = tl["last"].get(rid)
+        if t0 is None:
+            return
+        ph = phase if phase is not None else tl["pending"].get(rid, "queue")
+        if t1 > t0:
+            self.tracer.span(
+                ph, "request", rid, tl["tick"][rid], self._tl_tick,
+                t0=t0, t1=t1, tenant=tl["tenant"].get(rid, "-"),
+                group=r.group_id)
+        tl["last"][rid] = t1
+        tl["tick"][rid] = self._tl_tick
+        tl["pending"][rid] = next_phase
+
     def _admit(self, inst: SimInstance, r: RolloutRequest,
                sched: Scheduler, true_len: Dict[str, int], now: float,
                local: bool = False) -> int:
@@ -1040,6 +1120,15 @@ class ClusterSimulator:
                 inst.prefill_backlog_ctxsum += L * (L / 2.0)
             else:
                 inst.overhead += self.fwd.prefill_time(len(r.prompt))
+        if self._tl is not None:
+            # queue/migrate/recovery wait ends here; the slot residence
+            # opens as "prefill" for a fresh prompt (the backlog is
+            # consumed inside its first segment), "decode" on a resume
+            self._tl_close(r, now,
+                           "prefill" if r.gen_len == 0 else "decode")
+            self.tracer.instant("admit", "request", r.req_id,
+                                tick=self._tl_tick, t=now,
+                                instance=inst.iid)
         if r.t_first_scheduled is None:
             r.t_first_scheduled = now
         r.state = ReqState.RUNNING

@@ -403,6 +403,9 @@ class ArrivalFeed:
         self._depth_sum = 0
         self._depth_samples = 0
         self.last_tick = 0
+        # optional flight-recorder hook (repro.obs.Tracer) — set by
+        # run_stream; admit/shed outcomes emit per-tenant instants
+        self.tracer = None
 
     # -- trace -> groups ---------------------------------------------------
 
@@ -443,12 +446,20 @@ class ArrivalFeed:
         self._tenant_of[g.group_id] = arr.tenant
         for r in g.requests:
             self._admit_tick[r.req_id] = tick
+        if self.tracer is not None:
+            self.tracer.instant("arrival_admit", "feed", arr.tenant,
+                                tick=tick, group=g.group_id,
+                                index=arr.index)
 
     def note_shed(self, arr: Arrival, g: Group, tick: int) -> None:
         pt = self._per_tenant[arr.tenant]
         pt["arrived"] += 1
         pt["shed"] += 1
         self.shed.append(arr.index)
+        if self.tracer is not None:
+            self.tracer.instant("arrival_shed", "feed", arr.tenant,
+                                tick=tick, group=g.group_id,
+                                index=arr.index)
 
     def note_request_finished(self, req_id: str, group_id: str,
                               tick: int, tokens: int) -> None:

@@ -807,6 +807,10 @@ class Instance:
         # cross-node fetches the inter-node fabric hop, and the
         # scheduler ranks placements by that cost
         self.node = node
+        # optional flight-recorder hook (repro.obs.Tracer); hooks only
+        # record host-side metadata already in hand — never a device
+        # read — so the 1-host-sync-per-step contract is untouched
+        self.tracer = None
         if admit_into_draining is None:
             admit_into_draining = (migration_mode == "batched"
                                    and prefill_mode == "batched")
@@ -1490,6 +1494,11 @@ class Instance:
         plan = self._prefill_plan()
         if not decode and not plan:
             return None
+        if self.tracer is not None:
+            self.tracer.instant(
+                "step_dispatch", "instance", self.instance_id,
+                decode_rows=len(decode), prefill_rows=len(plan),
+                prefill_tokens=sum(plan.values()))
         if self.spec_mode == "tree":
             return self._dispatch_tree(decode, plan, drafts)
         gamma = max((len(drafts.get(i, [])) for i in decode), default=0)
@@ -1760,6 +1769,12 @@ class Instance:
         sampled, lps, n_acc = jax.device_get(
             (ticket.sampled, ticket.lps, ticket.n_acc))
         self.steps.host_syncs += 1
+        if self.tracer is not None:
+            # stamped right after the step's one explicit device_get —
+            # the tracer itself reads only the already-fetched host ints
+            self.tracer.instant(
+                "step_commit", "instance", self.instance_id,
+                rows=len(ticket.sample_slots))
         out = {}
         for i in ticket.sample_slots:
             seq = self.slots[i]

@@ -68,6 +68,11 @@ class RLConfig:
     # crash after that many unproductive ticks.
     fault_injector: Optional[object] = None
     watchdog_ticks: int = 3
+    # optional repro.obs.Tracer: threaded into the rollout stream, with
+    # the trainer stamping train/refresh instants on the "trainer" track
+    # at the rollout's current tick (host metadata only — no device
+    # reads, so the 1-host-sync-per-step contract holds traced)
+    tracer: Optional[object] = None
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     log: Callable[[str], None] = print
@@ -159,7 +164,8 @@ class RLTrainer:
             chunk_size=rl.chunk_size, policy=rl.policy,
             spec_decode=rl.spec_decode, base_seed=rl.seed,
             fault_injector=rl.fault_injector,
-            watchdog_ticks=rl.watchdog_ticks)
+            watchdog_ticks=rl.watchdog_ticks,
+            tracer=rl.tracer)
         self.updater = WeightUpdater(self.rollout.instances)
         self.rewards = RewardWorker(task)
         self.history: List[IterStats] = []
@@ -334,6 +340,12 @@ class RLTrainer:
                 mean_acceptance=acc,
                 metrics={k: float(v) for k, v in metrics.items()})
             self.history.append(st)
+            if rl.tracer is not None:
+                rl.tracer.instant(
+                    "train_iteration", "train", "trainer",
+                    tick=self.rollout._cur_tick, iteration=j,
+                    live=live, version=self.updater.version,
+                    tokens=st.tokens)
             rl.log(f"[iter {j:3d}] reward={mean_r:.3f} "
                    f"loss={float(loss):+.4f} rollout={t_roll:.1f}s "
                    f"train={t_train:.1f}s acc={acc:.2f}"
